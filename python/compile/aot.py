@@ -1,0 +1,118 @@
+"""AOT compile path: lower the FACTS steps to HLO text artifacts.
+
+Emits one ``artifacts/<name>.hlo.txt`` per (step, size) variant plus an
+``artifacts/manifest.json`` describing input/output shapes, which the Rust
+runtime (``rust/src/runtime``) reads to bind PJRT executables.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True`` so the Rust side unwraps a
+single tuple. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Size variants exercised by the Rust side. "small" gates tests and the
+# quickstart; "default" is the Experiment-4 workload; "large" stresses the
+# projection ensemble (N = B * M = 1024 members).
+SIZES = {
+    "small": dict(B=4, T=32, M=8, Y=32),
+    "default": dict(B=16, T=128, M=16, Y=96),
+    "large": dict(B=16, T=128, M=64, Y=96),
+}
+Q = len(M.QUANTILES)
+
+
+def variants():
+    """Yield (name, fn, [input specs], [output names])."""
+    for size, d in SIZES.items():
+        B, T, Mm, Y = d["B"], d["T"], d["M"], d["Y"]
+        yield (f"preprocess_{size}",
+               M.facts_preprocess,
+               [spec(B, T), spec(B, T)],
+               ["X4", "X2", "y", "tref"])
+        for K in (2, 4):
+            yield (f"fit_k{K}_{size}",
+                   M.facts_fit,
+                   [spec(B, T, K), spec(B, T)],
+                   ["theta", "sigma2", "A"])
+        yield (f"project_se_{size}",
+               M.facts_project_se,
+               [spec(B, 2), spec(B), spec(B, 2, 2), spec(B, Mm, 2), spec(Y)],
+               ["quants", "mean"])
+        yield (f"project_poly_{size}",
+               M.facts_project_poly,
+               [spec(B, 4), spec(B), spec(B, 4, 4), spec(B, Mm, 4), spec(Y, 4)],
+               ["quants", "mean"])
+        yield (f"postprocess_{size}",
+               M.facts_postprocess,
+               [spec(2, Q, Y), spec(2)],
+               ["combined", "envelope", "total_rise"])
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", default=None, help="substring filter on names")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text-v1", "quantiles": list(M.QUANTILES),
+                "artifacts": []}
+    for name, fn, in_specs, out_names in variants():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        outs = jax.tree_util.tree_leaves(outs)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [{"name": f"in{i}", "shape": list(s.shape),
+                        "dtype": "f32"} for i, s in enumerate(in_specs)],
+            "outputs": [{"name": n, "shape": list(o.shape), "dtype": "f32"}
+                        for n, o in zip(out_names, outs)],
+        })
+        print(f"wrote {fname}: {len(text)} chars, "
+              f"{len(in_specs)} in / {len(outs)} out")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracles for the FACTS compute kernels.
+
+These are the correctness ground truth for the Pallas kernels in
+``sealevel.py``. They are deliberately written in the most obvious
+vectorized-jnp style (no tiling, no pallas) so that any divergence in the
+kernels is attributable to the kernel implementation, not the oracle.
+
+The science model is a semi-empirical sea-level response model
+(Rahmstorf-type):
+
+    dS/dt = a * (T(t) - T0)
+
+fit against a historical (temperature, sea-level-rate) record via ridge
+least squares, and projected forward by Monte-Carlo sampling of the fitted
+parameters over future temperature scenarios. This is the mathematical core
+of the FACTS modules the paper runs in Experiment 4 (pre-processing,
+fitting, projecting, post-processing).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(X: jnp.ndarray, y: jnp.ndarray):
+    """Batched Gram matrices and moment vectors.
+
+    Args:
+      X: (B, T, K) batch of design matrices.
+      y: (B, T) batch of targets.
+
+    Returns:
+      G: (B, K, K) with G[b] = X[b]^T X[b]
+      m: (B, K)    with m[b] = X[b]^T y[b]
+    """
+    G = jnp.einsum("btk,btl->bkl", X, X)
+    m = jnp.einsum("btk,bt->bk", X, y)
+    return G, m
+
+
+def cholesky_solve_small_ref(G: jnp.ndarray, m: jnp.ndarray, lam: float):
+    """Solve (G + lam*I) theta = m for small K via explicit Cholesky.
+
+    Unrolled over K at trace time: only matmul/elementwise/sqrt ops, so the
+    lowered HLO contains no LAPACK custom-calls (the rust CPU PJRT client
+    cannot resolve those).
+
+    Args:
+      G: (B, K, K) SPD matrices.
+      m: (B, K).
+      lam: ridge regularizer.
+
+    Returns:
+      theta: (B, K)
+    """
+    B, K, _ = G.shape
+    A = G + lam * jnp.eye(K, dtype=G.dtype)[None, :, :]
+    # Cholesky: A = L L^T, unrolled at trace time.
+    L = [[None] * K for _ in range(K)]
+    for i in range(K):
+        for j in range(i + 1):
+            s = A[:, i, j]
+            for p in range(j):
+                s = s - L[i][p] * L[j][p]
+            if i == j:
+                L[i][j] = jnp.sqrt(jnp.maximum(s, 1e-30))
+            else:
+                L[i][j] = s / L[j][j]
+    # Forward substitution: L z = m
+    z = [None] * K
+    for i in range(K):
+        s = m[:, i]
+        for p in range(i):
+            s = s - L[i][p] * z[p]
+        z[i] = s / L[i][i]
+    # Back substitution: L^T theta = z
+    th = [None] * K
+    for i in reversed(range(K)):
+        s = z[i]
+        for p in range(i + 1, K):
+            s = s - L[p][i] * th[p]
+        th[i] = s / L[i][i]
+    return jnp.stack(th, axis=1)
+
+
+def project_ref(a: jnp.ndarray, T0: jnp.ndarray, temps: jnp.ndarray, dt: float):
+    """Ensemble sea-level projection.
+
+    S[n, y] = a[n] * sum_{t <= y} (temps[t] - T0[n]) * dt
+
+    Args:
+      a:     (N,) ensemble of sensitivity parameters (mm / yr / K).
+      T0:    (N,) ensemble of equilibrium temperatures (K anomaly).
+      temps: (Y,) future temperature scenario (K anomaly per year).
+      dt:    timestep in years.
+
+    Returns:
+      S: (N, Y) sea-level anomaly trajectories (mm).
+    """
+    drive = temps[None, :] - T0[:, None]          # (N, Y)
+    return a[:, None] * jnp.cumsum(drive, axis=1) * dt
+
+
+def quantiles_ref(S: jnp.ndarray, qs: jnp.ndarray):
+    """Per-year ensemble quantiles. S: (N, Y), qs: (Q,) -> (Q, Y)."""
+    return jnp.quantile(S, qs, axis=0)
+
+
+def standardize_ref(x: jnp.ndarray):
+    """Column standardization used by the pre-processing step.
+
+    x: (T, K) -> (x - mean) / std, plus the (mean, std) used.
+    """
+    mu = jnp.mean(x, axis=0)
+    sd = jnp.std(x, axis=0)
+    sd = jnp.where(sd < 1e-12, 1.0, sd)
+    return (x - mu) / sd, mu, sd
+
+
+def project_poly_ref(Theta: jnp.ndarray, Phi: jnp.ndarray, dt: float):
+    """Polynomial-emulator projection oracle.
+
+    S[n, y] = dt * sum_{t <= y} Theta[n] . Phi[t]
+
+    Theta: (N, K), Phi: (Y, K) -> (N, Y).
+    """
+    rate = Theta @ Phi.T                          # (N, Y)
+    return jnp.cumsum(rate, axis=1) * dt

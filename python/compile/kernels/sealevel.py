@@ -1,0 +1,253 @@
+"""L1 Pallas kernels for the FACTS sea-level compute.
+
+Two kernels cover the hot path of the FACTS workflow steps brokered by
+Hydra in Experiment 4:
+
+* ``batched_gram``    -- fitting: per-batch Gram matrices G = X^T X and
+                         moments m = X^T y (MXU-shaped batched matmul).
+* ``ensemble_project``-- projecting: Monte-Carlo ensemble integration of
+                         dS/dt = a (T - T0) (VPU-shaped rowwise scan).
+
+TPU design notes (see DESIGN.md `Hardware-Adaptation`):
+
+* The paper's platforms are CPU clouds, so there is no CUDA kernel to port;
+  we instead map the science hot-spot onto TPU idioms. ``batched_gram``
+  blocks over the batch dimension and keeps each (T, K) design-matrix tile
+  resident in VMEM, contracting over T on the MXU. ``ensemble_project``
+  blocks over ensemble members -- rows map onto VPU lanes -- and carries the
+  year-prefix sum inside the block (Y fits VMEM comfortably for centennial
+  projections).
+* Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+  execute Mosaic custom-calls, so interpret mode is the correctness path and
+  real-TPU performance is *estimated* from the BlockSpec footprint (see
+  ``gram_vmem_bytes`` / ``project_vmem_bytes`` and EXPERIMENTS.md `Perf`).
+
+Correctness oracle: ``ref.py`` (pure jnp), compared by
+``python/tests/test_kernels.py`` under hypothesis shape sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Block-size heuristics
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def gram_block_b(B: int, T: int, K: int) -> int:
+    """Pick the batch block for ``batched_gram``.
+
+    Keep the VMEM working set (X block + outputs) under ~4 MiB so two
+    grid steps can double-buffer within a 16 MiB VMEM budget.
+    """
+    budget = 4 * 1024 * 1024
+    per_b = 4 * (T * K + K * K + K + T)  # f32 bytes per batch member
+    bb = max(1, budget // max(per_b, 1))
+    return int(min(bb, B))
+
+
+def project_block_n(N: int, Y: int) -> int:
+    """Pick the ensemble block for ``ensemble_project`` (~4 MiB budget)."""
+    budget = 4 * 1024 * 1024
+    per_n = 4 * (2 * Y + 2)  # drive + out rows + a + T0, f32
+    bn = max(1, budget // max(per_n, 1))
+    # Lane-align the block: VPU rows come in multiples of 8.
+    bn = max(8, (bn // 8) * 8)
+    return int(min(bn, _round_up(N, 8)))
+
+
+def gram_vmem_bytes(BB: int, T: int, K: int) -> int:
+    """Estimated VMEM footprint of one ``batched_gram`` grid step (bytes)."""
+    return 4 * BB * (T * K + T + K * K + K)
+
+
+def project_vmem_bytes(BN: int, Y: int) -> int:
+    """Estimated VMEM footprint of one ``ensemble_project`` grid step."""
+    return 4 * (BN * Y * 2 + 2 * BN + Y)
+
+
+def gram_mxu_flops(B: int, T: int, K: int) -> int:
+    """MAC count of the Gram contraction (for the `Perf` roofline estimate)."""
+    return B * (T * K * K + T * K)
+
+
+# ---------------------------------------------------------------------------
+# batched_gram
+# ---------------------------------------------------------------------------
+
+def _gram_kernel(x_ref, y_ref, g_ref, m_ref):
+    """One grid step: Gram + moments for a (BB, T, K) block of fits.
+
+    The contraction over T is a batched matmul -> MXU. Accumulate in f32
+    regardless of input dtype (bf16 inputs still get f32 accumulation, the
+    MXU-native mode).
+    """
+    x = x_ref[...].astype(jnp.float32)   # (BB, T, K)
+    y = y_ref[...].astype(jnp.float32)   # (BB, T)
+    # G[b] = X[b]^T X[b] : contract over T (dim 1) batched over dim 0.
+    g_ref[...] = jax.lax.dot_general(
+        x, x, dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    # m[b] = X[b]^T y[b]
+    m_ref[...] = jax.lax.dot_general(
+        x, y, dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def batched_gram(X: jnp.ndarray, y: jnp.ndarray, *, block_b: int | None = None):
+    """Batched Gram matrices via Pallas.
+
+    Args:
+      X: (B, T, K) design matrices.
+      y: (B, T) targets.
+      block_b: optional batch block override (default: heuristic).
+
+    Returns:
+      (G, m): (B, K, K), (B, K) float32.
+    """
+    B, T, K = X.shape
+    bb = block_b or gram_block_b(B, T, K)
+    Bp = _round_up(B, bb)
+    if Bp != B:
+        X = jnp.pad(X, ((0, Bp - B), (0, 0), (0, 0)))
+        y = jnp.pad(y, ((0, Bp - B), (0, 0)))
+    grid = (Bp // bb,)
+    G, m = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, T, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, T), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, K, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, K), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, K, K), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, K), jnp.float32),
+        ],
+        interpret=True,
+    )(X, y)
+    return G[:B], m[:B]
+
+
+# ---------------------------------------------------------------------------
+# ensemble_project
+# ---------------------------------------------------------------------------
+
+def _project_kernel(a_ref, t0_ref, temps_ref, o_ref, *, dt: float):
+    """One grid step: (BN, Y) trajectories for a block of ensemble members.
+
+    cumsum(T[t] - T0) decomposes as cumsum(T)[t] - (t+1) * T0; we keep the
+    direct form -- the (BN, Y) drive block lives in VMEM and the prefix sum
+    runs along the minor (lane) axis.
+    """
+    a = a_ref[...].astype(jnp.float32)          # (BN,)
+    t0 = t0_ref[...].astype(jnp.float32)        # (BN,)
+    temps = temps_ref[...].astype(jnp.float32)  # (Y,)
+    drive = temps[None, :] - t0[:, None]        # (BN, Y)
+    o_ref[...] = a[:, None] * jnp.cumsum(drive, axis=1) * dt
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "block_n"))
+def ensemble_project(a: jnp.ndarray, T0: jnp.ndarray, temps: jnp.ndarray,
+                     *, dt: float = 1.0, block_n: int | None = None):
+    """Monte-Carlo ensemble projection via Pallas.
+
+    Args:
+      a:     (N,) sensitivity samples.
+      T0:    (N,) equilibrium-temperature samples.
+      temps: (Y,) future temperature scenario.
+      dt:    years per step (static).
+      block_n: optional ensemble block override.
+
+    Returns:
+      S: (N, Y) float32 trajectories.
+    """
+    N = a.shape[0]
+    (Y,) = temps.shape
+    bn = block_n or project_block_n(N, Y)
+    Np = _round_up(N, bn)
+    if Np != N:
+        a = jnp.pad(a, (0, Np - N))
+        T0 = jnp.pad(T0, (0, Np - N))
+    grid = (Np // bn,)
+    S = pl.pallas_call(
+        functools.partial(_project_kernel, dt=float(dt)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((Y,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, Y), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, Y), jnp.float32),
+        interpret=True,
+    )(a, T0, temps)
+    return S[:N]
+
+
+# ---------------------------------------------------------------------------
+# ensemble_project_poly
+# ---------------------------------------------------------------------------
+
+def _project_poly_kernel(theta_ref, phi_ref, o_ref, *, dt: float):
+    """One grid step: trajectories for a (BN, K) block of sampled coefficients.
+
+    rate = Theta @ Phi^T is an (BN, K) x (K, Y) matmul -> MXU; the prefix sum
+    over years then runs on the VPU along the lane axis.
+    """
+    theta = theta_ref[...].astype(jnp.float32)  # (BN, K)
+    phi = phi_ref[...].astype(jnp.float32)      # (Y, K)
+    rate = jax.lax.dot_general(
+        theta, phi, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (BN, Y)
+    o_ref[...] = jnp.cumsum(rate, axis=1) * dt
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "block_n"))
+def ensemble_project_poly(Theta: jnp.ndarray, Phi: jnp.ndarray,
+                          *, dt: float = 1.0, block_n: int | None = None):
+    """Polynomial-emulator ensemble projection via Pallas.
+
+    S[n, y] = dt * sum_{t <= y} Theta[n] . Phi[t]
+
+    Args:
+      Theta: (N, K) sampled regression coefficients.
+      Phi:   (Y, K) feature rows of the future scenario.
+      dt:    years per step (static).
+
+    Returns:
+      S: (N, Y) float32 trajectories.
+    """
+    N, K = Theta.shape
+    Y, K2 = Phi.shape
+    assert K == K2, f"feature mismatch {K} vs {K2}"
+    bn = block_n or project_block_n(N, Y)
+    Np = _round_up(N, bn)
+    if Np != N:
+        Theta = jnp.pad(Theta, ((0, Np - N), (0, 0)))
+    grid = (Np // bn,)
+    S = pl.pallas_call(
+        functools.partial(_project_poly_kernel, dt=float(dt)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, K), lambda i: (i, 0)),
+            pl.BlockSpec((Y, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, Y), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, Y), jnp.float32),
+        interpret=True,
+    )(Theta, Phi)
+    return S[:N]

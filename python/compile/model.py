@@ -1,0 +1,227 @@
+"""L2: the FACTS compute graph in JAX, calling the L1 Pallas kernels.
+
+One FACTS workflow instance (paper SS4, Experiment 4) is a four-step DAG:
+
+    pre-processing -> fitting -> projecting -> post-processing
+
+Each step below is a pure JAX function over fixed shapes, AOT-lowered by
+``aot.py`` to HLO text and executed from the Rust coordinator via PJRT --
+Python never runs on the request path.
+
+Science model (see kernels/ref.py): a semi-empirical sea-level response
+   dS/dt = a (T - T0)           ("se"  module, K=2 regression)
+and a polynomial emulator
+   dS/dt = theta . [1, Tn, Tn^2, tau]  ("poly" module, K=4 regression)
+fit by ridge least squares on a historical (temperature, sea-level-rate)
+record, then projected by Monte-Carlo sampling of the posterior
+   theta_n = theta_hat + sigma * L^-T eps_n,   A = G + lam I = L L^T
+over a future temperature scenario, reporting IPCC-style quantiles.
+
+All linear algebra is unrolled (Cholesky / triangular solves over small K)
+so the lowered HLO contains no LAPACK custom-calls: the Rust CPU PJRT
+client can only execute core HLO ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import sealevel as kernels
+
+# IPCC-style reporting quantiles (median + likely + very-likely ranges).
+QUANTILES = (0.05, 0.17, 0.5, 0.83, 0.95)
+# Ridge regularizer: keeps A = G + lam I SPD even for degenerate records.
+RIDGE_LAM = 1e-3
+# Reference window (steps) for the temperature-anomaly baseline.
+REF_WINDOW = 20
+
+
+# ---------------------------------------------------------------------------
+# Step 1: pre-processing
+# ---------------------------------------------------------------------------
+
+def facts_preprocess(temps: jnp.ndarray, rates: jnp.ndarray):
+    """Build regression features from raw historical records.
+
+    Args:
+      temps: (B, T) raw temperature series per site/scenario.
+      rates: (B, T) raw sea-level-rate series (mm/yr).
+
+    Returns:
+      X4: (B, T, 4) poly design matrices [1, Tn, Tn^2, tau].
+      X2: (B, T, 2) semi-empirical design matrices [1, Tn].
+      y:  (B, T) rates, baseline-removed.
+      tref: (B,) per-site reference temperature.
+    """
+    B, T = temps.shape
+    w = min(REF_WINDOW, T)
+    tref = jnp.mean(temps[:, :w], axis=1)
+    tn = temps - tref[:, None]
+    tau = jnp.broadcast_to(jnp.linspace(0.0, 1.0, T, dtype=temps.dtype), (B, T))
+    ones = jnp.ones_like(tn)
+    X4 = jnp.stack([ones, tn, tn * tn, tau], axis=-1)
+    X2 = jnp.stack([ones, tn], axis=-1)
+    y = rates - jnp.mean(rates[:, :w], axis=1, keepdims=True) * 0.0  # keep raw rates
+    return X4, X2, y, tref
+
+
+# ---------------------------------------------------------------------------
+# Small unrolled linear algebra (no LAPACK custom-calls)
+# ---------------------------------------------------------------------------
+
+def _chol_unrolled(A: jnp.ndarray):
+    """Cholesky of (..., K, K) SPD matrices, unrolled at trace time.
+
+    Returns the lower factor as a K x K nested list of (...,)-shaped arrays.
+    """
+    K = A.shape[-1]
+    L = [[None] * K for _ in range(K)]
+    for i in range(K):
+        for j in range(i + 1):
+            s = A[..., i, j]
+            for p in range(j):
+                s = s - L[i][p] * L[j][p]
+            if i == j:
+                L[i][j] = jnp.sqrt(jnp.maximum(s, 1e-30))
+            else:
+                L[i][j] = s / L[j][j]
+    return L
+
+
+def _solve_chol(L, m: jnp.ndarray):
+    """Solve L L^T theta = m; m: (..., K) -> theta (..., K)."""
+    K = len(L)
+    z = [None] * K
+    for i in range(K):
+        s = m[..., i]
+        for p in range(i):
+            s = s - L[i][p] * z[p]
+        z[i] = s / L[i][i]
+    th = [None] * K
+    for i in reversed(range(K)):
+        s = z[i]
+        for p in range(i + 1, K):
+            s = s - L[p][i] * th[p]
+        th[i] = s / L[i][i]
+    return jnp.stack(th, axis=-1)
+
+
+def _solve_lt(L, e: jnp.ndarray):
+    """Solve L^T x = e for posterior sampling; e: (..., M, K) with L (...,)-shaped
+    entries broadcast over M. Returns (..., M, K)."""
+    K = len(L)
+    x = [None] * K
+    for i in reversed(range(K)):
+        s = e[..., i]
+        for p in range(i + 1, K):
+            s = s - L[p][i][..., None] * x[p]
+        x[i] = s / L[i][i][..., None]
+    return jnp.stack(x, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Step 2: fitting
+# ---------------------------------------------------------------------------
+
+def facts_fit(X: jnp.ndarray, y: jnp.ndarray):
+    """Ridge least-squares fit via the Pallas batched-Gram kernel.
+
+    Args:
+      X: (B, T, K) design matrices.
+      y: (B, T) targets.
+
+    Returns:
+      theta:  (B, K) coefficients.
+      sigma2: (B,) residual variances.
+      A:      (B, K, K) regularized Gram matrices (posterior precision / sigma2).
+    """
+    B, T, K = X.shape
+    G, m = kernels.batched_gram(X, y)
+    A = G + RIDGE_LAM * jnp.eye(K, dtype=G.dtype)[None, :, :]
+    L = _chol_unrolled(A)
+    theta = _solve_chol(L, m)
+    resid = y - jnp.einsum("btk,bk->bt", X, theta)
+    dof = max(T - K, 1)
+    sigma2 = jnp.sum(resid * resid, axis=1) / dof
+    return theta, sigma2, A
+
+
+# ---------------------------------------------------------------------------
+# Step 3: projecting
+# ---------------------------------------------------------------------------
+
+def _sample_thetas(theta, sigma2, A, eps):
+    """Posterior samples theta_n = theta + sigma L^-T eps_n.
+
+    theta: (B, K), sigma2: (B,), A: (B, K, K), eps: (B, M, K)
+    -> (B, M, K)
+    """
+    L = _chol_unrolled(A)
+    d = _solve_lt(L, eps)                        # (B, M, K)
+    return theta[:, None, :] + jnp.sqrt(sigma2)[:, None, None] * d
+
+
+def facts_project_se(theta, sigma2, A, eps, temps_fut, *, dt: float = 1.0):
+    """Semi-empirical projection: dS/dt = a (T - T0).
+
+    Args:
+      theta: (B, 2) fitted [c, a] with rate = c + a*Tn, i.e. T0 = -c/a.
+      sigma2, A, eps: posterior pieces; eps: (B, M, 2).
+      temps_fut: (Y,) future temperature anomaly scenario.
+
+    Returns:
+      quants: (Q, Y) ensemble quantiles, mean: (Y,), samples mean trajectory.
+    """
+    B, M, _ = eps.shape
+    th = _sample_thetas(theta, sigma2, A, eps)    # (B, M, 2)
+    c = th[..., 0].reshape(-1)                    # (B*M,)
+    a = th[..., 1].reshape(-1)
+    # Guard: |a| bounded away from 0 so T0 = -c/a stays finite.
+    a = jnp.where(jnp.abs(a) < 1e-6, 1e-6, a)
+    T0 = -c / a
+    S = kernels.ensemble_project(a, T0, temps_fut, dt=dt)   # (B*M, Y)
+    qs = jnp.quantile(S, jnp.array(QUANTILES, dtype=S.dtype), axis=0)
+    return qs, jnp.mean(S, axis=0)
+
+
+def facts_project_poly(theta, sigma2, A, eps, phi_fut, *, dt: float = 1.0):
+    """Polynomial-emulator projection: dS/dt = theta . phi(t).
+
+    Args:
+      theta: (B, 4), sigma2: (B,), A: (B, 4, 4), eps: (B, M, 4).
+      phi_fut: (Y, 4) feature rows of the future scenario.
+
+    Returns:
+      quants: (Q, Y), mean: (Y,).
+    """
+    B, M, K = eps.shape
+    th = _sample_thetas(theta, sigma2, A, eps).reshape(B * M, K)
+    S = kernels.ensemble_project_poly(th, phi_fut, dt=dt)   # (B*M, Y)
+    qs = jnp.quantile(S, jnp.array(QUANTILES, dtype=S.dtype), axis=0)
+    return qs, jnp.mean(S, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Step 4: post-processing
+# ---------------------------------------------------------------------------
+
+def facts_postprocess(quants: jnp.ndarray, weights: jnp.ndarray):
+    """Combine per-module quantile fans into a single assessment.
+
+    Args:
+      quants: (MODS, Q, Y) per-module quantiles.
+      weights: (MODS,) module weights (renormalized here).
+
+    Returns:
+      combined: (Q, Y) weighted quantile fan.
+      envelope: (2, Y) min/max across modules of the outer quantiles.
+      total_rise: () weighted median rise at the horizon.
+    """
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    combined = jnp.einsum("m,mqy->qy", w, quants)
+    lo = jnp.min(quants[:, 0, :], axis=0)
+    hi = jnp.max(quants[:, -1, :], axis=0)
+    envelope = jnp.stack([lo, hi], axis=0)
+    total_rise = combined[combined.shape[0] // 2, -1]
+    return combined, envelope, total_rise

@@ -1,0 +1,83 @@
+"""AOT path: variant coverage, manifest consistency, HLO-text validity.
+
+These tests gate the artifact contract between the Python compile path and
+the Rust runtime (rust/src/runtime parses the same manifest)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True, cwd=os.path.dirname(os.path.dirname(__file__)), env=env,
+    )
+    return out
+
+
+def test_variant_enumeration_covers_all_steps_and_sizes():
+    names = [name for name, *_ in aot.variants()]
+    assert len(names) == len(set(names)) == 18
+    for size in aot.SIZES:
+        for step in ["preprocess", "fit_k2", "fit_k4", "project_se",
+                     "project_poly", "postprocess"]:
+            assert f"{step}_{size}" in names
+
+
+def test_manifest_matches_files(built):
+    manifest = json.load(open(built / "manifest.json"))
+    assert manifest["format"] == "hlo-text-v1"
+    assert manifest["quantiles"] == list(M.QUANTILES)
+    assert len(manifest["artifacts"]) == 18
+    for art in manifest["artifacts"]:
+        path = built / art["file"]
+        assert path.exists(), art["file"]
+        text = path.read_text()
+        # HLO text sanity: module header and an entry computation.
+        assert text.startswith("HloModule"), art["file"]
+        assert "ENTRY" in text, art["file"]
+        for io in art["inputs"] + art["outputs"]:
+            assert io["dtype"] == "f32"
+            assert all(isinstance(d, int) and d > 0 for d in io["shape"])
+
+
+def test_manifest_shapes_match_eval_shape(built):
+    manifest = json.load(open(built / "manifest.json"))
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    for name, fn, in_specs, out_names in aot.variants():
+        art = by_name[name]
+        assert [list(s.shape) for s in in_specs] == [i["shape"] for i in art["inputs"]]
+        outs = jax.tree_util.tree_leaves(jax.eval_shape(fn, *in_specs))
+        assert [list(o.shape) for o in outs] == [o["shape"] for o in art["outputs"]]
+        assert len(out_names) == len(art["outputs"])
+
+
+def test_hlo_contains_no_lapack_custom_calls(built):
+    """The Rust CPU PJRT client can only run core HLO ops: the unrolled
+    Cholesky must not have lowered to LAPACK custom-calls."""
+    for f in built.glob("*.hlo.txt"):
+        text = f.read_text()
+        assert "lapack" not in text.lower(), f.name
+        assert "getrf" not in text, f.name
+        assert "potrf" not in text, f.name
+
+
+def test_filter_flag_builds_subset(tmp_path):
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--only", "fit_k2_small"],
+        check=True, cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert [a["name"] for a in manifest["artifacts"]] == ["fit_k2_small"]

@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, dtypes and block sizes; assert_allclose against
+the reference is the core correctness signal of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import sealevel as k
+
+jax.config.update("jax_enable_x64", False)
+
+SHORT = settings(max_examples=25, deadline=None)
+
+
+def rng_arrays(seed, *shapes, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(shapes))
+    return [jax.random.normal(kk, s, dtype=dtype) for kk, s in zip(keys, shapes)]
+
+
+# ---------------------------------------------------------------------------
+# batched_gram
+# ---------------------------------------------------------------------------
+
+class TestBatchedGram:
+    @SHORT
+    @given(B=st.integers(1, 24), T=st.integers(2, 96), K=st.integers(1, 8),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, B, T, K, seed):
+        X, = rng_arrays(seed, (B, T, K))
+        y, = rng_arrays(seed + 1, (B, T))
+        G, m = k.batched_gram(X, y)
+        Gr, mr = ref.gram_ref(X, y)
+        np.testing.assert_allclose(G, Gr, rtol=2e-5, atol=1e-5)
+        np.testing.assert_allclose(m, mr, rtol=2e-5, atol=1e-5)
+
+    @SHORT
+    @given(bb=st.integers(1, 9), seed=st.integers(0, 1000))
+    def test_block_size_invariance(self, bb, seed):
+        """Result must not depend on the batch block size."""
+        X, y = rng_arrays(seed, (7, 33, 3), (7, 33))
+        G1, m1 = k.batched_gram(X, y, block_b=bb)
+        G2, m2 = k.batched_gram(X, y, block_b=7)
+        np.testing.assert_allclose(G1, G2, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(m1, m2, rtol=1e-6, atol=1e-6)
+
+    def test_gram_is_symmetric_psd(self):
+        X, y = rng_arrays(3, (6, 40, 4), (6, 40))
+        G, _ = k.batched_gram(X, y)
+        np.testing.assert_allclose(G, np.swapaxes(G, 1, 2), rtol=1e-6)
+        evals = np.linalg.eigvalsh(np.asarray(G))
+        assert (evals > -1e-4).all()
+
+    def test_bf16_inputs_accumulate_f32(self):
+        X, y = rng_arrays(4, (4, 32, 4), (4, 32))
+        G16, _ = k.batched_gram(X.astype(jnp.bfloat16), y.astype(jnp.bfloat16))
+        Gr, _ = ref.gram_ref(X, y)
+        assert G16.dtype == jnp.float32
+        np.testing.assert_allclose(G16, Gr, rtol=5e-2, atol=5e-2)
+
+    def test_empty_batch_rejected(self):
+        with pytest.raises(Exception):
+            k.batched_gram(jnp.zeros((0, 4, 2)), jnp.zeros((0, 4)))
+
+
+# ---------------------------------------------------------------------------
+# ensemble_project
+# ---------------------------------------------------------------------------
+
+class TestEnsembleProject:
+    @SHORT
+    @given(N=st.integers(1, 64), Y=st.integers(1, 80),
+           dt=st.sampled_from([0.25, 0.5, 1.0]), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, N, Y, dt, seed):
+        a, T0, temps = rng_arrays(seed, (N,), (N,), (Y,))
+        S = k.ensemble_project(a, T0, temps, dt=dt)
+        Sr = ref.project_ref(a, T0, temps, dt)
+        np.testing.assert_allclose(S, Sr, rtol=2e-4, atol=1e-4)
+
+    @SHORT
+    @given(bn=st.sampled_from([8, 16, 24, 40]), seed=st.integers(0, 1000))
+    def test_block_size_invariance(self, bn, seed):
+        a, T0, temps = rng_arrays(seed, (37,), (37,), (21,))
+        S1 = k.ensemble_project(a, T0, temps, block_n=bn)
+        S2 = ref.project_ref(a, T0, temps, 1.0)
+        np.testing.assert_allclose(S1, S2, rtol=1e-4, atol=1e-5)
+
+    def test_zero_sensitivity_is_flat(self):
+        temps, = rng_arrays(1, (12,))
+        S = k.ensemble_project(jnp.zeros(9), jnp.ones(9), temps)
+        np.testing.assert_allclose(S, 0.0, atol=1e-7)
+
+    def test_constant_forcing_is_linear_in_time(self):
+        """T == T0 + c forever => S[y] = a*c*(y+1)*dt exactly."""
+        a = jnp.array([2.0]); T0 = jnp.array([1.0])
+        temps = jnp.full((10,), 1.5)
+        S = np.asarray(k.ensemble_project(a, T0, temps, dt=1.0))[0]
+        np.testing.assert_allclose(S, 2.0 * 0.5 * np.arange(1, 11), rtol=1e-5)
+
+    def test_trajectories_independent_across_members(self):
+        """Changing member j must not affect member i."""
+        a, T0, temps = rng_arrays(7, (16,), (16,), (8,))
+        S1 = np.asarray(k.ensemble_project(a, T0, temps))
+        a2 = a.at[5].set(99.0)
+        S2 = np.asarray(k.ensemble_project(a2, T0, temps))
+        np.testing.assert_allclose(np.delete(S1, 5, 0), np.delete(S2, 5, 0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ensemble_project_poly
+# ---------------------------------------------------------------------------
+
+class TestEnsembleProjectPoly:
+    @SHORT
+    @given(N=st.integers(1, 48), Y=st.integers(1, 64), K=st.integers(1, 6),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, N, Y, K, seed):
+        Th, Phi = rng_arrays(seed, (N, K), (Y, K))
+        S = k.ensemble_project_poly(Th, Phi, dt=1.0)
+        Sr = ref.project_poly_ref(Th, Phi, 1.0)
+        np.testing.assert_allclose(S, Sr, rtol=2e-4, atol=1e-4)
+
+    def test_se_is_special_case_of_poly(self):
+        """theta=[c,a], phi=[1,T] reproduces ensemble_project with T0=-c/a."""
+        a, T0, temps = rng_arrays(11, (10,), (10,), (14,))
+        Th = jnp.stack([-a * T0, a], axis=-1)
+        Phi = jnp.stack([jnp.ones_like(temps), temps], axis=-1)
+        S_poly = k.ensemble_project_poly(Th, Phi)
+        S_se = k.ensemble_project(a, T0, temps)
+        np.testing.assert_allclose(S_poly, S_se, rtol=1e-4, atol=1e-4)
+
+    def test_linearity_in_theta(self):
+        Th, Phi = rng_arrays(13, (6, 3), (9, 3))
+        S2 = k.ensemble_project_poly(2.0 * Th, Phi)
+        S1 = k.ensemble_project_poly(Th, Phi)
+        np.testing.assert_allclose(S2, 2.0 * S1, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block heuristics / VMEM estimates
+# ---------------------------------------------------------------------------
+
+class TestBlockHeuristics:
+    @given(B=st.integers(1, 4096), T=st.integers(1, 512), K=st.integers(1, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_gram_block_within_budget(self, B, T, K):
+        bb = k.gram_block_b(B, T, K)
+        assert 1 <= bb <= B
+        assert k.gram_vmem_bytes(bb, T, K) <= 8 * 1024 * 1024
+
+    @given(N=st.integers(1, 1 << 16), Y=st.integers(1, 512))
+    @settings(max_examples=50, deadline=None)
+    def test_project_block_lane_aligned(self, N, Y):
+        bn = k.project_block_n(N, Y)
+        assert bn % 8 == 0 or bn == N
+        assert k.project_vmem_bytes(bn, Y) <= 16 * 1024 * 1024
+
+    def test_flops_count(self):
+        assert k.gram_mxu_flops(2, 10, 3) == 2 * (10 * 9 + 30)

@@ -1,0 +1,176 @@
+"""L2 correctness: FACTS step functions (model.py) — shapes, invariants,
+and agreement between the unrolled linear algebra and numpy's LAPACK."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+SHORT = settings(max_examples=20, deadline=None)
+Q = len(M.QUANTILES)
+
+
+def synth_records(seed, B, T):
+    """Synthetic (temps, rates) with a known ground-truth a, T0."""
+    rng = np.random.default_rng(seed)
+    a_true = rng.uniform(1.0, 4.0, size=(B, 1))
+    T0_true = rng.uniform(-0.5, 0.5, size=(B, 1))
+    temps = np.linspace(0.0, 1.5, T)[None, :] + 0.05 * rng.standard_normal((B, T))
+    rates = a_true * (temps - T0_true) + 0.01 * rng.standard_normal((B, T))
+    return (jnp.asarray(temps, jnp.float32), jnp.asarray(rates, jnp.float32),
+            a_true[:, 0], T0_true[:, 0])
+
+
+class TestPreprocess:
+    @SHORT
+    @given(B=st.integers(1, 12), T=st.integers(21, 96), seed=st.integers(0, 999))
+    def test_shapes_and_columns(self, B, T, seed):
+        temps, rates, _, _ = synth_records(seed, B, T)
+        X4, X2, y, tref = M.facts_preprocess(temps, rates)
+        assert X4.shape == (B, T, 4) and X2.shape == (B, T, 2)
+        assert y.shape == (B, T) and tref.shape == (B,)
+        np.testing.assert_allclose(X4[..., 0], 1.0)
+        np.testing.assert_allclose(X2[..., 1], X4[..., 1], rtol=1e-6)
+        np.testing.assert_allclose(X4[..., 2], X4[..., 1] ** 2, rtol=1e-4, atol=1e-5)
+
+    def test_anomaly_baseline_window(self):
+        temps = jnp.ones((2, 40)) * 3.0
+        rates = jnp.zeros((2, 40))
+        X4, _, _, tref = M.facts_preprocess(temps, rates)
+        np.testing.assert_allclose(tref, 3.0, rtol=1e-6)
+        np.testing.assert_allclose(X4[..., 1], 0.0, atol=1e-6)
+
+
+class TestFit:
+    @SHORT
+    @given(B=st.integers(1, 10), T=st.integers(16, 80), K=st.sampled_from([2, 4]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_numpy_lstsq(self, B, T, K, seed):
+        key = jax.random.PRNGKey(seed)
+        kx, ky = jax.random.split(key)
+        X = jax.random.normal(kx, (B, T, K))
+        y = jax.random.normal(ky, (B, T))
+        theta, sigma2, A = M.facts_fit(X, y)
+        for b in range(B):
+            Xa, ya = np.asarray(X[b], np.float64), np.asarray(y[b], np.float64)
+            ref_th = np.linalg.solve(Xa.T @ Xa + M.RIDGE_LAM * np.eye(K), Xa.T @ ya)
+            np.testing.assert_allclose(theta[b], ref_th, rtol=2e-3, atol=2e-3)
+        assert (np.asarray(sigma2) >= 0).all()
+        np.testing.assert_allclose(A, np.swapaxes(np.asarray(A), 1, 2), rtol=1e-5)
+
+    def test_recovers_true_parameters(self):
+        temps, rates, a_true, T0_true = synth_records(5, 6, 64)
+        _, X2, y, tref = M.facts_preprocess(temps, rates)
+        theta, sigma2, _ = M.facts_fit(X2, y)
+        a_hat = np.asarray(theta[:, 1])
+        # rate = c + a*Tn with Tn = T - tref  =>  T0 = tref - c/a
+        T0_hat = np.asarray(tref) - np.asarray(theta[:, 0]) / a_hat
+        np.testing.assert_allclose(a_hat, a_true, rtol=0.15)
+        np.testing.assert_allclose(T0_hat, T0_true, atol=0.2)
+        assert (np.asarray(sigma2) < 0.05).all()
+
+    def test_perfect_fit_zero_residual(self):
+        X = jnp.broadcast_to(jnp.stack(
+            [jnp.ones(32), jnp.linspace(0, 1, 32)], -1), (3, 32, 2))
+        theta_true = jnp.array([[1.0, 2.0]] * 3)
+        y = jnp.einsum("btk,bk->bt", X, theta_true)
+        theta, sigma2, _ = M.facts_fit(X, y)
+        np.testing.assert_allclose(theta, theta_true, rtol=1e-3, atol=1e-3)
+        assert (np.asarray(sigma2) < 1e-5).all()
+
+
+class TestProject:
+    def _fitted(self, seed=7, B=4, T=64):
+        temps, rates, _, _ = synth_records(seed, B, T)
+        X4, X2, y, tref = M.facts_preprocess(temps, rates)
+        return X4, X2, y, tref
+
+    @SHORT
+    @given(Mm=st.integers(1, 12), Y=st.integers(2, 48), seed=st.integers(0, 999))
+    def test_se_shapes_and_ordered_quantiles(self, Mm, Y, seed):
+        _, X2, y, _ = self._fitted(seed)
+        theta, s2, A = M.facts_fit(X2, y)
+        eps = jax.random.normal(jax.random.PRNGKey(seed), (4, Mm, 2))
+        temps_fut = jnp.linspace(0.5, 2.5, Y)
+        q, mean = M.facts_project_se(theta, s2, A, eps, temps_fut)
+        assert q.shape == (Q, Y) and mean.shape == (Y,)
+        assert (np.diff(np.asarray(q), axis=0) >= -1e-4).all(), "quantiles must be ordered"
+
+    def test_zero_eps_collapses_to_point_estimate(self):
+        """With eps = 0 every sample equals theta-hat: the MC spread vanishes,
+        so the median and the ensemble mean are invariant to the number of
+        (identical) samples per site. Outer quantiles shift only by the
+        interpolation positions of the duplicated sample set, so we compare
+        the duplication-invariant statistics."""
+        _, X2, y, _ = self._fitted()
+        theta, s2, A = M.facts_fit(X2, y)
+        tf = jnp.linspace(0.5, 2.0, 10)
+        q6, mean6 = M.facts_project_se(theta, s2, A, jnp.zeros((4, 6, 2)), tf)
+        q2, mean2 = M.facts_project_se(theta, s2, A, jnp.zeros((4, 2, 2)), tf)
+        mid = Q // 2
+        np.testing.assert_allclose(q6[mid], q2[mid], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(mean6, mean2, rtol=1e-5, atol=1e-5)
+
+    def test_posterior_spread_grows_with_sigma(self):
+        _, X2, y, _ = self._fitted()
+        theta, s2, A = M.facts_fit(X2, y)
+        eps = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 2))
+        tf = jnp.linspace(0.5, 2.0, 12)
+        q_lo, _ = M.facts_project_se(theta, s2, A, eps, tf)
+        q_hi, _ = M.facts_project_se(theta, s2 * 100.0, A, eps, tf)
+        assert float(q_hi[-1, -1] - q_hi[0, -1]) > float(q_lo[-1, -1] - q_lo[0, -1])
+
+    @SHORT
+    @given(Mm=st.integers(1, 8), Y=st.integers(2, 32), seed=st.integers(0, 999))
+    def test_poly_shapes(self, Mm, Y, seed):
+        X4, _, y, _ = self._fitted(seed)
+        theta, s2, A = M.facts_fit(X4, y)
+        eps = jax.random.normal(jax.random.PRNGKey(seed), (4, Mm, 4))
+        tf = jnp.linspace(0.5, 2.5, Y)
+        phi = jnp.stack([jnp.ones(Y), tf, tf * tf, jnp.linspace(0, 1, Y)], -1)
+        q, mean = M.facts_project_poly(theta, s2, A, eps, phi)
+        assert q.shape == (Q, Y) and mean.shape == (Y,)
+        assert (np.diff(np.asarray(q), axis=0) >= -1e-4).all()
+
+
+class TestPostprocess:
+    def test_weighted_combination(self):
+        q1 = jnp.ones((Q, 8)) * 1.0
+        q2 = jnp.ones((Q, 8)) * 3.0
+        comb, env, tot = M.facts_postprocess(jnp.stack([q1, q2]), jnp.array([1.0, 1.0]))
+        np.testing.assert_allclose(comb, 2.0, rtol=1e-6)
+        np.testing.assert_allclose(env[0], 1.0)
+        np.testing.assert_allclose(env[1], 3.0)
+        np.testing.assert_allclose(tot, 2.0)
+
+    def test_weights_renormalized(self):
+        q = jnp.ones((2, Q, 4))
+        c1, _, _ = M.facts_postprocess(q, jnp.array([2.0, 2.0]))
+        c2, _, _ = M.facts_postprocess(q, jnp.array([0.5, 0.5]))
+        np.testing.assert_allclose(c1, c2, rtol=1e-6)
+
+    def test_envelope_contains_combined(self):
+        key = jax.random.PRNGKey(3)
+        quants = jnp.sort(jax.random.normal(key, (2, Q, 6)), axis=1)
+        comb, env, _ = M.facts_postprocess(quants, jnp.array([0.3, 0.7]))
+        assert (np.asarray(comb[0]) >= np.asarray(env[0]) - 1e-5).all()
+        assert (np.asarray(comb[-1]) <= np.asarray(env[1]) + 1e-5).all()
+
+
+class TestUnrolledLinalg:
+    @SHORT
+    @given(B=st.integers(1, 8), K=st.sampled_from([2, 3, 4, 5]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_cholesky_solve_vs_numpy(self, B, K, seed):
+        key = jax.random.PRNGKey(seed)
+        R = jax.random.normal(key, (B, K, K))
+        G = jnp.einsum("bik,bjk->bij", R, R) + 0.5 * jnp.eye(K)[None]
+        m = jax.random.normal(key, (B, K))
+        th = ref.cholesky_solve_small_ref(G, m, 1e-3)
+        want = np.linalg.solve(np.asarray(G, np.float64) + 1e-3 * np.eye(K),
+                               np.asarray(m, np.float64)[..., None])[..., 0]
+        np.testing.assert_allclose(th, want, rtol=2e-2, atol=2e-2)

@@ -1,0 +1,134 @@
+//! Shared support for the experiment harnesses (`cargo bench`).
+//!
+//! criterion is unavailable offline, so each bench is a `harness = false`
+//! binary using this module: multi-trial runs over distinct seeds,
+//! mean ± std summaries, and paper-style table output. Every harness
+//! prints the Table-1 row it reproduces plus the figure series.
+
+#![allow(dead_code)]
+
+use hydra::api::{ResourceRequest, TaskDescription};
+use hydra::broker::{BrokerPolicy, Hydra, PartitionModel, PodBuildMode};
+use hydra::metrics::AggregateMetrics;
+use hydra::sim::provider::ProviderId;
+use hydra::util::stats::Summary;
+
+/// Trials per experimental point (the paper reports error bars over
+/// repeated runs).
+pub const TRIALS: u64 = 3;
+
+/// Table 1 — the experiment setup matrix, printed by every harness.
+pub const TABLE1: &str = "\
+| ID  | Exp. Type | Workload | Platform  | Tasks        | Task Type  | Nodes   | CPUs     |
+|-----|-----------|----------|-----------|--------------|------------|---------|----------|
+| 1   | P-PR      | HOM      | Cloud     | 4K,8K,16K    | CON        | 1       | 4-16     |
+| 2   | C-PR      | HOM      | Cloud     | 16K,32K,64K  | CON        | 1       | 16       |
+| 3-A | C-PL      | HOM      | Cloud-HPC | 20K,40K,80K  | CON        | 1       | 16       |
+| 3-B | C-PL      | HET      | Cloud-HPC | 10,240       | CON,EXEC   | 2,4,6   | 4-128    |
+| 4   | FACTS     | HET      | Cloud-HPC | 200-3200     | CON,EXEC   | 1-16    | 16-256   |";
+
+/// Build a single-provider Hydra with one Kubernetes node.
+pub fn cloud_hydra(
+    provider: ProviderId,
+    vcpus: u32,
+    model: PartitionModel,
+    seed: u64,
+) -> Hydra {
+    Hydra::builder()
+        .simulated_provider(provider)
+        .resource(ResourceRequest::kubernetes(provider, 1, vcpus))
+        .partition_model(model)
+        .seed(seed)
+        .build()
+        .expect("simulated provider must build")
+}
+
+/// Build Hydra across all four clouds (16 vCPUs each, as Exp 2).
+pub fn clouds_hydra(model: PartitionModel, seed: u64) -> Hydra {
+    clouds_hydra_mode(model, PodBuildMode::Memory, seed)
+}
+
+pub fn clouds_hydra_mode(model: PartitionModel, mode: PodBuildMode, seed: u64) -> Hydra {
+    let mut b = Hydra::builder().partition_model(model).build_mode(mode).seed(seed);
+    for p in ProviderId::CLOUDS {
+        b = b
+            .simulated_provider(p)
+            .resource(ResourceRequest::kubernetes(p, 1, 16));
+    }
+    b.build().expect("simulated providers must build")
+}
+
+/// Noop container workload (Experiments 1, 2, 3A).
+pub fn noop_containers(n: usize) -> Vec<TaskDescription> {
+    (0..n)
+        .map(|i| TaskDescription::container(format!("noop-{i}"), "hydra/noop:latest"))
+        .collect()
+}
+
+/// One experimental point: aggregate metrics over TRIALS seeds.
+pub struct Point {
+    pub ovh: Summary,
+    pub th: Summary,
+    pub tpt: Summary,
+    pub ttx: Summary,
+    pub pods: usize,
+}
+
+/// Run `make_run` across TRIALS seeds and summarize.
+pub fn measure(mut make_run: impl FnMut(u64) -> AggregateMetrics) -> Point {
+    let mut ovh = Vec::new();
+    let mut th = Vec::new();
+    let mut tpt = Vec::new();
+    let mut ttx = Vec::new();
+    let mut pods = 0;
+    for trial in 0..TRIALS {
+        let m = make_run(0xBEEF + trial * 7919);
+        ovh.push(m.ovh_s);
+        th.push(m.th_tps);
+        tpt.push(m.tpt_s);
+        ttx.push(m.ttx_s);
+        pods = m.pods;
+    }
+    Point {
+        ovh: Summary::of(&ovh),
+        th: Summary::of(&th),
+        tpt: Summary::of(&tpt),
+        ttx: Summary::of(&ttx),
+        pods,
+    }
+}
+
+/// Run a single-provider workload and return the aggregate.
+pub fn run_cloud_point(
+    provider: ProviderId,
+    tasks: usize,
+    vcpus: u32,
+    model: PartitionModel,
+    seed: u64,
+) -> AggregateMetrics {
+    let hydra = cloud_hydra(provider, vcpus, model, seed);
+    hydra
+        .submit(noop_containers(tasks), &BrokerPolicy::RoundRobin)
+        .expect("noop workload must broker")
+        .aggregate
+}
+
+pub fn fmt_ms(s: &Summary) -> String {
+    format!("{:8.2} ±{:5.2}", s.mean * 1e3, s.std * 1e3)
+}
+
+pub fn fmt_s(s: &Summary) -> String {
+    format!("{:8.1} ±{:5.1}", s.mean, s.std)
+}
+
+pub fn fmt_tps(s: &Summary) -> String {
+    format!("{:9.0} ±{:6.0}", s.mean, s.std)
+}
+
+pub fn header(id: &str, title: &str, fig: &str) {
+    println!("\n================================================================");
+    println!("Experiment {id}: {title}");
+    println!("Reproduces: {fig}");
+    println!("Trials per point: {TRIALS} (mean ± std). Seeds printed = reproducible.");
+    println!("================================================================");
+}

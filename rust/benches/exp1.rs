@@ -1,0 +1,95 @@
+//! Experiment 1 — Per-Provider Scalability (paper §5.1, Fig. 2 a–f).
+//!
+//! For each cloud provider (JET2, CHI, AWS, AZURE): 4K/8K/16K noop
+//! container tasks on 4/8/16 vCPUs, MCPP and SCPP. Reports the three
+//! panels of Fig. 2: OVH (top), TH (middle), TPT (bottom) for weak
+//! scaling (tasks/vCPUs grow together) and strong scaling (tasks fixed,
+//! vCPUs grow).
+//!
+//! Expected shapes (DESIGN.md §4): OVH tracks #tasks/#pods and is
+//! ~provider-invariant; SCPP OVH ≈ +46% vs MCPP; TH(MCPP) > TH(SCPP);
+//! TPT: JET2 best at 4 vCPUs, AZURE overtakes at 16, CHI scales worst,
+//! SCPP ≈ +9% TPT.
+
+mod common;
+
+use common::*;
+use hydra::broker::PartitionModel;
+use hydra::sim::provider::ProviderId;
+use hydra::util::stats::scaling_exponent;
+
+fn model_name(m: PartitionModel) -> &'static str {
+    m.short_name()
+}
+
+fn main() {
+    println!("{TABLE1}");
+    header("1", "per-provider weak/strong scaling", "Fig. 2 (a-f)");
+
+    let models = [PartitionModel::Mcpp { max_cpp: 16 }, PartitionModel::Scpp];
+    // (tasks, vcpus) — weak scaling points double together.
+    let weak: [(usize, u32); 3] = [(4000, 4), (8000, 8), (16000, 16)];
+
+    let mut scpp_ovh_sum = 0.0;
+    let mut mcpp_ovh_sum = 0.0;
+    let mut scpp_th_sum = 0.0;
+    let mut mcpp_th_sum = 0.0;
+    let mut scpp_tpt_sum = 0.0;
+    let mut mcpp_tpt_sum = 0.0;
+
+    for model in models {
+        println!("\n--- {} | WEAK SCALING (tasks/vCPUs: 4K/4, 8K/8, 16K/16) ---",
+                 model_name(model));
+        println!("{:<8} {:>10} {:>6} {:>6} {:>16} {:>17} {:>16}",
+                 "PROVIDER", "TASKS", "vCPU", "PODS", "OVH (ms)", "TH (task/s)", "TPT (s)");
+        for provider in ProviderId::CLOUDS {
+            for (tasks, vcpus) in weak {
+                let p = measure(|seed| run_cloud_point(provider, tasks, vcpus, model, seed));
+                println!(
+                    "{:<8} {:>10} {:>6} {:>6} {:>16} {:>17} {:>16}",
+                    provider.short_name(), tasks, vcpus, p.pods,
+                    fmt_ms(&p.ovh), fmt_tps(&p.th), fmt_s(&p.tpt)
+                );
+                match model {
+                    PartitionModel::Scpp => {
+                        scpp_ovh_sum += p.ovh.mean;
+                        scpp_th_sum += p.th.mean;
+                        scpp_tpt_sum += p.tpt.mean;
+                    }
+                    _ => {
+                        mcpp_ovh_sum += p.ovh.mean;
+                        mcpp_th_sum += p.th.mean;
+                        mcpp_tpt_sum += p.tpt.mean;
+                    }
+                }
+            }
+        }
+
+        println!("\n--- {} | STRONG SCALING (16K tasks; vCPUs 4 -> 16) ---", model_name(model));
+        println!("{:<8} {:>6} {:>16} {:>16}  scaling-exp(TPT~vCPU)",
+                 "PROVIDER", "vCPU", "OVH (ms)", "TPT (s)");
+        for provider in ProviderId::CLOUDS {
+            let mut xs = Vec::new();
+            let mut ys = Vec::new();
+            let mut rows = Vec::new();
+            for vcpus in [4u32, 8, 16] {
+                let p = measure(|seed| run_cloud_point(provider, 16000, vcpus, model, seed));
+                xs.push(vcpus as f64);
+                ys.push(p.tpt.mean);
+                rows.push((vcpus, p));
+            }
+            let alpha = scaling_exponent(&xs, &ys);
+            for (i, (vcpus, p)) in rows.iter().enumerate() {
+                let tail = if i == 2 { format!("   alpha = {alpha:+.2}") } else { String::new() };
+                println!("{:<8} {:>6} {:>16} {:>16}{tail}",
+                         provider.short_name(), vcpus, fmt_ms(&p.ovh), fmt_s(&p.tpt));
+            }
+        }
+    }
+
+    println!("\n--- Fig. 2 headline ratios (paper: SCPP OVH ~ +46%, TH(MCPP) ~ +44%, \
+              SCPP TPT ~ +9%) ---");
+    println!("SCPP/MCPP OVH : {:+.0}%", (scpp_ovh_sum / mcpp_ovh_sum - 1.0) * 100.0);
+    println!("MCPP/SCPP TH  : {:+.0}%", (mcpp_th_sum / scpp_th_sum - 1.0) * 100.0);
+    println!("SCPP/MCPP TPT : {:+.1}%", (scpp_tpt_sum / mcpp_tpt_sum - 1.0) * 100.0);
+}

@@ -1,0 +1,144 @@
+//! Experiment 4 — Use-Case Scalability: the FACTS workflow (paper §5.4,
+//! Fig. 5).
+//!
+//! Runs 50–800 FACTS workflow instances on Jetstream2, AWS (multi-node
+//! Kubernetes + Argo-like engine) and Bridges2 (pilot + EnTK-like engine),
+//! measuring TTX (strong + weak scaling) and Hydra OVH. The FACTS compute
+//! is *real*: one instance executes through PJRT (pre → fit → project →
+//! post over the AOT JAX/Pallas artifacts) and its measured step times
+//! become the simulated task durations (× WORK_SCALE; see facts::).
+//!
+//! Expected shapes: weak scaling near-ideal on all platforms; strong
+//! scaling sublinear on the clouds; Bridges2 flat until cores < workflows
+//! then scaling; TTX ordering B2 < JET2 < AWS with JET2 ≈ 2.5× AWS;
+//! OVH negligible vs makespan.
+
+mod common;
+
+use common::*;
+use hydra::api::{ProviderConfig, ResourceRequest};
+use hydra::broker::state::TaskRegistry;
+use hydra::facts::{self, data, pipeline::FactsPipeline, FactsSize};
+use hydra::runtime::{default_artifacts_dir, PjRtRuntime};
+use hydra::sim::provider::ProviderId;
+use hydra::workflow::engine::WorkflowEngine;
+
+const SIZE: FactsSize = FactsSize::Default;
+
+fn engine(provider: ProviderId, nodes: u32) -> WorkflowEngine {
+    let req = match provider {
+        ProviderId::Bridges2 => ResourceRequest::pilot(provider, nodes),
+        _ => ResourceRequest::kubernetes(provider, nodes, 16),
+    };
+    WorkflowEngine::new(ProviderConfig::simulated(provider), req)
+}
+
+fn cores(provider: ProviderId, nodes: u32) -> u32 {
+    match provider {
+        ProviderId::Bridges2 => 128 * nodes,
+        _ => 16 * nodes,
+    }
+}
+
+fn main() {
+    println!("{TABLE1}");
+    header("4", "FACTS workflow at scale (real PJRT compute)", "Fig. 5");
+
+    let rt = PjRtRuntime::load(default_artifacts_dir())
+        .expect("run `make artifacts` before `cargo bench --bench exp4`");
+    let pipe = FactsPipeline::new(&rt, SIZE);
+    let inputs = data::generate(4, SIZE);
+    pipe.run(&inputs).unwrap(); // warm-up compile
+    let timings = pipe.run(&inputs).unwrap().timings;
+    println!(
+        "\nmeasured FACTS step times (host): pre {:.2}ms fit {:.2}ms project {:.2}ms \
+         post {:.2}ms (x WORK_SCALE {} => simulated work)",
+        timings.pre_s * 1e3, timings.fit_s * 1e3, timings.project_s * 1e3,
+        timings.post_s * 1e3, facts::WORK_SCALE
+    );
+    let spec = facts::workflow_spec(SIZE);
+
+    // ---- weak scaling: workflows grow with cores -------------------------
+    println!("\n--- WEAK SCALING (workflows/cores grow together) ---");
+    println!("{:<10} {:>10} {:>7} {:>12} {:>12} {:>16}", "PLATFORM", "WORKFLOWS", "CORES",
+             "OVH (ms)", "TTX (s)", "TTX/workflows(s)");
+    for provider in [ProviderId::Jetstream2, ProviderId::Aws, ProviderId::Bridges2] {
+        let points: &[(usize, u32)] = match provider {
+            // Jetstream2 capped at 128 cores (paper: fewer cores available).
+            ProviderId::Jetstream2 => &[(50, 1), (100, 2), (200, 4), (400, 8)],
+            ProviderId::Aws => &[(50, 1), (100, 2), (200, 4), (400, 8), (800, 16)],
+            // Bridges2 hands out whole 128-core nodes.
+            _ => &[(400, 1), (800, 2)],
+        };
+        for &(wf, nodes) in points {
+            let mut ovh = Vec::new();
+            let mut ttx = Vec::new();
+            for trial in 0..TRIALS {
+                let mut eng = engine(provider, nodes);
+                eng.seed = 0xFAC7 + trial;
+                let reg = TaskRegistry::new();
+                let r = eng
+                    .execute_many(&spec, wf, &reg, facts::measured_workflow(timings))
+                    .unwrap();
+                ovh.push(r.ovh_s());
+                ttx.push(r.ttx_s);
+            }
+            let ovh = hydra::util::stats::Summary::of(&ovh);
+            let ttx = hydra::util::stats::Summary::of(&ttx);
+            println!(
+                "{:<10} {:>10} {:>7} {:>12} {:>12} {:>16.3}",
+                provider.short_name(), wf, cores(provider, nodes), fmt_ms(&ovh),
+                fmt_s(&ttx), ttx.mean / wf as f64
+            );
+        }
+    }
+
+    // ---- strong scaling: 400 workflows, cores grow -----------------------
+    println!("\n--- STRONG SCALING (400 workflows; cores grow) ---");
+    println!("{:<10} {:>7} {:>12} {:>12} {:>10}", "PLATFORM", "CORES", "OVH (ms)",
+             "TTX (s)", "SPEEDUP");
+    let mut ttx_at_128 = std::collections::BTreeMap::new();
+    for provider in [ProviderId::Jetstream2, ProviderId::Aws, ProviderId::Bridges2] {
+        let node_points: &[u32] = match provider {
+            ProviderId::Bridges2 => &[1, 2], // 128, 256 cores
+            _ => &[1, 2, 4, 8, 16],          // 16..256 cores
+        };
+        let mut first_ttx = None;
+        for &nodes in node_points {
+            let mut ttx = Vec::new();
+            let mut ovh = Vec::new();
+            for trial in 0..TRIALS {
+                let mut eng = engine(provider, nodes);
+                eng.seed = 0x57_04 + trial;
+                let reg = TaskRegistry::new();
+                let r = eng
+                    .execute_many(&spec, 400, &reg, facts::measured_workflow(timings))
+                    .unwrap();
+                ttx.push(r.ttx_s);
+                ovh.push(r.ovh_s());
+            }
+            let ttx = hydra::util::stats::Summary::of(&ttx);
+            let ovh = hydra::util::stats::Summary::of(&ovh);
+            let speedup = first_ttx.get_or_insert(ttx.mean).to_owned() / ttx.mean;
+            println!("{:<10} {:>7} {:>12} {:>12} {:>9.2}x",
+                     provider.short_name(), cores(provider, nodes), fmt_ms(&ovh),
+                     fmt_s(&ttx), speedup);
+            if cores(provider, nodes) == 128 {
+                ttx_at_128.insert(provider, ttx.mean);
+            }
+        }
+    }
+
+    // ---- headline ratios at equal cores (128) -----------------------------
+    if let (Some(&jet2), Some(&aws), Some(&b2)) = (
+        ttx_at_128.get(&ProviderId::Jetstream2),
+        ttx_at_128.get(&ProviderId::Aws),
+        ttx_at_128.get(&ProviderId::Bridges2),
+    ) {
+        println!("\nFig. 5 headline at 128 cores, 400 workflows:");
+        println!("  JET2 vs AWS : {:.1}x faster (paper ~2.5x)", aws / jet2);
+        println!("  B2 vs JET2  : {:.1}x faster (paper ~5x)", jet2 / b2);
+        println!("  B2 vs AWS   : {:.1}x faster (paper ~10x)", aws / b2);
+        println!("  OVH remains milliseconds against TTX of seconds-to-minutes.");
+    }
+}

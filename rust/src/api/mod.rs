@@ -1,0 +1,12 @@
+//! Hydra's public API surface — the four classes of the paper's §3.2:
+//! [`provider::ProviderConfig`] (Provider), the service proxy in
+//! `broker::service_proxy` (Service), [`resource::ResourceRequest`]
+//! (Resource), and [`task::TaskDescription`] (Task).
+
+pub mod provider;
+pub mod resource;
+pub mod task;
+
+pub use provider::{Credentials, ProviderConfig};
+pub use resource::{ResourceRequest, ServiceKind};
+pub use task::{Payload, TaskDescription, TaskId, TaskKind, TaskState};

@@ -1,0 +1,168 @@
+//! Provider API: credentials and provider configuration.
+//!
+//! Mirrors the paper's `Provider` class (§3.2): it loads "the credentials
+//! and cloud provider configuration" and performs "the credential
+//! validations" that gate the startup of Hydra's engine.
+
+use crate::sim::provider::{PlatformProfile, ProviderId};
+use crate::util::toml_lite::TomlDoc;
+
+/// Credentials for one provider. In the simulation these are validated
+/// structurally (format + checksum handshake) rather than against a live
+/// identity service.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Credentials {
+    pub access_key: String,
+    pub secret_key: String,
+}
+
+impl Credentials {
+    pub fn new(access_key: impl Into<String>, secret_key: impl Into<String>) -> Credentials {
+        Credentials { access_key: access_key.into(), secret_key: secret_key.into() }
+    }
+
+    /// Structural validation: non-empty, prefixed access key, minimum
+    /// secret entropy length. The shape mimics real provider key formats
+    /// so config mistakes surface before any submission.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.access_key.is_empty() || self.secret_key.is_empty() {
+            return Err("credentials must not be empty".into());
+        }
+        if !self.access_key.starts_with("HK-") {
+            return Err(format!(
+                "access key '{}' must start with 'HK-'",
+                self.access_key
+            ));
+        }
+        if self.secret_key.len() < 16 {
+            return Err("secret key must be at least 16 characters".into());
+        }
+        Ok(())
+    }
+
+    /// Deterministic "handshake" token derived from the key pair — the
+    /// simulated analogue of a provider auth round-trip.
+    pub fn handshake_token(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self.access_key.bytes().chain(self.secret_key.bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// Configuration for one provider connection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProviderConfig {
+    pub id: ProviderId,
+    pub credentials: Credentials,
+    pub region: String,
+    pub enabled: bool,
+}
+
+impl ProviderConfig {
+    /// A ready-to-use config for tests/examples.
+    pub fn simulated(id: ProviderId) -> ProviderConfig {
+        ProviderConfig {
+            id,
+            credentials: Credentials::new(
+                format!("HK-{}", id.short_name()),
+                format!("sim-secret-{:024}", id.short_name().len()),
+            ),
+            region: "sim-east-1".into(),
+            enabled: true,
+        }
+    }
+
+    pub fn profile(&self) -> PlatformProfile {
+        PlatformProfile::of(self.id)
+    }
+
+    /// Parse the `[provider.<name>]` sections of a config document.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Vec<ProviderConfig>, String> {
+        let mut out = Vec::new();
+        for section in doc.subsections("provider").collect::<Vec<_>>() {
+            let name = section.strip_prefix("provider.").unwrap();
+            let id = ProviderId::parse(name)
+                .ok_or_else(|| format!("unknown provider '{name}' in config"))?;
+            let access = doc
+                .str(section, "access_key")
+                .ok_or_else(|| format!("{section}: missing access_key"))?;
+            let secret = doc
+                .str(section, "secret_key")
+                .ok_or_else(|| format!("{section}: missing secret_key"))?;
+            out.push(ProviderConfig {
+                id,
+                credentials: Credentials::new(access, secret),
+                region: doc.str(section, "region").unwrap_or("sim-east-1").to_string(),
+                enabled: doc.bool_or(section, "enabled", true),
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml_lite;
+
+    #[test]
+    fn simulated_configs_validate() {
+        for id in ProviderId::ALL {
+            let c = ProviderConfig::simulated(id);
+            assert!(c.credentials.validate().is_ok(), "{id}");
+            assert!(c.enabled);
+        }
+    }
+
+    #[test]
+    fn credential_format_enforced() {
+        assert!(Credentials::new("", "x".repeat(20)).validate().is_err());
+        assert!(Credentials::new("AK-wrongprefix", "x".repeat(20)).validate().is_err());
+        assert!(Credentials::new("HK-ok", "short").validate().is_err());
+        assert!(Credentials::new("HK-ok", "x".repeat(16)).validate().is_ok());
+    }
+
+    #[test]
+    fn handshake_deterministic_and_key_sensitive() {
+        let a = Credentials::new("HK-a", "x".repeat(20));
+        let b = Credentials::new("HK-b", "x".repeat(20));
+        assert_eq!(a.handshake_token(), a.handshake_token());
+        assert_ne!(a.handshake_token(), b.handshake_token());
+    }
+
+    #[test]
+    fn from_toml_parses_providers() {
+        let doc = toml_lite::parse(
+            r#"
+[provider.aws]
+access_key = "HK-aws"
+secret_key = "0123456789abcdef"
+region = "us-east-1"
+
+[provider.bridges2]
+access_key = "HK-b2"
+secret_key = "0123456789abcdef"
+enabled = false
+"#,
+        )
+        .unwrap();
+        let cfgs = ProviderConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfgs.len(), 2);
+        let aws = cfgs.iter().find(|c| c.id == ProviderId::Aws).unwrap();
+        assert_eq!(aws.region, "us-east-1");
+        assert!(aws.enabled);
+        let b2 = cfgs.iter().find(|c| c.id == ProviderId::Bridges2).unwrap();
+        assert!(!b2.enabled);
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_provider_and_missing_keys() {
+        let doc = toml_lite::parse("[provider.gcp]\naccess_key = \"HK-x\"\n").unwrap();
+        assert!(ProviderConfig::from_toml(&doc).is_err());
+        let doc = toml_lite::parse("[provider.aws]\naccess_key = \"HK-x\"\n").unwrap();
+        assert!(ProviderConfig::from_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Resource API: what the user asks each provider for.
+//!
+//! Mirrors the paper's `Resource` class (§3.2): per-provider methods let
+//! users pick the service type (container service vs batch system), the
+//! amount of resources, and service-specific properties.
+
+use crate::sim::kubernetes::ClusterSpec;
+use crate::sim::provider::{PlatformKind, PlatformProfile, ProviderId};
+
+/// The service level the resources are acquired through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceKind {
+    /// Container-as-a-Service: a (multi-node) Kubernetes cluster
+    /// (EKS / AKS / custom image on the NSF clouds).
+    Caas,
+    /// HPC batch system driven through a pilot (RADICAL-Pilot connector).
+    Batch,
+}
+
+/// A resource request against one provider.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceRequest {
+    pub provider: ProviderId,
+    pub service: ServiceKind,
+    pub nodes: u32,
+    /// vCPUs per node (CaaS). For Batch requests the platform's
+    /// `cores_per_node` is authoritative (Bridges2 hands out whole nodes).
+    pub vcpus_per_node: u32,
+    pub gpus_per_node: u32,
+    pub mem_mb_per_node: u64,
+}
+
+impl ResourceRequest {
+    /// A Kubernetes cluster on a cloud provider.
+    pub fn kubernetes(provider: ProviderId, nodes: u32, vcpus_per_node: u32) -> ResourceRequest {
+        ResourceRequest {
+            provider,
+            service: ServiceKind::Caas,
+            nodes,
+            vcpus_per_node,
+            gpus_per_node: 0,
+            mem_mb_per_node: 4096 * vcpus_per_node as u64,
+        }
+    }
+
+    /// A pilot on an HPC platform (whole nodes).
+    pub fn pilot(provider: ProviderId, nodes: u32) -> ResourceRequest {
+        let profile = PlatformProfile::of(provider);
+        ResourceRequest {
+            provider,
+            service: ServiceKind::Batch,
+            nodes,
+            vcpus_per_node: profile.cores_per_node,
+            gpus_per_node: 0,
+            mem_mb_per_node: 2048 * profile.cores_per_node as u64,
+        }
+    }
+
+    pub fn with_gpus_per_node(mut self, gpus: u32) -> Self {
+        self.gpus_per_node = gpus;
+        self
+    }
+
+    pub fn with_mem_mb_per_node(mut self, mem: u64) -> Self {
+        self.mem_mb_per_node = mem;
+        self
+    }
+
+    pub fn total_vcpus(&self) -> u32 {
+        self.nodes * self.vcpus_per_node
+    }
+
+    /// Validate the request against the provider's platform kind and
+    /// simulated allocation limits.
+    pub fn validate(&self) -> Result<(), String> {
+        let profile = PlatformProfile::of(self.provider);
+        if self.nodes == 0 {
+            return Err(format!("{}: nodes must be >= 1", self.provider));
+        }
+        match (self.service, profile.kind) {
+            (ServiceKind::Caas, PlatformKind::Hpc) => {
+                return Err(format!("{}: CaaS service is not offered on HPC", self.provider));
+            }
+            (ServiceKind::Batch, PlatformKind::Cloud) => {
+                return Err(format!("{}: batch service is not offered on clouds", self.provider));
+            }
+            _ => {}
+        }
+        if self.service == ServiceKind::Caas {
+            if self.vcpus_per_node == 0 {
+                return Err(format!("{}: vcpus_per_node must be >= 1", self.provider));
+            }
+            if self.vcpus_per_node > profile.cores_per_node {
+                return Err(format!(
+                    "{}: largest VM offers {} vCPUs (requested {})",
+                    self.provider, profile.cores_per_node, self.vcpus_per_node
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The simulated cluster this request materializes as.
+    pub fn cluster_spec(&self) -> ClusterSpec {
+        ClusterSpec {
+            nodes: self.nodes,
+            vcpus_per_node: self.vcpus_per_node,
+            gpus_per_node: self.gpus_per_node,
+            mem_mb_per_node: self.mem_mb_per_node,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kubernetes_request_defaults() {
+        let r = ResourceRequest::kubernetes(ProviderId::Aws, 2, 16);
+        assert_eq!(r.service, ServiceKind::Caas);
+        assert_eq!(r.total_vcpus(), 32);
+        assert_eq!(r.mem_mb_per_node, 64 * 1024);
+        assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn pilot_uses_whole_nodes() {
+        let r = ResourceRequest::pilot(ProviderId::Bridges2, 2);
+        assert_eq!(r.service, ServiceKind::Batch);
+        assert_eq!(r.vcpus_per_node, 128);
+        assert_eq!(r.total_vcpus(), 256);
+        assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn service_platform_mismatches_rejected() {
+        assert!(ResourceRequest::kubernetes(ProviderId::Bridges2, 1, 16).validate().is_err());
+        let mut r = ResourceRequest::pilot(ProviderId::Bridges2, 1);
+        r.provider = ProviderId::Aws;
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn vm_size_limits_enforced() {
+        // Paper §5.2: "the largest VM on Jetstream2 and Chameleon have 16 vCPUs".
+        assert!(ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 17).validate().is_err());
+        assert!(ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 16).validate().is_ok());
+        assert!(ResourceRequest::kubernetes(ProviderId::Aws, 1, 0).validate().is_err());
+        let mut r = ResourceRequest::kubernetes(ProviderId::Aws, 1, 4);
+        r.nodes = 0;
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_spec_mirrors_request() {
+        let r = ResourceRequest::kubernetes(ProviderId::Azure, 3, 8).with_gpus_per_node(2);
+        let c = r.cluster_spec();
+        assert_eq!(c.nodes, 3);
+        assert_eq!(c.vcpus_per_node, 8);
+        assert_eq!(c.gpus_per_node, 2);
+    }
+}

@@ -1,0 +1,282 @@
+//! Task API: descriptions, states, and the task lifecycle.
+//!
+//! Mirrors the paper's `Task` class (§3.2): a task maps to a regular
+//! executable, a cloud pod, or a container; it carries resource
+//! requirements (CPU/GPU units, memory), an optional explicit provider
+//! binding, and holds its current/final state plus tracing events.
+
+use crate::sim::provider::ProviderId;
+use std::fmt;
+
+/// Stable task identifier issued by the broker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "task.{:06}", self.0)
+    }
+}
+
+/// How the task is realized on the platform (paper: "executables or
+/// containers", chosen by brokering policy).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskKind {
+    /// Plain executable (HPC path; Experiment 3B's `sleep`, FACTS steps).
+    Executable { command: String },
+    /// Container image (CaaS path; Experiments 1–3 `noop` containers).
+    Container { image: String },
+}
+
+impl TaskKind {
+    pub fn is_container(&self) -> bool {
+        matches!(self, TaskKind::Container { .. })
+    }
+}
+
+/// What the task actually does when it runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Zero-duration task (Experiments 1, 2, 3A): isolates broker and
+    /// platform overheads.
+    Noop,
+    /// Fixed virtual duration in seconds, independent of platform speed
+    /// (Experiment 3B's `sleep`).
+    Sleep(f64),
+    /// Real work: seconds on an AWS-reference core; scales with the
+    /// platform's `cpu_speed`.
+    Work(f64),
+    /// A FACTS compute step executed through the PJRT runtime; the string
+    /// is the artifact name (e.g. `fit_k2_default`). Its *measured* wall
+    /// time becomes the virtual work, so platform comparisons reflect
+    /// genuine compute (see `facts`).
+    Compute(String),
+}
+
+/// User-facing task description (built via the builder methods).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDescription {
+    pub name: String,
+    pub kind: TaskKind,
+    pub cpus: u32,
+    pub gpus: u32,
+    pub mem_mb: u64,
+    pub payload: Payload,
+    /// Explicit provider binding; `None` lets the brokering policy decide.
+    pub provider: Option<ProviderId>,
+}
+
+impl TaskDescription {
+    pub fn container(name: impl Into<String>, image: impl Into<String>) -> TaskDescription {
+        TaskDescription {
+            name: name.into(),
+            kind: TaskKind::Container { image: image.into() },
+            cpus: 1,
+            gpus: 0,
+            mem_mb: 256,
+            payload: Payload::Noop,
+            provider: None,
+        }
+    }
+
+    pub fn executable(name: impl Into<String>, command: impl Into<String>) -> TaskDescription {
+        TaskDescription {
+            name: name.into(),
+            kind: TaskKind::Executable { command: command.into() },
+            cpus: 1,
+            gpus: 0,
+            mem_mb: 256,
+            payload: Payload::Noop,
+            provider: None,
+        }
+    }
+
+    pub fn with_cpus(mut self, cpus: u32) -> Self {
+        self.cpus = cpus;
+        self
+    }
+
+    pub fn with_gpus(mut self, gpus: u32) -> Self {
+        self.gpus = gpus;
+        self
+    }
+
+    pub fn with_mem_mb(mut self, mem_mb: u64) -> Self {
+        self.mem_mb = mem_mb;
+        self
+    }
+
+    pub fn with_payload(mut self, payload: Payload) -> Self {
+        self.payload = payload;
+        self
+    }
+
+    pub fn on(mut self, provider: ProviderId) -> Self {
+        self.provider = Some(provider);
+        self
+    }
+
+    /// Structural validation performed by the broker before accepting the
+    /// task (the `Validated` state gate).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("task name must not be empty".into());
+        }
+        if self.cpus == 0 {
+            return Err(format!("task '{}': cpus must be >= 1", self.name));
+        }
+        if self.mem_mb == 0 {
+            return Err(format!("task '{}': mem_mb must be >= 1", self.name));
+        }
+        match &self.kind {
+            TaskKind::Container { image } if image.is_empty() => {
+                Err(format!("task '{}': container image must not be empty", self.name))
+            }
+            TaskKind::Executable { command } if command.is_empty() => {
+                Err(format!("task '{}': executable command must not be empty", self.name))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Task lifecycle states (paper §3.2: "each task object also holds
+/// information about its current/final state and tracing events").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskState {
+    New,
+    Validated,
+    Partitioned,
+    Submitted,
+    Running,
+    Done,
+    Failed,
+    Canceled,
+}
+
+impl TaskState {
+    pub fn is_final(self) -> bool {
+        matches!(self, TaskState::Done | TaskState::Failed | TaskState::Canceled)
+    }
+
+    /// Legal forward transitions of the state machine. Cancellation is
+    /// allowed from any non-final state; failure from any state at or
+    /// after validation.
+    pub fn can_transition_to(self, next: TaskState) -> bool {
+        use TaskState::*;
+        if self.is_final() {
+            return false;
+        }
+        match (self, next) {
+            (New, Validated) => true,
+            (Validated, Partitioned) => true,
+            (Partitioned, Submitted) => true,
+            (Submitted, Running) => true,
+            (Running, Done) => true,
+            (_, Canceled) => true,
+            (s, Failed) => s != New,
+            _ => false,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TaskState::New => "NEW",
+            TaskState::Validated => "VALIDATED",
+            TaskState::Partitioned => "PARTITIONED",
+            TaskState::Submitted => "SUBMITTED",
+            TaskState::Running => "RUNNING",
+            TaskState::Done => "DONE",
+            TaskState::Failed => "FAILED",
+            TaskState::Canceled => "CANCELED",
+        }
+    }
+}
+
+impl fmt::Display for TaskState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let t = TaskDescription::container("t0", "noop:latest");
+        assert_eq!(t.cpus, 1);
+        assert_eq!(t.gpus, 0);
+        assert!(t.kind.is_container());
+        assert_eq!(t.payload, Payload::Noop);
+        assert!(t.provider.is_none());
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn builder_chains() {
+        let t = TaskDescription::executable("fit", "facts-fit")
+            .with_cpus(4)
+            .with_gpus(1)
+            .with_mem_mb(2048)
+            .with_payload(Payload::Work(30.0))
+            .on(ProviderId::Bridges2);
+        assert_eq!(t.cpus, 4);
+        assert_eq!(t.gpus, 1);
+        assert_eq!(t.mem_mb, 2048);
+        assert_eq!(t.provider, Some(ProviderId::Bridges2));
+        assert!(!t.kind.is_container());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_tasks() {
+        assert!(TaskDescription::container("", "img").validate().is_err());
+        assert!(TaskDescription::container("t", "").validate().is_err());
+        assert!(TaskDescription::executable("t", "").validate().is_err());
+        assert!(TaskDescription::container("t", "img").with_cpus(0).validate().is_err());
+        assert!(TaskDescription::container("t", "img").with_mem_mb(0).validate().is_err());
+    }
+
+    #[test]
+    fn state_machine_happy_path() {
+        use TaskState::*;
+        let path = [New, Validated, Partitioned, Submitted, Running, Done];
+        for w in path.windows(2) {
+            assert!(w[0].can_transition_to(w[1]), "{:?} -> {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn state_machine_rejects_skips_and_regressions() {
+        use TaskState::*;
+        assert!(!New.can_transition_to(Submitted));
+        assert!(!Validated.can_transition_to(Running));
+        assert!(!Running.can_transition_to(Submitted));
+        assert!(!Done.can_transition_to(Running));
+        assert!(!Failed.can_transition_to(Done));
+        assert!(!Canceled.can_transition_to(Validated));
+    }
+
+    #[test]
+    fn cancel_and_fail_edges() {
+        use TaskState::*;
+        for s in [New, Validated, Partitioned, Submitted, Running] {
+            assert!(s.can_transition_to(Canceled), "{s:?}");
+        }
+        assert!(!New.can_transition_to(Failed), "unvalidated tasks cannot fail");
+        for s in [Validated, Partitioned, Submitted, Running] {
+            assert!(s.can_transition_to(Failed), "{s:?}");
+        }
+        for s in [Done, Failed, Canceled] {
+            assert!(s.is_final());
+            assert!(!s.can_transition_to(Canceled));
+        }
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(TaskId(7).to_string(), "task.000007");
+        assert_eq!(TaskState::Running.to_string(), "RUNNING");
+    }
+}

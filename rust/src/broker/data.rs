@@ -1,0 +1,427 @@
+//! Data Manager: inter- and cross-cloud/HPC data operations.
+//!
+//! Paper §3.1: "The manager implements data operations like copy, move,
+//! link, delete, and list, both locally and remotely ... supports
+//! integration with different data management services as backends and
+//! exposes their operations via a unified API."
+//!
+//! Two backends:
+//! * [`LocalFs`] — a *real* filesystem backend rooted in a sandbox
+//!   directory (all paths are confined; `..` escapes are rejected).
+//! * [`SimObjectStore`] — a simulated remote object store with a bandwidth
+//!   model, standing in for the cloud/HPC storage services (17.2 PB on
+//!   Jetstream2 etc.) we do not have.
+//!
+//! The unified entry point is [`DataManager`], which routes `site://path`
+//! URIs to registered backends and can build staging plans across sites
+//! (e.g. FACTS pre-staging input data on each target platform, §5.4).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Data operation errors.
+#[derive(Debug)]
+pub enum DataError {
+    UnknownSite(String),
+    BadUri(String),
+    NotFound(String),
+    Escape(String),
+    Io(String),
+}
+
+impl std::fmt::Display for DataError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DataError::UnknownSite(s) => write!(f, "unknown site '{s}'"),
+            DataError::BadUri(u) => write!(f, "bad data uri '{u}' (want site://path)"),
+            DataError::NotFound(p) => write!(f, "no such object '{p}'"),
+            DataError::Escape(p) => write!(f, "path '{p}' escapes the site sandbox"),
+            DataError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DataError {}
+
+/// A storage backend: byte-addressed objects under relative paths.
+pub trait StorageBackend: Send {
+    fn put(&mut self, path: &str, data: &[u8]) -> Result<(), DataError>;
+    fn get(&self, path: &str) -> Result<Vec<u8>, DataError>;
+    fn delete(&mut self, path: &str) -> Result<(), DataError>;
+    fn list(&self, prefix: &str) -> Result<Vec<String>, DataError>;
+    fn exists(&self, path: &str) -> bool;
+    /// Simulated seconds to transfer `bytes` in or out of this backend
+    /// (0 for local disk — its cost is the real I/O itself).
+    fn transfer_secs(&self, bytes: u64) -> f64;
+}
+
+// ---------------------------------------------------------------------------
+// LocalFs
+// ---------------------------------------------------------------------------
+
+/// Real filesystem backend rooted at a sandbox directory.
+pub struct LocalFs {
+    root: PathBuf,
+}
+
+impl LocalFs {
+    pub fn new(root: impl Into<PathBuf>) -> Result<LocalFs, DataError> {
+        let root = root.into();
+        std::fs::create_dir_all(&root).map_err(|e| DataError::Io(e.to_string()))?;
+        Ok(LocalFs { root })
+    }
+
+    fn resolve(&self, path: &str) -> Result<PathBuf, DataError> {
+        let rel = Path::new(path);
+        if rel.is_absolute()
+            || rel
+                .components()
+                .any(|c| matches!(c, std::path::Component::ParentDir))
+        {
+            return Err(DataError::Escape(path.to_string()));
+        }
+        Ok(self.root.join(rel))
+    }
+}
+
+impl StorageBackend for LocalFs {
+    fn put(&mut self, path: &str, data: &[u8]) -> Result<(), DataError> {
+        let p = self.resolve(path)?;
+        if let Some(parent) = p.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| DataError::Io(e.to_string()))?;
+        }
+        std::fs::write(&p, data).map_err(|e| DataError::Io(e.to_string()))
+    }
+
+    fn get(&self, path: &str) -> Result<Vec<u8>, DataError> {
+        let p = self.resolve(path)?;
+        std::fs::read(&p).map_err(|_| DataError::NotFound(path.to_string()))
+    }
+
+    fn delete(&mut self, path: &str) -> Result<(), DataError> {
+        let p = self.resolve(path)?;
+        std::fs::remove_file(&p).map_err(|_| DataError::NotFound(path.to_string()))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, DataError> {
+        // Walk the sandbox and filter by prefix (flat namespace view).
+        fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) {
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    let p = e.path();
+                    if p.is_dir() {
+                        walk(&p, root, out);
+                    } else if let Ok(rel) = p.strip_prefix(root) {
+                        out.push(rel.to_string_lossy().replace('\\', "/"));
+                    }
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.root, &self.root, &mut out);
+        out.retain(|p| p.starts_with(prefix));
+        out.sort();
+        Ok(out)
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        self.resolve(path).map(|p| p.exists()).unwrap_or(false)
+    }
+
+    fn transfer_secs(&self, _bytes: u64) -> f64 {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimObjectStore
+// ---------------------------------------------------------------------------
+
+/// Simulated remote object store with a bandwidth/latency model.
+pub struct SimObjectStore {
+    objects: HashMap<String, Vec<u8>>,
+    /// Sustained bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-request latency in seconds.
+    pub latency_s: f64,
+}
+
+impl SimObjectStore {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> SimObjectStore {
+        SimObjectStore { objects: HashMap::new(), bandwidth_bps, latency_s }
+    }
+}
+
+impl StorageBackend for SimObjectStore {
+    fn put(&mut self, path: &str, data: &[u8]) -> Result<(), DataError> {
+        self.objects.insert(path.to_string(), data.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, path: &str) -> Result<Vec<u8>, DataError> {
+        self.objects
+            .get(path)
+            .cloned()
+            .ok_or_else(|| DataError::NotFound(path.to_string()))
+    }
+
+    fn delete(&mut self, path: &str) -> Result<(), DataError> {
+        self.objects
+            .remove(path)
+            .map(|_| ())
+            .ok_or_else(|| DataError::NotFound(path.to_string()))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, DataError> {
+        let mut v: Vec<String> = self
+            .objects
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        v.sort();
+        Ok(v)
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        self.objects.contains_key(path)
+    }
+
+    fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DataManager
+// ---------------------------------------------------------------------------
+
+/// Result of a transfer: bytes moved and the simulated seconds it took
+/// (source egress + destination ingress).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferReport {
+    pub bytes: u64,
+    pub virtual_secs: f64,
+}
+
+/// Unified multi-site data API, keyed by site name.
+#[derive(Default)]
+pub struct DataManager {
+    sites: HashMap<String, Box<dyn StorageBackend>>,
+}
+
+impl DataManager {
+    pub fn new() -> DataManager {
+        DataManager { sites: HashMap::new() }
+    }
+
+    pub fn register(&mut self, site: impl Into<String>, backend: Box<dyn StorageBackend>) {
+        self.sites.insert(site.into(), backend);
+    }
+
+    pub fn sites(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.sites.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn split(uri: &str) -> Result<(&str, &str), DataError> {
+        uri.split_once("://").ok_or_else(|| DataError::BadUri(uri.to_string()))
+    }
+
+    fn site(&self, name: &str) -> Result<&dyn StorageBackend, DataError> {
+        self.sites
+            .get(name)
+            .map(|b| b.as_ref())
+            .ok_or_else(|| DataError::UnknownSite(name.to_string()))
+    }
+
+    fn site_mut(&mut self, name: &str) -> Result<&mut Box<dyn StorageBackend>, DataError> {
+        self.sites
+            .get_mut(name)
+            .ok_or_else(|| DataError::UnknownSite(name.to_string()))
+    }
+
+    pub fn put(&mut self, uri: &str, data: &[u8]) -> Result<TransferReport, DataError> {
+        let (site, path) = Self::split(uri)?;
+        let b = self.site_mut(site)?;
+        b.put(path, data)?;
+        Ok(TransferReport { bytes: data.len() as u64, virtual_secs: b.transfer_secs(data.len() as u64) })
+    }
+
+    pub fn get(&self, uri: &str) -> Result<Vec<u8>, DataError> {
+        let (site, path) = Self::split(uri)?;
+        self.site(site)?.get(path)
+    }
+
+    pub fn exists(&self, uri: &str) -> Result<bool, DataError> {
+        let (site, path) = Self::split(uri)?;
+        Ok(self.site(site)?.exists(path))
+    }
+
+    pub fn list(&self, uri_prefix: &str) -> Result<Vec<String>, DataError> {
+        let (site, prefix) = Self::split(uri_prefix)?;
+        self.site(site)?.list(prefix)
+    }
+
+    pub fn delete(&mut self, uri: &str) -> Result<(), DataError> {
+        let (site, path) = Self::split(uri)?;
+        self.site_mut(site)?.delete(path)
+    }
+
+    /// Copy across (or within) sites; returns the transfer cost.
+    pub fn copy(&mut self, src: &str, dst: &str) -> Result<TransferReport, DataError> {
+        let data = self.get(src)?;
+        let (ssite, _) = Self::split(src)?;
+        let egress = self.site(ssite)?.transfer_secs(data.len() as u64);
+        let mut r = self.put(dst, &data)?;
+        r.virtual_secs += egress;
+        Ok(r)
+    }
+
+    /// Move = copy + delete source.
+    pub fn mv(&mut self, src: &str, dst: &str) -> Result<TransferReport, DataError> {
+        let r = self.copy(src, dst)?;
+        self.delete(src)?;
+        Ok(r)
+    }
+
+    /// Link: cheap alias within one site (object stores: server-side copy;
+    /// local fs: content copy, as portable fallback).
+    pub fn link(&mut self, src: &str, dst: &str) -> Result<(), DataError> {
+        let (ssite, _) = Self::split(src)?;
+        let (dsite, _) = Self::split(dst)?;
+        if ssite != dsite {
+            return Err(DataError::BadUri(format!(
+                "link requires same site: {ssite} vs {dsite}"
+            )));
+        }
+        let data = self.get(src)?;
+        self.put(dst, &data)?;
+        Ok(())
+    }
+
+    /// Stage one object onto many sites (FACTS pre-staging, §5.4): returns
+    /// per-site transfer reports.
+    pub fn stage_to_sites(
+        &mut self,
+        src: &str,
+        sites: &[&str],
+        dst_path: &str,
+    ) -> Result<Vec<(String, TransferReport)>, DataError> {
+        let mut out = Vec::new();
+        for site in sites {
+            let dst = format!("{site}://{dst_path}");
+            let r = self.copy(src, &dst)?;
+            out.push((site.to_string(), r));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("hydra-data-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn manager(tag: &str) -> (DataManager, PathBuf) {
+        let dir = tmpdir(tag);
+        let mut m = DataManager::new();
+        m.register("local", Box::new(LocalFs::new(dir.clone()).unwrap()));
+        m.register("jet2", Box::new(SimObjectStore::new(100e6, 0.05)));
+        m.register("aws", Box::new(SimObjectStore::new(50e6, 0.08)));
+        (m, dir)
+    }
+
+    #[test]
+    fn put_get_roundtrip_on_both_backends() {
+        let (mut m, dir) = manager("rt");
+        for uri in ["local://a/b.bin", "jet2://a/b.bin"] {
+            m.put(uri, b"hello").unwrap();
+            assert_eq!(m.get(uri).unwrap(), b"hello");
+            assert!(m.exists(uri).unwrap());
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn list_filters_by_prefix() {
+        let (mut m, dir) = manager("ls");
+        m.put("jet2://facts/input/t.nc", b"1").unwrap();
+        m.put("jet2://facts/input/s.nc", b"2").unwrap();
+        m.put("jet2://other/x", b"3").unwrap();
+        let l = m.list("jet2://facts/").unwrap();
+        assert_eq!(l, vec!["facts/input/s.nc".to_string(), "facts/input/t.nc".to_string()]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn copy_across_sites_accumulates_transfer_cost() {
+        let (mut m, dir) = manager("cp");
+        let payload = vec![0u8; 1_000_000];
+        m.put("jet2://d.bin", &payload).unwrap();
+        let r = m.copy("jet2://d.bin", "aws://d.bin").unwrap();
+        assert_eq!(r.bytes, 1_000_000);
+        // egress at 100 MB/s + ingress at 50 MB/s + latencies
+        let want = 0.05 + 1e6 / 100e6 + 0.08 + 1e6 / 50e6;
+        assert!((r.virtual_secs - want).abs() < 1e-9, "{}", r.virtual_secs);
+        assert!(m.exists("aws://d.bin").unwrap());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn mv_removes_source() {
+        let (mut m, dir) = manager("mv");
+        m.put("jet2://x", b"d").unwrap();
+        m.mv("jet2://x", "aws://x").unwrap();
+        assert!(!m.exists("jet2://x").unwrap());
+        assert!(m.exists("aws://x").unwrap());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn link_same_site_only() {
+        let (mut m, dir) = manager("ln");
+        m.put("jet2://orig", b"d").unwrap();
+        m.link("jet2://orig", "jet2://alias").unwrap();
+        assert_eq!(m.get("jet2://alias").unwrap(), b"d");
+        assert!(m.link("jet2://orig", "aws://alias").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sandbox_escape_rejected() {
+        let (mut m, dir) = manager("esc");
+        assert!(matches!(m.put("local://../evil", b"x"), Err(DataError::Escape(_))));
+        assert!(matches!(m.put("local:///abs", b"x"), Err(DataError::Escape(_))));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn errors_for_unknown_site_and_bad_uri() {
+        let (m, dir) = manager("err");
+        assert!(matches!(m.get("nope://x"), Err(DataError::UnknownSite(_))));
+        assert!(matches!(m.get("no-scheme"), Err(DataError::BadUri(_))));
+        assert!(matches!(m.get("jet2://missing"), Err(DataError::NotFound(_))));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn staging_to_multiple_sites() {
+        let (mut m, dir) = manager("stage");
+        m.put("local://facts-input.nc", &vec![1u8; 10_000]).unwrap();
+        let reports = m
+            .stage_to_sites("local://facts-input.nc", &["jet2", "aws"], "facts/in.nc")
+            .unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!(m.exists("jet2://facts/in.nc").unwrap());
+        assert!(m.exists("aws://facts/in.nc").unwrap());
+        assert!(reports[1].1.virtual_secs > reports[0].1.virtual_secs); // aws slower
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

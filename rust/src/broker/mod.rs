@@ -1,0 +1,169 @@
+//! The Hydra broker — the paper's system contribution (§3).
+//!
+//! * [`provider_proxy`] — credential validation and provider bring-up.
+//! * [`service_proxy`] — concurrent service managers + workload mapping.
+//! * [`caas`] — CaaS Manager (Kubernetes clusters, pod workloads).
+//! * [`hpc`] — HPC Manager (pilot connector, bulk task submission).
+//! * [`faas`] — FaaS Manager (the §3.1 extensibility example, implemented).
+//! * [`data`] — Data Manager (copy/move/link/delete/list, staging).
+//! * [`partitioner`] — MCPP/SCPP pod partitioning + manifest building.
+//! * [`policy`] — task→provider binding policies.
+//! * [`state`] — task registry, state machine, tracing.
+//!
+//! [`Hydra`] is the user-facing facade combining all of the above.
+
+pub mod caas;
+pub mod data;
+pub mod faas;
+pub mod hpc;
+pub mod partitioner;
+pub mod policy;
+pub mod provider_proxy;
+pub mod service_proxy;
+pub mod state;
+
+use crate::api::resource::ResourceRequest;
+use crate::api::task::TaskDescription;
+use crate::api::ProviderConfig;
+use crate::sim::provider::ProviderId;
+pub use partitioner::{PartitionModel, PodBuildMode};
+pub use policy::BrokerPolicy;
+pub use service_proxy::{BrokerError, BrokerRun, ServiceProxy};
+
+/// User-facing facade: configure providers + resources, then submit
+/// workloads.
+///
+/// ```no_run
+/// use hydra::broker::{Hydra, BrokerPolicy};
+/// use hydra::api::{ResourceRequest, TaskDescription};
+/// use hydra::sim::provider::ProviderId;
+///
+/// let hydra = Hydra::builder()
+///     .simulated_provider(ProviderId::Aws)
+///     .resource(ResourceRequest::kubernetes(ProviderId::Aws, 1, 8))
+///     .build()
+///     .unwrap();
+/// let tasks = (0..32)
+///     .map(|i| TaskDescription::container(format!("t{i}"), "noop:latest"))
+///     .collect();
+/// let run = hydra.submit(tasks, &BrokerPolicy::RoundRobin).unwrap();
+/// assert_eq!(run.aggregate.tasks, 32);
+/// ```
+pub struct Hydra {
+    proxy: ServiceProxy,
+}
+
+/// Builder for [`Hydra`].
+#[derive(Default)]
+pub struct HydraBuilder {
+    configs: Vec<ProviderConfig>,
+    resources: Vec<ResourceRequest>,
+    partition_model: Option<PartitionModel>,
+    build_mode: Option<PodBuildMode>,
+    seed: Option<u64>,
+}
+
+impl HydraBuilder {
+    pub fn provider(mut self, cfg: ProviderConfig) -> Self {
+        self.configs.push(cfg);
+        self
+    }
+
+    pub fn simulated_provider(mut self, id: ProviderId) -> Self {
+        self.configs.push(ProviderConfig::simulated(id));
+        self
+    }
+
+    pub fn resource(mut self, req: ResourceRequest) -> Self {
+        self.resources.push(req);
+        self
+    }
+
+    pub fn partition_model(mut self, m: PartitionModel) -> Self {
+        self.partition_model = Some(m);
+        self
+    }
+
+    pub fn build_mode(mut self, b: PodBuildMode) -> Self {
+        self.build_mode = Some(b);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn build(self) -> Result<Hydra, BrokerError> {
+        let providers = provider_proxy::ProviderProxy::connect(self.configs)
+            .map_err(|e| BrokerError::Resource(e.to_string()))?;
+        let mut proxy = ServiceProxy::new(providers);
+        if let Some(m) = self.partition_model {
+            proxy.partition_model = m;
+        }
+        if let Some(b) = self.build_mode {
+            proxy.build_mode = b;
+        }
+        if let Some(s) = self.seed {
+            proxy.seed = s;
+        }
+        for r in self.resources {
+            proxy.acquire(r)?;
+        }
+        Ok(Hydra { proxy })
+    }
+}
+
+impl Hydra {
+    pub fn builder() -> HydraBuilder {
+        HydraBuilder::default()
+    }
+
+    /// Broker one workload across the acquired resources.
+    pub fn submit(
+        &self,
+        tasks: Vec<TaskDescription>,
+        policy: &BrokerPolicy,
+    ) -> Result<BrokerRun, BrokerError> {
+        self.proxy.run(tasks, policy)
+    }
+
+    pub fn registry(&self) -> &state::TaskRegistry {
+        &self.proxy.registry
+    }
+
+    pub fn service_proxy(&self) -> &ServiceProxy {
+        &self.proxy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn facade_end_to_end() {
+        let hydra = Hydra::builder()
+            .simulated_provider(ProviderId::Jetstream2)
+            .simulated_provider(ProviderId::Bridges2)
+            .resource(ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 16))
+            .resource(ResourceRequest::pilot(ProviderId::Bridges2, 1))
+            .partition_model(PartitionModel::Scpp)
+            .seed(99)
+            .build()
+            .unwrap();
+        let mut tasks: Vec<TaskDescription> = (0..40)
+            .map(|i| TaskDescription::container(format!("c{i}"), "noop:latest"))
+            .collect();
+        tasks.extend((0..40).map(|i| TaskDescription::executable(format!("e{i}"), "noop")));
+        let run = hydra.submit(tasks, &BrokerPolicy::ByTaskKind).unwrap();
+        assert_eq!(run.aggregate.tasks, 80);
+        assert!(hydra.registry().all_final());
+        assert!(hydra.registry().trace_len() >= 80 * 6);
+    }
+
+    #[test]
+    fn build_fails_without_valid_providers() {
+        assert!(Hydra::builder().build().is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! Brokering policies: binding tasks to providers.
+//!
+//! "User-specified brokering policies determine whether those tasks are
+//! implemented as executables or containers and executed on cloud or HPC
+//! resources" (paper §1). A policy maps a validated workload onto the set
+//! of acquired providers; explicit per-task bindings always win.
+
+use crate::api::task::{TaskDescription, TaskId};
+use crate::sim::provider::{PlatformKind, PlatformProfile, ProviderId};
+use std::collections::BTreeMap;
+
+/// Placement policy across the acquired providers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BrokerPolicy {
+    /// Cycle tasks across providers in order (the paper's equal split in
+    /// Experiment 2).
+    RoundRobin,
+    /// Containers to cloud providers, executables to HPC platforms
+    /// (Experiment 3B's CON/EXEC split).
+    ByTaskKind,
+    /// Weighted split proportional to the given weights.
+    Weighted(Vec<(ProviderId, f64)>),
+    /// Only explicit `task.on(provider)` bindings; unbound tasks error.
+    ExplicitOnly,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyError {
+    NoProviders,
+    UnboundTask(TaskId),
+    UnknownProvider { task: TaskId, provider: ProviderId },
+    BadWeights(String),
+    /// ByTaskKind had a task kind with no matching platform.
+    NoMatchingPlatform { task: TaskId, needed: &'static str },
+}
+
+impl std::fmt::Display for PolicyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PolicyError::NoProviders => write!(f, "no providers acquired"),
+            PolicyError::UnboundTask(t) => write!(f, "{t} has no provider binding"),
+            PolicyError::UnknownProvider { task, provider } => {
+                write!(f, "{task} bound to unacquired provider {provider}")
+            }
+            PolicyError::BadWeights(m) => write!(f, "bad weights: {m}"),
+            PolicyError::NoMatchingPlatform { task, needed } => {
+                write!(f, "{task} needs a {needed} platform but none was acquired")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PolicyError {}
+
+/// Assignment outcome: per-provider ordered task lists. A `BTreeMap`
+/// keeps provider order deterministic.
+pub type Assignment = BTreeMap<ProviderId, Vec<TaskId>>;
+
+/// Performance-informed weights: proportional to each provider's
+/// effective compute rate (cpu_speed x acquired cores). This is the
+/// paper's §6 observation operationalized: "that information enables
+/// Hydra's users to make binding decisions about tasks and resources
+/// before starting the execution of the workflow".
+pub fn perf_weighted(providers_with_cores: &[(ProviderId, u32)]) -> BrokerPolicy {
+    BrokerPolicy::Weighted(
+        providers_with_cores
+            .iter()
+            .map(|(p, cores)| {
+                let profile = PlatformProfile::of(*p);
+                (*p, profile.cpu_speed * *cores as f64)
+            })
+            .collect(),
+    )
+}
+
+/// Bind every task to exactly one acquired provider.
+///
+/// Invariants (property-tested in `rust/tests/prop_invariants.rs`):
+/// * every input task appears in exactly one provider list;
+/// * only acquired providers appear;
+/// * explicit bindings are honored verbatim.
+pub fn assign(
+    policy: &BrokerPolicy,
+    tasks: &[(TaskId, TaskDescription)],
+    providers: &[ProviderId],
+) -> Result<Assignment, PolicyError> {
+    if providers.is_empty() {
+        return Err(PolicyError::NoProviders);
+    }
+    let mut out: Assignment = providers.iter().map(|p| (*p, Vec::new())).collect();
+
+    // Pass 1: explicit bindings.
+    let mut unbound: Vec<(TaskId, &TaskDescription)> = Vec::new();
+    for (id, t) in tasks {
+        match t.provider {
+            Some(p) => {
+                out.get_mut(&p)
+                    .ok_or(PolicyError::UnknownProvider { task: *id, provider: p })?
+                    .push(*id);
+            }
+            None => unbound.push((*id, t)),
+        }
+    }
+
+    // Pass 2: policy for the rest.
+    match policy {
+        BrokerPolicy::ExplicitOnly => {
+            if let Some((id, _)) = unbound.first() {
+                return Err(PolicyError::UnboundTask(*id));
+            }
+        }
+        BrokerPolicy::RoundRobin => {
+            for (i, (id, _)) in unbound.iter().enumerate() {
+                let p = providers[i % providers.len()];
+                out.get_mut(&p).unwrap().push(*id);
+            }
+        }
+        BrokerPolicy::ByTaskKind => {
+            let clouds: Vec<ProviderId> = providers
+                .iter()
+                .copied()
+                .filter(|p| PlatformProfile::of(*p).kind == PlatformKind::Cloud)
+                .collect();
+            let hpcs: Vec<ProviderId> = providers
+                .iter()
+                .copied()
+                .filter(|p| PlatformProfile::of(*p).kind == PlatformKind::Hpc)
+                .collect();
+            let (mut ci, mut hi) = (0usize, 0usize);
+            for (id, t) in &unbound {
+                if t.kind.is_container() {
+                    if clouds.is_empty() {
+                        return Err(PolicyError::NoMatchingPlatform { task: *id, needed: "cloud" });
+                    }
+                    out.get_mut(&clouds[ci % clouds.len()]).unwrap().push(*id);
+                    ci += 1;
+                } else {
+                    if hpcs.is_empty() {
+                        return Err(PolicyError::NoMatchingPlatform { task: *id, needed: "HPC" });
+                    }
+                    out.get_mut(&hpcs[hi % hpcs.len()]).unwrap().push(*id);
+                    hi += 1;
+                }
+            }
+        }
+        BrokerPolicy::Weighted(weights) => {
+            let total: f64 = weights.iter().map(|(_, w)| *w).sum();
+            if weights.is_empty() || total <= 0.0 {
+                return Err(PolicyError::BadWeights("weights must sum to > 0".into()));
+            }
+            for (p, w) in weights {
+                if !providers.contains(p) {
+                    return Err(PolicyError::BadWeights(format!("{p} not acquired")));
+                }
+                if *w < 0.0 {
+                    return Err(PolicyError::BadWeights(format!("{p}: negative weight")));
+                }
+            }
+            // Largest-remainder apportionment, then round-robin the slack.
+            let n = unbound.len();
+            let mut quotas: Vec<(ProviderId, usize, f64)> = weights
+                .iter()
+                .map(|(p, w)| {
+                    let exact = n as f64 * w / total;
+                    (*p, exact.floor() as usize, exact - exact.floor())
+                })
+                .collect();
+            let assigned: usize = quotas.iter().map(|(_, q, _)| q).sum();
+            let mut slack = n - assigned;
+            quotas.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            for q in quotas.iter_mut() {
+                if slack == 0 {
+                    break;
+                }
+                q.1 += 1;
+                slack -= 1;
+            }
+            let mut cursor = 0usize;
+            for (p, take, _) in &quotas {
+                for _ in 0..*take {
+                    if cursor < unbound.len() {
+                        out.get_mut(p).unwrap().push(unbound[cursor].0);
+                        cursor += 1;
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::task::TaskDescription;
+
+    fn con(i: u64) -> (TaskId, TaskDescription) {
+        (TaskId(i), TaskDescription::container(format!("c{i}"), "noop:latest"))
+    }
+
+    fn exe(i: u64) -> (TaskId, TaskDescription) {
+        (TaskId(i), TaskDescription::executable(format!("e{i}"), "sleep"))
+    }
+
+    fn total_assigned(a: &Assignment) -> usize {
+        a.values().map(|v| v.len()).sum()
+    }
+
+    #[test]
+    fn round_robin_splits_evenly() {
+        let tasks: Vec<_> = (0..16).map(con).collect();
+        let provs = [ProviderId::Aws, ProviderId::Azure, ProviderId::Jetstream2,
+                     ProviderId::Chameleon];
+        let a = assign(&BrokerPolicy::RoundRobin, &tasks, &provs).unwrap();
+        assert_eq!(total_assigned(&a), 16);
+        for p in provs {
+            assert_eq!(a[&p].len(), 4, "{p}");
+        }
+    }
+
+    #[test]
+    fn explicit_bindings_honored_under_any_policy() {
+        let mut tasks: Vec<_> = (0..6).map(con).collect();
+        tasks[3].1 = tasks[3].1.clone().on(ProviderId::Azure);
+        let provs = [ProviderId::Aws, ProviderId::Azure];
+        let a = assign(&BrokerPolicy::RoundRobin, &tasks, &provs).unwrap();
+        assert!(a[&ProviderId::Azure].contains(&TaskId(3)));
+        assert_eq!(total_assigned(&a), 6);
+    }
+
+    #[test]
+    fn by_task_kind_routes_con_to_cloud_exec_to_hpc() {
+        let tasks: Vec<_> = vec![con(0), exe(1), con(2), exe(3)];
+        let provs = [ProviderId::Aws, ProviderId::Bridges2];
+        let a = assign(&BrokerPolicy::ByTaskKind, &tasks, &provs).unwrap();
+        assert_eq!(a[&ProviderId::Aws], vec![TaskId(0), TaskId(2)]);
+        assert_eq!(a[&ProviderId::Bridges2], vec![TaskId(1), TaskId(3)]);
+    }
+
+    #[test]
+    fn by_task_kind_errors_without_matching_platform() {
+        let tasks = vec![exe(0)];
+        let e = assign(&BrokerPolicy::ByTaskKind, &tasks, &[ProviderId::Aws]).unwrap_err();
+        assert!(matches!(e, PolicyError::NoMatchingPlatform { needed: "HPC", .. }));
+    }
+
+    #[test]
+    fn weighted_respects_proportions() {
+        let tasks: Vec<_> = (0..100).map(con).collect();
+        let provs = [ProviderId::Aws, ProviderId::Azure];
+        let a = assign(
+            &BrokerPolicy::Weighted(vec![(ProviderId::Aws, 3.0), (ProviderId::Azure, 1.0)]),
+            &tasks,
+            &provs,
+        )
+        .unwrap();
+        assert_eq!(a[&ProviderId::Aws].len(), 75);
+        assert_eq!(a[&ProviderId::Azure].len(), 25);
+    }
+
+    #[test]
+    fn weighted_largest_remainder_assigns_all() {
+        let tasks: Vec<_> = (0..10).map(con).collect();
+        let provs = [ProviderId::Aws, ProviderId::Azure, ProviderId::Jetstream2];
+        let a = assign(
+            &BrokerPolicy::Weighted(vec![
+                (ProviderId::Aws, 1.0),
+                (ProviderId::Azure, 1.0),
+                (ProviderId::Jetstream2, 1.0),
+            ]),
+            &tasks,
+            &provs,
+        )
+        .unwrap();
+        assert_eq!(total_assigned(&a), 10);
+    }
+
+    #[test]
+    fn weighted_rejects_bad_configs() {
+        let tasks = vec![con(0)];
+        let provs = [ProviderId::Aws];
+        assert!(assign(&BrokerPolicy::Weighted(vec![]), &tasks, &provs).is_err());
+        assert!(assign(
+            &BrokerPolicy::Weighted(vec![(ProviderId::Azure, 1.0)]),
+            &tasks,
+            &provs
+        )
+        .is_err());
+        assert!(assign(
+            &BrokerPolicy::Weighted(vec![(ProviderId::Aws, -1.0), (ProviderId::Aws, 2.0)]),
+            &tasks,
+            &provs
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn explicit_only_requires_bindings() {
+        let tasks = vec![con(0)];
+        let e = assign(&BrokerPolicy::ExplicitOnly, &tasks, &[ProviderId::Aws]).unwrap_err();
+        assert_eq!(e, PolicyError::UnboundTask(TaskId(0)));
+        let bound = vec![(TaskId(0), TaskDescription::container("t", "i").on(ProviderId::Aws))];
+        assert!(assign(&BrokerPolicy::ExplicitOnly, &bound, &[ProviderId::Aws]).is_ok());
+    }
+
+    #[test]
+    fn binding_to_unacquired_provider_errors() {
+        let tasks = vec![(TaskId(0), TaskDescription::container("t", "i").on(ProviderId::Azure))];
+        let e = assign(&BrokerPolicy::RoundRobin, &tasks, &[ProviderId::Aws]).unwrap_err();
+        assert!(matches!(e, PolicyError::UnknownProvider { .. }));
+    }
+
+    #[test]
+    fn perf_weighted_prefers_faster_platforms() {
+        let tasks: Vec<_> = (0..130).map(con).collect();
+        let provs = [ProviderId::Aws, ProviderId::Bridges2];
+        let policy = perf_weighted(&[(ProviderId::Aws, 16), (ProviderId::Bridges2, 128)]);
+        let a = assign(&policy, &tasks, &provs).unwrap();
+        // Bridges2 rate = 11*128 = 1408 vs AWS 16: ~99% of tasks.
+        assert!(a[&ProviderId::Bridges2].len() > 120, "{}", a[&ProviderId::Bridges2].len());
+        assert_eq!(a[&ProviderId::Aws].len() + a[&ProviderId::Bridges2].len(), 130);
+    }
+
+    #[test]
+    fn no_providers_errors() {
+        assert_eq!(assign(&BrokerPolicy::RoundRobin, &[], &[]), Err(PolicyError::NoProviders));
+    }
+}

@@ -1,0 +1,192 @@
+//! Provider Proxy: credential validation and provider bring-up.
+//!
+//! Paper §3.1: "Provider Proxy collects information about the user and the
+//! provider interfaces, verifying the user's credentials to guarantee the
+//! successful startup of Hydra's engine and services."
+
+use crate::api::provider::ProviderConfig;
+use crate::sim::provider::ProviderId;
+use crate::util::toml_lite;
+use std::collections::BTreeMap;
+
+/// A validated, ready-to-use provider connection.
+#[derive(Debug, Clone)]
+pub struct ProviderHandle {
+    pub config: ProviderConfig,
+    /// Deterministic token from the simulated auth handshake.
+    pub session_token: u64,
+}
+
+#[derive(Debug)]
+pub enum ProxyError {
+    Config(String),
+    Credentials { provider: ProviderId, reason: String },
+    Duplicate(ProviderId),
+    NoneEnabled,
+}
+
+impl std::fmt::Display for ProxyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProxyError::Config(m) => write!(f, "config error: {m}"),
+            ProxyError::Credentials { provider, reason } => {
+                write!(f, "{provider}: credential validation failed: {reason}")
+            }
+            ProxyError::Duplicate(p) => write!(f, "provider {p} configured twice"),
+            ProxyError::NoneEnabled => write!(f, "no enabled providers in configuration"),
+        }
+    }
+}
+
+impl std::error::Error for ProxyError {}
+
+/// The proxy: validates configs and hands out provider handles.
+#[derive(Debug, Default)]
+pub struct ProviderProxy {
+    handles: BTreeMap<ProviderId, ProviderHandle>,
+}
+
+impl ProviderProxy {
+    pub fn new() -> ProviderProxy {
+        ProviderProxy { handles: BTreeMap::new() }
+    }
+
+    /// Validate and connect the given configs (disabled entries are
+    /// skipped; duplicates and bad credentials are hard errors).
+    pub fn connect(configs: Vec<ProviderConfig>) -> Result<ProviderProxy, ProxyError> {
+        let mut proxy = ProviderProxy::new();
+        for cfg in configs {
+            if !cfg.enabled {
+                continue;
+            }
+            if proxy.handles.contains_key(&cfg.id) {
+                return Err(ProxyError::Duplicate(cfg.id));
+            }
+            cfg.credentials.validate().map_err(|reason| ProxyError::Credentials {
+                provider: cfg.id,
+                reason,
+            })?;
+            let session_token = cfg.credentials.handshake_token();
+            proxy.handles.insert(cfg.id, ProviderHandle { config: cfg, session_token });
+        }
+        if proxy.handles.is_empty() {
+            return Err(ProxyError::NoneEnabled);
+        }
+        Ok(proxy)
+    }
+
+    /// Load + validate from a TOML config document.
+    pub fn from_toml_str(text: &str) -> Result<ProviderProxy, ProxyError> {
+        let doc = toml_lite::parse(text).map_err(|e| ProxyError::Config(e.to_string()))?;
+        let configs = ProviderConfig::from_toml(&doc).map_err(ProxyError::Config)?;
+        Self::connect(configs)
+    }
+
+    /// Connect all five simulated platforms (tests/examples).
+    pub fn simulated_all() -> ProviderProxy {
+        Self::connect(ProviderId::ALL.iter().map(|&id| ProviderConfig::simulated(id)).collect())
+            .expect("simulated configs are valid")
+    }
+
+    /// Connect a chosen subset of simulated platforms.
+    pub fn simulated(ids: &[ProviderId]) -> ProviderProxy {
+        Self::connect(ids.iter().map(|&id| ProviderConfig::simulated(id)).collect())
+            .expect("simulated configs are valid")
+    }
+
+    pub fn providers(&self) -> Vec<ProviderId> {
+        self.handles.keys().copied().collect()
+    }
+
+    pub fn handle(&self, id: ProviderId) -> Option<&ProviderHandle> {
+        self.handles.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::provider::Credentials;
+
+    #[test]
+    fn connects_simulated_providers() {
+        let p = ProviderProxy::simulated_all();
+        assert_eq!(p.len(), 5);
+        assert!(p.handle(ProviderId::Aws).is_some());
+        assert!(p.providers().windows(2).all(|w| w[0] < w[1]), "deterministic order");
+    }
+
+    #[test]
+    fn bad_credentials_block_startup() {
+        let mut cfg = ProviderConfig::simulated(ProviderId::Aws);
+        cfg.credentials = Credentials::new("WRONG", "short");
+        let e = ProviderProxy::connect(vec![cfg]).unwrap_err();
+        assert!(matches!(e, ProxyError::Credentials { provider: ProviderId::Aws, .. }));
+    }
+
+    #[test]
+    fn disabled_providers_skipped_but_not_all() {
+        let mut a = ProviderConfig::simulated(ProviderId::Aws);
+        a.enabled = false;
+        let b = ProviderConfig::simulated(ProviderId::Azure);
+        let p = ProviderProxy::connect(vec![a.clone(), b]).unwrap();
+        assert_eq!(p.providers(), vec![ProviderId::Azure]);
+        assert!(matches!(ProviderProxy::connect(vec![a]), Err(ProxyError::NoneEnabled)));
+    }
+
+    #[test]
+    fn duplicates_rejected() {
+        let a = ProviderConfig::simulated(ProviderId::Aws);
+        let e = ProviderProxy::connect(vec![a.clone(), a]).unwrap_err();
+        assert!(matches!(e, ProxyError::Duplicate(ProviderId::Aws)));
+    }
+
+    #[test]
+    fn from_toml_end_to_end() {
+        let p = ProviderProxy::from_toml_str(
+            r#"
+[provider.jet2]
+access_key = "HK-jet2"
+secret_key = "0123456789abcdef"
+
+[provider.bridges2]
+access_key = "HK-b2"
+secret_key = "0123456789abcdef"
+"#,
+        )
+        .unwrap();
+        assert_eq!(p.providers(), vec![ProviderId::Jetstream2, ProviderId::Bridges2]);
+    }
+
+    #[test]
+    fn toml_errors_propagate() {
+        assert!(matches!(ProviderProxy::from_toml_str("bad ="), Err(ProxyError::Config(_))));
+        assert!(matches!(
+            ProviderProxy::from_toml_str("[provider.gcp]\naccess_key=\"a\"\nsecret_key=\"b\"\n"),
+            Err(ProxyError::Config(_))
+        ));
+    }
+}
+
+#[cfg(test)]
+mod shipped_config_tests {
+    use super::*;
+
+    #[test]
+    fn shipped_example_config_parses_and_validates() {
+        let text = include_str!("../../../configs/providers.toml");
+        let proxy = ProviderProxy::from_toml_str(text).unwrap();
+        assert_eq!(proxy.len(), 5, "all five platforms configured");
+        for id in crate::sim::provider::ProviderId::ALL {
+            assert!(proxy.handle(id).is_some(), "{id}");
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Task registry: the broker's source of truth for task state.
+//!
+//! Every task submitted through Hydra lives here with its description,
+//! current state, and trace of transitions. Transitions are validated
+//! against the `TaskState` machine — an illegal transition is a broker
+//! bug, surfaced as an error rather than silently recorded.
+
+use crate::api::task::{TaskDescription, TaskId, TaskState};
+use crate::metrics::TraceLog;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug)]
+pub struct TaskEntry {
+    pub desc: TaskDescription,
+    pub state: TaskState,
+}
+
+/// Shared, thread-safe registry (service managers run on their own
+/// threads and report transitions concurrently).
+#[derive(Clone, Default)]
+pub struct TaskRegistry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+#[derive(Default)]
+struct Inner {
+    tasks: HashMap<u64, TaskEntry>,
+    trace: Option<TraceLog>,
+    next_id: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum StateError {
+    UnknownTask(TaskId),
+    IllegalTransition { task: TaskId, from: TaskState, to: TaskState },
+}
+
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateError::UnknownTask(id) => write!(f, "unknown task {id}"),
+            StateError::IllegalTransition { task, from, to } => {
+                write!(f, "{task}: illegal transition {from} -> {to}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StateError {}
+
+impl TaskRegistry {
+    pub fn new() -> TaskRegistry {
+        let reg = TaskRegistry { inner: Arc::new(Mutex::new(Inner::default())) };
+        reg.inner.lock().unwrap().trace = Some(TraceLog::new());
+        reg
+    }
+
+    /// Register a new task in state `New`, returning its id.
+    pub fn register(&self, desc: TaskDescription) -> TaskId {
+        let mut g = self.inner.lock().unwrap();
+        let id = TaskId(g.next_id);
+        g.next_id += 1;
+        g.tasks.insert(id.0, TaskEntry { desc, state: TaskState::New });
+        if let Some(t) = g.trace.as_mut() {
+            t.record(id, TaskState::New);
+        }
+        id
+    }
+
+    /// Register a whole workload, preserving order.
+    pub fn register_all(&self, descs: Vec<TaskDescription>) -> Vec<TaskId> {
+        descs.into_iter().map(|d| self.register(d)).collect()
+    }
+
+    /// Validated state transition with tracing.
+    pub fn transition(&self, id: TaskId, to: TaskState) -> Result<(), StateError> {
+        self.transition_virtual(id, to, None)
+    }
+
+    /// Transition carrying a virtual (platform) timestamp, used when the
+    /// simulator reports completion times.
+    pub fn transition_virtual(
+        &self,
+        id: TaskId,
+        to: TaskState,
+        virtual_s: Option<f64>,
+    ) -> Result<(), StateError> {
+        let mut g = self.inner.lock().unwrap();
+        let entry = g.tasks.get_mut(&id.0).ok_or(StateError::UnknownTask(id))?;
+        if !entry.state.can_transition_to(to) {
+            return Err(StateError::IllegalTransition { task: id, from: entry.state, to });
+        }
+        entry.state = to;
+        if let Some(t) = g.trace.as_mut() {
+            t.record_virtual(id, to, virtual_s);
+        }
+        Ok(())
+    }
+
+    /// Bulk transition (used on the partition/submit path — one lock
+    /// acquisition for the whole batch, not one per task).
+    pub fn transition_all(&self, ids: &[TaskId], to: TaskState) -> Result<(), StateError> {
+        let mut g = self.inner.lock().unwrap();
+        for id in ids {
+            let entry = g.tasks.get_mut(&id.0).ok_or(StateError::UnknownTask(*id))?;
+            if !entry.state.can_transition_to(to) {
+                return Err(StateError::IllegalTransition { task: *id, from: entry.state, to });
+            }
+        }
+        for id in ids {
+            g.tasks.get_mut(&id.0).unwrap().state = to;
+            if let Some(t) = g.trace.as_mut() {
+                t.record(*id, to);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn state_of(&self, id: TaskId) -> Option<TaskState> {
+        self.inner.lock().unwrap().tasks.get(&id.0).map(|e| e.state)
+    }
+
+    pub fn description_of(&self, id: TaskId) -> Option<TaskDescription> {
+        self.inner.lock().unwrap().tasks.get(&id.0).map(|e| e.desc.clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Count of tasks per state (monitoring surface).
+    pub fn counts(&self) -> HashMap<TaskState, usize> {
+        let g = self.inner.lock().unwrap();
+        let mut m = HashMap::new();
+        for e in g.tasks.values() {
+            *m.entry(e.state).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// True when every registered task reached a final state.
+    pub fn all_final(&self) -> bool {
+        self.inner.lock().unwrap().tasks.values().all(|e| e.state.is_final())
+    }
+
+    /// Export the trace as JSON (events in recording order).
+    pub fn trace_json(&self) -> crate::util::json::Json {
+        let g = self.inner.lock().unwrap();
+        g.trace.as_ref().map(|t| t.to_json()).unwrap_or(crate::util::json::Json::Arr(vec![]))
+    }
+
+    pub fn trace_len(&self) -> usize {
+        self.inner.lock().unwrap().trace.as_ref().map(|t| t.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::task::TaskDescription;
+
+    fn desc() -> TaskDescription {
+        TaskDescription::container("t", "noop:latest")
+    }
+
+    #[test]
+    fn register_assigns_sequential_ids() {
+        let reg = TaskRegistry::new();
+        let ids = reg.register_all(vec![desc(), desc(), desc()]);
+        assert_eq!(ids, vec![TaskId(0), TaskId(1), TaskId(2)]);
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.state_of(TaskId(1)), Some(TaskState::New));
+    }
+
+    #[test]
+    fn legal_path_traced() {
+        let reg = TaskRegistry::new();
+        let id = reg.register(desc());
+        for s in [
+            TaskState::Validated,
+            TaskState::Partitioned,
+            TaskState::Submitted,
+            TaskState::Running,
+            TaskState::Done,
+        ] {
+            reg.transition(id, s).unwrap();
+        }
+        assert_eq!(reg.state_of(id), Some(TaskState::Done));
+        assert_eq!(reg.trace_len(), 6); // New + 5 transitions
+        assert!(reg.all_final());
+    }
+
+    #[test]
+    fn illegal_transition_rejected_and_state_unchanged() {
+        let reg = TaskRegistry::new();
+        let id = reg.register(desc());
+        let e = reg.transition(id, TaskState::Running).unwrap_err();
+        assert!(matches!(e, StateError::IllegalTransition { .. }));
+        assert_eq!(reg.state_of(id), Some(TaskState::New));
+    }
+
+    #[test]
+    fn unknown_task_errors() {
+        let reg = TaskRegistry::new();
+        assert_eq!(
+            reg.transition(TaskId(99), TaskState::Validated),
+            Err(StateError::UnknownTask(TaskId(99)))
+        );
+        assert!(reg.state_of(TaskId(99)).is_none());
+    }
+
+    #[test]
+    fn bulk_transition_is_atomic() {
+        let reg = TaskRegistry::new();
+        let ids = reg.register_all(vec![desc(), desc()]);
+        reg.transition(ids[1], TaskState::Validated).unwrap();
+        // ids[0] is New (can go Validated), ids[1] already Validated
+        // (cannot go Validated again) => whole bulk fails, nothing moves.
+        let e = reg.transition_all(&ids, TaskState::Validated).unwrap_err();
+        assert!(matches!(e, StateError::IllegalTransition { .. }));
+        assert_eq!(reg.state_of(ids[0]), Some(TaskState::New));
+    }
+
+    #[test]
+    fn counts_by_state() {
+        let reg = TaskRegistry::new();
+        let ids = reg.register_all(vec![desc(), desc(), desc()]);
+        reg.transition(ids[0], TaskState::Validated).unwrap();
+        let c = reg.counts();
+        assert_eq!(c.get(&TaskState::New), Some(&2));
+        assert_eq!(c.get(&TaskState::Validated), Some(&1));
+    }
+
+    #[test]
+    fn concurrent_transitions_from_threads() {
+        let reg = TaskRegistry::new();
+        let ids = reg.register_all((0..100).map(|_| desc()).collect());
+        reg.transition_all(&ids, TaskState::Validated).unwrap();
+        let mut handles = Vec::new();
+        for chunk in ids.chunks(25) {
+            let reg = reg.clone();
+            let chunk = chunk.to_vec();
+            handles.push(std::thread::spawn(move || {
+                for id in chunk {
+                    reg.transition(id, TaskState::Partitioned).unwrap();
+                    reg.transition(id, TaskState::Submitted).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.counts().get(&TaskState::Submitted), Some(&100));
+    }
+
+    #[test]
+    fn virtual_timestamps_recorded() {
+        let reg = TaskRegistry::new();
+        let id = reg.register(desc());
+        reg.transition(id, TaskState::Validated).unwrap();
+        reg.transition(id, TaskState::Partitioned).unwrap();
+        reg.transition(id, TaskState::Submitted).unwrap();
+        reg.transition(id, TaskState::Running).unwrap();
+        reg.transition_virtual(id, TaskState::Done, Some(42.5)).unwrap();
+        let j = reg.trace_json();
+        let arr = j.as_arr().unwrap();
+        let last = arr.last().unwrap();
+        assert_eq!(last.get("virtual_s").unwrap().as_f64(), Some(42.5));
+    }
+}

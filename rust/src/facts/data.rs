@@ -1,0 +1,147 @@
+//! Synthetic FACTS input data with known ground truth.
+//!
+//! Substitutes for the ~21 GB of observational datasets FACTS consumes
+//! (paper §4): per-site historical temperature anomalies and sea-level
+//! rates generated from the same semi-empirical model the pipeline fits
+//! (`rate(t) = a * (T(t) - T0) + eps`), so the fit step has a recoverable
+//! ground truth (tested), plus an
+//! SSP-style future warming scenario for the projection step.
+
+use super::FactsSize;
+use crate::runtime::Tensor;
+use crate::util::prng::Prng;
+
+/// One workflow instance's inputs (shapes follow `FactsSize::dims`).
+#[derive(Debug, Clone)]
+pub struct FactsInputs {
+    /// (B, T) historical temperature anomaly series.
+    pub temps: Tensor,
+    /// (B, T) historical sea-level-rate series (mm/yr).
+    pub rates: Tensor,
+    /// (Y,) future temperature anomaly scenario.
+    pub temps_fut: Tensor,
+    /// (Y, 4) polynomial features of the scenario [1, T, T^2, tau].
+    pub phi_fut: Tensor,
+    /// (B, M, 2) posterior noise for the semi-empirical module.
+    pub eps2: Tensor,
+    /// (B, M, 4) posterior noise for the polynomial module.
+    pub eps4: Tensor,
+    /// (2,) module combination weights.
+    pub weights: Tensor,
+    /// Ground truth per site (for validation): (a, T0).
+    pub truth: Vec<(f64, f64)>,
+}
+
+/// Generate one instance's inputs from a seed.
+pub fn generate(seed: u64, size: FactsSize) -> FactsInputs {
+    let (b, t, m, y) = size.dims();
+    let mut rng = Prng::new(seed ^ 0xFAC75_DA7A);
+
+    let mut temps = Vec::with_capacity(b * t);
+    let mut rates = Vec::with_capacity(b * t);
+    let mut truth = Vec::with_capacity(b);
+    for _ in 0..b {
+        let a = rng.range_f64(1.5, 4.0); // mm / yr / K
+        let t0 = rng.range_f64(-0.4, 0.4); // K anomaly
+        truth.push((a, t0));
+        for step in 0..t {
+            // Warming trend 0 → ~1.2 K over the record + weather noise.
+            let trend = 1.2 * step as f64 / t as f64;
+            let temp = trend + 0.08 * rng.normal();
+            let rate = a * (temp - t0) + 0.15 * rng.normal();
+            temps.push(temp as f32);
+            rates.push(rate as f32);
+        }
+    }
+
+    // SSP-style scenario: accelerate from ~1.2 K to ~3 K over Y years.
+    let mut temps_fut = Vec::with_capacity(y);
+    let mut phi_fut = Vec::with_capacity(y * 4);
+    for step in 0..y {
+        let tau = step as f64 / y.max(1) as f64;
+        let temp = 1.2 + 1.8 * tau * tau.sqrt() + 0.03 * rng.normal();
+        temps_fut.push(temp as f32);
+        phi_fut.extend_from_slice(&[1.0f32, temp as f32, (temp * temp) as f32, tau as f32]);
+    }
+
+    let eps2: Vec<f32> = (0..b * m * 2).map(|_| rng.normal() as f32).collect();
+    let eps4: Vec<f32> = (0..b * m * 4).map(|_| rng.normal() as f32).collect();
+
+    FactsInputs {
+        temps: Tensor::new(temps, vec![b, t]),
+        rates: Tensor::new(rates, vec![b, t]),
+        temps_fut: Tensor::new(temps_fut, vec![y]),
+        phi_fut: Tensor::new(phi_fut, vec![y, 4]),
+        eps2: Tensor::new(eps2, vec![b, m, 2]),
+        eps4: Tensor::new(eps4, vec![b, m, 4]),
+        weights: Tensor::new(vec![0.6, 0.4], vec![2]),
+        truth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_size_dims() {
+        for size in [FactsSize::Small, FactsSize::Default, FactsSize::Large] {
+            let (b, t, m, y) = size.dims();
+            let d = generate(7, size);
+            assert_eq!(d.temps.shape, vec![b, t]);
+            assert_eq!(d.rates.shape, vec![b, t]);
+            assert_eq!(d.temps_fut.shape, vec![y]);
+            assert_eq!(d.phi_fut.shape, vec![y, 4]);
+            assert_eq!(d.eps2.shape, vec![b, m, 2]);
+            assert_eq!(d.eps4.shape, vec![b, m, 4]);
+            assert_eq!(d.truth.len(), b);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_distinct_across_seeds() {
+        let a = generate(1, FactsSize::Small);
+        let b = generate(1, FactsSize::Small);
+        let c = generate(2, FactsSize::Small);
+        assert_eq!(a.temps.data, b.temps.data);
+        assert_ne!(a.temps.data, c.temps.data);
+    }
+
+    #[test]
+    fn rates_follow_ground_truth_model() {
+        let d = generate(11, FactsSize::Default);
+        let (b, t, _, _) = FactsSize::Default.dims();
+        for site in 0..b {
+            let (a, t0) = d.truth[site];
+            let mut err = 0.0;
+            for step in 0..t {
+                let temp = d.temps.data[site * t + step] as f64;
+                let rate = d.rates.data[site * t + step] as f64;
+                err += (rate - a * (temp - t0)).abs();
+            }
+            // Noise std is 0.15 => mean |error| ~ 0.12
+            assert!(err / (t as f64) < 0.5, "site {site}: {}", err / t as f64);
+        }
+    }
+
+    #[test]
+    fn scenario_is_warming() {
+        let d = generate(3, FactsSize::Default);
+        let y = d.temps_fut.data.len();
+        let early: f32 = d.temps_fut.data[..8].iter().sum::<f32>() / 8.0;
+        let late: f32 = d.temps_fut.data[y - 8..].iter().sum::<f32>() / 8.0;
+        assert!(late > early + 0.5, "scenario must warm: {early} -> {late}");
+    }
+
+    #[test]
+    fn phi_columns_consistent_with_scenario() {
+        let d = generate(5, FactsSize::Small);
+        let y = d.temps_fut.data.len();
+        for i in 0..y {
+            assert_eq!(d.phi_fut.data[i * 4], 1.0);
+            assert_eq!(d.phi_fut.data[i * 4 + 1], d.temps_fut.data[i]);
+            let t = d.phi_fut.data[i * 4 + 1];
+            assert!((d.phi_fut.data[i * 4 + 2] - t * t).abs() < 1e-4);
+        }
+    }
+}

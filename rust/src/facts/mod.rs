@@ -1,0 +1,179 @@
+//! FACTS: the exemplar science workflow of Experiment 4.
+//!
+//! The Framework for Assessing Changes To Sea-level (paper §4) is modeled
+//! as its mathematical core: a semi-empirical sea-level response model and
+//! a polynomial emulator, fit on historical (temperature, sea-level-rate)
+//! records and projected by Monte-Carlo posterior sampling over future
+//! temperature scenarios (see `python/compile/model.py` — the compute runs
+//! through the PJRT runtime, never through Python).
+//!
+//! Pieces:
+//! * [`data`] — synthetic record generator with known ground truth
+//!   (substitute for FACTS's ~21 GB input datasets; DESIGN.md §1).
+//! * [`pipeline`] — the four steps (pre-process → fit → project →
+//!   post-process) executed against the AOT artifacts.
+//! * [`workflow_spec`]/[`measured_workflow`] — the 4-step DAG handed to
+//!   the workflow engine, with real measured compute durations attached.
+
+pub mod data;
+pub mod pipeline;
+
+use crate::api::task::{Payload, TaskDescription};
+use crate::workflow::dag::{Step, WorkflowSpec};
+
+/// Artifact size variants (must match `python/compile/aot.py::SIZES`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FactsSize {
+    Small,
+    Default,
+    Large,
+}
+
+impl FactsSize {
+    /// (B sites, T history steps, M samples/site, Y projection years).
+    pub fn dims(self) -> (usize, usize, usize, usize) {
+        match self {
+            FactsSize::Small => (4, 32, 8, 32),
+            FactsSize::Default => (16, 128, 16, 96),
+            FactsSize::Large => (16, 128, 64, 96),
+        }
+    }
+
+    pub fn suffix(self) -> &'static str {
+        match self {
+            FactsSize::Small => "small",
+            FactsSize::Default => "default",
+            FactsSize::Large => "large",
+        }
+    }
+
+    pub fn artifact(self, step: &str) -> String {
+        format!("{step}_{}", self.suffix())
+    }
+}
+
+/// Reporting quantiles — must match `model.QUANTILES`.
+pub const QUANTILES: [f64; 5] = [0.05, 0.17, 0.5, 0.83, 0.95];
+
+/// Scale factor from measured artifact wall-time to simulated task work.
+///
+/// The AOT artifacts run reduced problem sizes: the full FACTS datasets
+/// are ~21 GB (paper §4) against our ~100 KB synthetic records — a ratio
+/// of ~2e5. One simulated FACTS step therefore represents `WORK_SCALE`
+/// executions of the reduced kernel (a conservative 1.5e5), putting a step
+/// at O(10-600 s) on the AWS reference core — the regime where the
+/// paper's Fig 5 platform ordering (queue wait amortized, compute
+/// dominant) is observable.
+pub const WORK_SCALE: f64 = 150_000.0;
+
+/// The paper's FACTS step requirements: "Each step requires 1 core, 2GB
+/// of RAM" (§5.4).
+fn facts_task(name: &str, artifact: String) -> TaskDescription {
+    TaskDescription::executable(name, format!("facts-{name}"))
+        .with_cpus(1)
+        .with_mem_mb(2048)
+        .with_payload(Payload::Compute(artifact))
+}
+
+/// The 4-step FACTS chain as a workflow spec with `Compute` payloads
+/// (resolved to measured work by [`measured_workflow`]).
+pub fn workflow_spec(size: FactsSize) -> WorkflowSpec {
+    WorkflowSpec::new(format!("facts-{}", size.suffix()))
+        .step(Step::new("pre-processing", facts_task("pre-processing",
+                                                     size.artifact("preprocess"))))
+        .step(Step::new("fitting", facts_task("fitting", size.artifact("fit_k2"))).after(0))
+        .step(Step::new("projecting", facts_task("projecting",
+                                                 size.artifact("project_se"))).after(1))
+        .step(Step::new("post-processing", facts_task("post-processing",
+                                                      size.artifact("postprocess"))).after(2))
+}
+
+/// Measured per-step wall times (seconds on this host) from a real
+/// pipeline execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTimings {
+    pub pre_s: f64,
+    pub fit_s: f64,
+    pub project_s: f64,
+    pub post_s: f64,
+}
+
+impl StepTimings {
+    pub fn total_s(&self) -> f64 {
+        self.pre_s + self.fit_s + self.project_s + self.post_s
+    }
+
+    pub fn of_step(&self, step_idx: usize) -> f64 {
+        match step_idx {
+            0 => self.pre_s,
+            1 => self.fit_s,
+            2 => self.project_s,
+            _ => self.post_s,
+        }
+    }
+}
+
+/// Resolve a FACTS workflow's `Compute` payloads into `Work` durations
+/// using measured timings (× [`WORK_SCALE`]). The returned closure plugs
+/// into `WorkflowEngine::execute_many`.
+pub fn measured_workflow(
+    timings: StepTimings,
+) -> impl FnMut(usize, usize, TaskDescription) -> TaskDescription {
+    move |_inst, step_idx, mut task| {
+        if let Payload::Compute(_) = task.payload {
+            task.payload = Payload::Work(timings.of_step(step_idx) * WORK_SCALE);
+        }
+        task
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_aot_variants() {
+        assert_eq!(FactsSize::Small.dims(), (4, 32, 8, 32));
+        assert_eq!(FactsSize::Default.dims(), (16, 128, 16, 96));
+        assert_eq!(FactsSize::Large.dims(), (16, 128, 64, 96));
+        assert_eq!(FactsSize::Default.artifact("fit_k2"), "fit_k2_default");
+    }
+
+    #[test]
+    fn workflow_spec_is_a_valid_4_chain() {
+        for size in [FactsSize::Small, FactsSize::Default, FactsSize::Large] {
+            let w = workflow_spec(size);
+            w.validate().unwrap();
+            assert_eq!(w.depth().unwrap(), 4);
+            for s in &w.steps {
+                assert_eq!(s.task.cpus, 1);
+                assert_eq!(s.task.mem_mb, 2048);
+                assert!(matches!(s.task.payload, Payload::Compute(_)));
+            }
+        }
+    }
+
+    #[test]
+    fn measured_workflow_resolves_compute() {
+        let t = StepTimings { pre_s: 0.001, fit_s: 0.002, project_s: 0.003, post_s: 0.004 };
+        let mut f = measured_workflow(t);
+        let w = workflow_spec(FactsSize::Small);
+        let out = f(0, 2, w.steps[2].task.clone());
+        match out.payload {
+            Payload::Work(s) => assert!((s - 0.003 * WORK_SCALE).abs() < 1e-9),
+            other => panic!("{other:?}"),
+        }
+        // Non-compute payloads pass through untouched.
+        let plain = TaskDescription::executable("x", "x").with_payload(Payload::Sleep(1.0));
+        assert_eq!(f(0, 0, plain.clone()).payload, plain.payload);
+    }
+
+    #[test]
+    fn step_timings_accessors() {
+        let t = StepTimings { pre_s: 1.0, fit_s: 2.0, project_s: 3.0, post_s: 4.0 };
+        assert_eq!(t.total_s(), 10.0);
+        assert_eq!(t.of_step(0), 1.0);
+        assert_eq!(t.of_step(3), 4.0);
+        assert_eq!(t.of_step(99), 4.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! The FACTS pipeline: four steps executed against the PJRT artifacts.
+//!
+//! Dataflow (tensors pass step to step exactly as the paper's workflow
+//! passes files):
+//!
+//! ```text
+//! pre-processing : (temps, rates)        -> (X4, X2, y, tref)
+//! fitting        : (X2, y) & (X4, y)     -> (theta, sigma2, A) x2
+//! projecting     : posterior + scenario  -> (quants, mean) x2 modules
+//! post-processing: module quantile fans  -> combined fan + total rise
+//! ```
+//!
+//! Every step is timed; the measured wall times feed the workflow engine
+//! (they become the simulated task durations of Experiment 4).
+
+use super::data::FactsInputs;
+use super::{FactsSize, StepTimings};
+use crate::runtime::{PjRtRuntime, RuntimeError, Tensor};
+use crate::util::Stopwatch;
+
+/// Output of one full pipeline execution.
+#[derive(Debug, Clone)]
+pub struct FactsResult {
+    /// (Q, Y) combined sea-level quantile fan (mm).
+    pub combined: Tensor,
+    /// (2, Y) min/max envelope across modules.
+    pub envelope: Tensor,
+    /// Weighted median rise at the horizon (mm).
+    pub total_rise_mm: f64,
+    /// Per-module medians at the horizon (se, poly).
+    pub module_medians_mm: (f64, f64),
+    pub timings: StepTimings,
+}
+
+/// Pipeline bound to a runtime + size variant.
+pub struct FactsPipeline<'r> {
+    pub rt: &'r PjRtRuntime,
+    pub size: FactsSize,
+}
+
+impl<'r> FactsPipeline<'r> {
+    pub fn new(rt: &'r PjRtRuntime, size: FactsSize) -> FactsPipeline<'r> {
+        FactsPipeline { rt, size }
+    }
+
+    /// Execute the four steps for one instance's inputs.
+    pub fn run(&self, inputs: &FactsInputs) -> Result<FactsResult, RuntimeError> {
+        let size = self.size;
+        let (_, _, _, y) = size.dims();
+        let q = super::QUANTILES.len();
+
+        // -- pre-processing ----------------------------------------------
+        let sw = Stopwatch::start();
+        let pre = self.rt.execute(
+            &size.artifact("preprocess"),
+            &[inputs.temps.clone(), inputs.rates.clone()],
+        )?;
+        let (x4, x2, ystd) = (pre[0].clone(), pre[1].clone(), pre[2].clone());
+        let pre_s = sw.elapsed_secs();
+
+        // -- fitting (both modules) ---------------------------------------
+        let sw = Stopwatch::start();
+        let fit2 = self.rt.execute(&size.artifact("fit_k2"), &[x2, ystd.clone()])?;
+        let fit4 = self.rt.execute(&size.artifact("fit_k4"), &[x4, ystd])?;
+        let fit_s = sw.elapsed_secs();
+
+        // -- projecting (both modules) -------------------------------------
+        let sw = Stopwatch::start();
+        let proj_se = self.rt.execute(
+            &size.artifact("project_se"),
+            &[
+                fit2[0].clone(),
+                fit2[1].clone(),
+                fit2[2].clone(),
+                inputs.eps2.clone(),
+                inputs.temps_fut.clone(),
+            ],
+        )?;
+        let proj_poly = self.rt.execute(
+            &size.artifact("project_poly"),
+            &[
+                fit4[0].clone(),
+                fit4[1].clone(),
+                fit4[2].clone(),
+                inputs.eps4.clone(),
+                inputs.phi_fut.clone(),
+            ],
+        )?;
+        let project_s = sw.elapsed_secs();
+
+        // -- post-processing -----------------------------------------------
+        let sw = Stopwatch::start();
+        let quants_se = &proj_se[0];
+        let quants_poly = &proj_poly[0];
+        let mut stacked = Vec::with_capacity(2 * q * y);
+        stacked.extend_from_slice(&quants_se.data);
+        stacked.extend_from_slice(&quants_poly.data);
+        let post = self.rt.execute(
+            &size.artifact("postprocess"),
+            &[Tensor::new(stacked, vec![2, q, y]), inputs.weights.clone()],
+        )?;
+        let post_s = sw.elapsed_secs();
+
+        let combined = post[0].clone();
+        let envelope = post[1].clone();
+        let total_rise_mm = post[2].data[0] as f64;
+        let mid = q / 2;
+        let module_medians_mm = (
+            quants_se.data[mid * y + (y - 1)] as f64,
+            quants_poly.data[mid * y + (y - 1)] as f64,
+        );
+
+        Ok(FactsResult {
+            combined,
+            envelope,
+            total_rise_mm,
+            module_medians_mm,
+            timings: StepTimings { pre_s, fit_s, project_s, post_s },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end (with real artifacts) by
+    // rust/tests/integration_facts.rs and examples/facts_e2e.rs; unit
+    // coverage here would require a PJRT client, which `cargo test --lib`
+    // keeps out of the hot path.
+}

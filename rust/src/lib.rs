@@ -1,0 +1,29 @@
+//! # Hydra — cloud/HPC brokering for heterogeneous workloads at scale
+//!
+//! A from-scratch reproduction of *"Hydra: Brokering Cloud and HPC
+//! Resources to Support the Execution of Heterogeneous Workloads at
+//! Scale"* (Alsaadi, Turilli, Jha, 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the broker: provider/service proxies, CaaS
+//!   and HPC managers, MCPP/SCPP workload partitioning, bulk submission,
+//!   monitoring/tracing, plus every platform substrate (Kubernetes sim,
+//!   batch-queue/pilot sim, Argo-like workflow engine) and a PJRT runtime
+//!   that executes the FACTS science compute.
+//! * **Layer 2 (python/compile/model.py)** — the FACTS sea-level steps as
+//!   JAX functions, AOT-lowered to `artifacts/*.hlo.txt` at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the
+//!   fit/projection hot spots, lowered into the same HLO.
+//!
+//! Python never runs on the request path: after `make artifacts`, the Rust
+//! binary is self-contained. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod api;
+pub mod broker;
+pub mod facts;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workflow;

@@ -1,0 +1,279 @@
+//! `hydra` — leader entrypoint and CLI.
+//!
+//! Subcommands map to the paper's usage surface:
+//! * `providers` — validate and list the configured providers.
+//! * `run`       — broker a synthetic workload (Experiments 1–3 style).
+//! * `facts`     — run FACTS workflow instances end to end (Experiment 4),
+//!                 executing the real AOT compute through PJRT.
+//! * `inspect`   — print the artifact manifest the runtime would load.
+
+use hydra::api::task::{Payload, TaskDescription};
+use hydra::api::ResourceRequest;
+use hydra::broker::{BrokerPolicy, Hydra, PartitionModel, PodBuildMode};
+use hydra::facts::{self, data, pipeline::FactsPipeline, FactsSize};
+use hydra::runtime::{default_artifacts_dir, PjRtRuntime};
+use hydra::sim::provider::ProviderId;
+use hydra::util::cli::{App, Command, Matches, Parsed};
+use hydra::util::{fmt_secs, Stopwatch};
+use hydra::workflow::engine::WorkflowEngine;
+
+fn app() -> App {
+    App::new("hydra", "cloud/HPC broker for heterogeneous workloads (paper reproduction)")
+        .command(Command::new("providers", "validate and list configured providers"))
+        .command(
+            Command::new("run", "broker a synthetic workload")
+                .opt("provider", "jet2", "provider (jet2|chi|aws|azure|bridges2) or 'clouds'")
+                .opt("tasks", "4000", "number of tasks")
+                .opt("vcpus", "16", "vCPUs per node (cloud)")
+                .opt("nodes", "1", "nodes per cluster / pilot")
+                .opt("sleep", "0", "per-task sleep seconds (0 = noop)")
+                .opt("seed", "42", "simulation seed")
+                .opt("report", "-", "write a JSON run report (metrics + trace) to this path ('-' = off)")
+                .flag("scpp", "single-container-per-pod (default MCPP)")
+                .flag("disk", "build pod manifests on disk (paper's measured mode)"),
+        )
+        .command(
+            Command::new("facts", "run FACTS workflow instances (Experiment 4)")
+                .opt("provider", "jet2", "jet2|aws|bridges2")
+                .opt("workflows", "50", "number of workflow instances")
+                .opt("nodes", "1", "cluster nodes / pilot nodes")
+                .opt("size", "default", "artifact size: small|default|large")
+                .opt("seed", "42", "data generation seed"),
+        )
+        .command(Command::new("inspect", "print the artifact manifest"))
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match app().parse(&argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            eprintln!("{}", app().top_usage());
+            std::process::exit(2);
+        }
+    };
+    let m = match parsed {
+        Parsed::Help(h) => {
+            println!("{h}");
+            return;
+        }
+        Parsed::Run(m) => m,
+    };
+    let result = match m.command.as_str() {
+        "providers" => cmd_providers(),
+        "run" => cmd_run(&m),
+        "facts" => cmd_facts(&m),
+        "inspect" => cmd_inspect(),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_providers() -> Result<(), Box<dyn std::error::Error>> {
+    println!("{:<10} {:>5} {:>12} {:>10} {:>8}", "PROVIDER", "KIND", "CORES/NODE", "CPU-SPEED",
+             "PINNING");
+    for id in ProviderId::ALL {
+        let p = hydra::sim::provider::PlatformProfile::of(id);
+        println!(
+            "{:<10} {:>5} {:>12} {:>10.1} {:>8}",
+            id.short_name(),
+            match p.kind {
+                hydra::sim::provider::PlatformKind::Cloud => "cloud",
+                hydra::sim::provider::PlatformKind::Hpc => "hpc",
+            },
+            p.cores_per_node,
+            p.cpu_speed,
+            match p.pinning {
+                hydra::sim::provider::CpuPinning::PhysicalCore => "core",
+                hydra::sim::provider::CpuPinning::Thread => "thread",
+                hydra::sim::provider::CpuPinning::BareMetal => "metal",
+            }
+        );
+    }
+    Ok(())
+}
+
+fn providers_from_arg(arg: &str) -> Result<Vec<ProviderId>, String> {
+    if arg == "clouds" {
+        return Ok(ProviderId::CLOUDS.to_vec());
+    }
+    arg.split(',')
+        .map(|s| ProviderId::parse(s.trim()).ok_or_else(|| format!("unknown provider '{s}'")))
+        .collect()
+}
+
+fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
+    let providers = providers_from_arg(m.str("provider"))?;
+    let n_tasks = m.usize("tasks")?;
+    let vcpus = m.u64("vcpus")? as u32;
+    let nodes = m.u64("nodes")? as u32;
+    let sleep = m.f64("sleep")?;
+    let model = if m.flag("scpp") {
+        PartitionModel::Scpp
+    } else {
+        PartitionModel::Mcpp { max_cpp: 16 }
+    };
+
+    let mut b = Hydra::builder().partition_model(model).seed(m.u64("seed")?);
+    if m.flag("disk") {
+        b = b.build_mode(PodBuildMode::Disk {
+            staging_dir: std::env::temp_dir().join("hydra-staging"),
+        });
+    }
+    for &p in &providers {
+        b = b.simulated_provider(p);
+        let req = if hydra::sim::provider::PlatformProfile::of(p).kind
+            == hydra::sim::provider::PlatformKind::Hpc
+        {
+            ResourceRequest::pilot(p, nodes)
+        } else {
+            ResourceRequest::kubernetes(p, nodes, vcpus)
+        };
+        b = b.resource(req);
+    }
+    let hydra = b.build()?;
+
+    let payload = if sleep > 0.0 { Payload::Sleep(sleep) } else { Payload::Noop };
+    let tasks: Vec<TaskDescription> = (0..n_tasks)
+        .map(|i| {
+            TaskDescription::container(format!("task-{i}"), "hydra/noop:latest")
+                .with_payload(payload.clone())
+        })
+        .collect();
+
+    let sw = Stopwatch::start();
+    let run = hydra.submit(tasks, &BrokerPolicy::RoundRobin)?;
+    let wall = sw.elapsed_secs();
+
+    println!("{:<10} {:>8} {:>8} {:>12} {:>12} {:>12}", "PROVIDER", "TASKS", "PODS", "OVH",
+             "TH (t/s)", "TPT");
+    for r in run.per_provider() {
+        println!(
+            "{:<10} {:>8} {:>8} {:>12} {:>12.0} {:>12}",
+            r.provider.short_name(),
+            r.tasks,
+            r.pods,
+            fmt_secs(r.ovh.total_s()),
+            r.throughput_tps(),
+            fmt_secs(r.tpt_s),
+        );
+    }
+    println!(
+        "{:<10} {:>8} {:>8} {:>12} {:>12.0} {:>12}",
+        "AGGREGATE",
+        run.aggregate.tasks,
+        run.aggregate.pods,
+        fmt_secs(run.aggregate.ovh_s),
+        run.aggregate.th_tps,
+        fmt_secs(run.aggregate.tpt_s),
+    );
+    println!("(broker wall time {})", fmt_secs(wall));
+    if m.str("report") != "-" {
+        let metrics: Vec<hydra::metrics::RunMetrics> =
+            run.per_provider().into_iter().cloned().collect();
+        let doc = hydra::metrics::run_report(
+            &metrics,
+            &run.aggregate,
+            Some(hydra.registry().trace_json()),
+        );
+        std::fs::write(m.str("report"), doc.to_string_pretty())?;
+        println!("(report written to {})", m.str("report"));
+    }
+    // OVH breakdown (the §Perf hot-path decomposition).
+    for r in run.per_provider() {
+        println!(
+            "  {} OVH breakdown: partition {} | serialize {} | submit {}",
+            r.provider.short_name(),
+            fmt_secs(r.ovh.partition_s),
+            fmt_secs(r.ovh.serialize_s),
+            fmt_secs(r.ovh.submit_s),
+        );
+    }
+    Ok(())
+}
+
+fn parse_size(s: &str) -> Result<FactsSize, String> {
+    match s {
+        "small" => Ok(FactsSize::Small),
+        "default" => Ok(FactsSize::Default),
+        "large" => Ok(FactsSize::Large),
+        other => Err(format!("unknown size '{other}'")),
+    }
+}
+
+fn cmd_facts(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
+    let provider = ProviderId::parse(m.str("provider"))
+        .ok_or_else(|| format!("unknown provider '{}'", m.str("provider")))?;
+    let instances = m.usize("workflows")?;
+    let nodes = m.u64("nodes")? as u32;
+    let size = parse_size(m.str("size"))?;
+    let seed = m.u64("seed")?;
+
+    println!("loading artifacts from {:?} ...", default_artifacts_dir());
+    let rt = PjRtRuntime::load(default_artifacts_dir())?;
+    let pipe = FactsPipeline::new(&rt, size);
+
+    // Run one real instance end to end: science output + measured timings.
+    let inputs = data::generate(seed, size);
+    pipe.run(&inputs)?; // warm-up (compilation)
+    let result = pipe.run(&inputs)?;
+    println!(
+        "FACTS sample instance: total rise at horizon = {:.1} mm \
+         (modules: se {:.1} / poly {:.1}); steps {} / {} / {} / {}",
+        result.total_rise_mm,
+        result.module_medians_mm.0,
+        result.module_medians_mm.1,
+        fmt_secs(result.timings.pre_s),
+        fmt_secs(result.timings.fit_s),
+        fmt_secs(result.timings.project_s),
+        fmt_secs(result.timings.post_s),
+    );
+
+    // Broker `instances` copies across the chosen platform.
+    let cfg = hydra::api::ProviderConfig::simulated(provider);
+    let req = if provider == ProviderId::Bridges2 {
+        ResourceRequest::pilot(provider, nodes)
+    } else {
+        ResourceRequest::kubernetes(provider, nodes, 16)
+    };
+    let engine = WorkflowEngine::new(cfg, req);
+    let reg = hydra::broker::state::TaskRegistry::new();
+    let r = engine.execute_many(
+        &facts::workflow_spec(size),
+        instances,
+        &reg,
+        facts::measured_workflow(result.timings),
+    )?;
+    println!(
+        "{} x FACTS on {} ({} nodes): TTX {} (waves: {}), OVH {}",
+        instances,
+        provider.short_name(),
+        nodes,
+        fmt_secs(r.ttx_s),
+        r.wave_ttx_s.iter().map(|w| fmt_secs(*w)).collect::<Vec<_>>().join(" + "),
+        fmt_secs(r.ovh_s()),
+    );
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<(), Box<dyn std::error::Error>> {
+    let rt = PjRtRuntime::load(default_artifacts_dir())?;
+    let m = rt.manifest();
+    println!("quantiles: {:?}", m.quantiles);
+    println!("{:<24} {:>8} {:>8}  SHAPES", "ARTIFACT", "INPUTS", "OUTPUTS");
+    for a in &m.artifacts {
+        println!(
+            "{:<24} {:>8} {:>8}  {:?} -> {:?}",
+            a.name,
+            a.input_shapes.len(),
+            a.output_shapes.len(),
+            a.input_shapes,
+            a.output_shapes
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,355 @@
+//! Metrics: the paper's four experimental quantities plus tracing.
+//!
+//! * **OVH** — time Hydra spends preparing a workload and initiating its
+//!   execution: *real wall-clock time of broker work* (partitioning,
+//!   manifest building/serialization, bulk submission prep).
+//! * **TH** — Hydra's throughput: tasks *processed by the broker* per
+//!   second (`tasks / OVH`), explicitly not platform execution rate.
+//! * **TPT** — platform task processing time: virtual makespan of
+//!   executing the workload on the (simulated) platform, including
+//!   environment setup and teardown.
+//! * **TTX** — total execution time of the submitted workload on the
+//!   platform (used for the heterogeneous and FACTS experiments).
+//!
+//! The OVH/TPT split is the paper's own separation of broker-side and
+//! platform-side costs; DESIGN.md §1 explains why OVH stays real while
+//! TPT/TTX are simulated.
+
+use crate::api::task::{TaskId, TaskState};
+use crate::sim::provider::ProviderId;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Broker-side overhead breakdown for one workload run (seconds, wall).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Overhead {
+    /// Partitioning tasks into pods / bulk task descriptions.
+    pub partition_s: f64,
+    /// Building + serializing manifests (disk or memory).
+    pub serialize_s: f64,
+    /// Assembling and issuing the bulk submission.
+    pub submit_s: f64,
+}
+
+impl Overhead {
+    pub fn total_s(&self) -> f64 {
+        self.partition_s + self.serialize_s + self.submit_s
+    }
+}
+
+/// The paper's metric set for one (provider, workload) run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub provider: ProviderId,
+    pub tasks: usize,
+    pub pods: usize,
+    pub ovh: Overhead,
+    /// Virtual platform makespan (TPT for noop workloads, TTX otherwise).
+    pub tpt_s: f64,
+    pub ttx_s: f64,
+}
+
+impl RunMetrics {
+    /// TH: broker throughput in tasks/second.
+    pub fn throughput_tps(&self) -> f64 {
+        let ovh = self.ovh.total_s();
+        if ovh <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.tasks as f64 / ovh
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("provider", self.provider.short_name())
+            .set("tasks", self.tasks)
+            .set("pods", self.pods)
+            .set("ovh_s", self.ovh.total_s())
+            .set("ovh_partition_s", self.ovh.partition_s)
+            .set("ovh_serialize_s", self.ovh.serialize_s)
+            .set("ovh_submit_s", self.ovh.submit_s)
+            .set("th_tps", self.throughput_tps())
+            .set("tpt_s", self.tpt_s)
+            .set("ttx_s", self.ttx_s)
+    }
+}
+
+/// Aggregate of concurrent per-provider runs (Experiments 2–4): OVH is the
+/// max over concurrent brokers (they run in parallel), tasks sum, and the
+/// aggregate TH is total tasks over the aggregate OVH window.
+pub fn aggregate(runs: &[RunMetrics]) -> Option<AggregateMetrics> {
+    if runs.is_empty() {
+        return None;
+    }
+    let tasks: usize = runs.iter().map(|r| r.tasks).sum();
+    let pods: usize = runs.iter().map(|r| r.pods).sum();
+    let ovh_max = runs.iter().map(|r| r.ovh.total_s()).fold(0.0, f64::max);
+    let tpt_max = runs.iter().map(|r| r.tpt_s).fold(0.0, f64::max);
+    let ttx_max = runs.iter().map(|r| r.ttx_s).fold(0.0, f64::max);
+    Some(AggregateMetrics {
+        tasks,
+        pods,
+        ovh_s: ovh_max,
+        th_tps: if ovh_max > 0.0 { tasks as f64 / ovh_max } else { f64::INFINITY },
+        tpt_s: tpt_max,
+        ttx_s: ttx_max,
+    })
+}
+
+#[derive(Debug, Clone)]
+pub struct AggregateMetrics {
+    pub tasks: usize,
+    pub pods: usize,
+    pub ovh_s: f64,
+    pub th_tps: f64,
+    pub tpt_s: f64,
+    pub ttx_s: f64,
+}
+
+/// Assemble the reporting document for one brokered run: per-provider
+/// metrics, the aggregate, and optionally the full task trace — the
+/// "monitoring and reporting" surface of the resource-brokering
+/// requirements the paper cites (§3, Venkateswaran & Sarkar).
+pub fn run_report(
+    runs: &[RunMetrics],
+    agg: &AggregateMetrics,
+    trace: Option<Json>,
+) -> Json {
+    let mut doc = Json::obj()
+        .set(
+            "per_provider",
+            Json::Arr(runs.iter().map(|r| r.to_json()).collect()),
+        )
+        .set(
+            "aggregate",
+            Json::obj()
+                .set("tasks", agg.tasks)
+                .set("pods", agg.pods)
+                .set("ovh_s", agg.ovh_s)
+                .set("th_tps", agg.th_tps)
+                .set("tpt_s", agg.tpt_s)
+                .set("ttx_s", agg.ttx_s),
+        );
+    if let Some(t) = trace {
+        doc = doc.set("trace", t);
+    }
+    doc
+}
+
+/// One tracing event: a task state transition with a wall-clock timestamp
+/// (micros since trace start) and optionally a virtual timestamp.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub task: TaskId,
+    pub state: TaskState,
+    pub wall_us: u64,
+    pub virtual_s: Option<f64>,
+}
+
+/// Append-only trace log, mirroring the paper's "monitoring and tracing
+/// capabilities ... designed from the ground up for performance".
+#[derive(Debug, Default)]
+pub struct TraceLog {
+    start: Option<std::time::Instant>,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceLog {
+    pub fn new() -> TraceLog {
+        TraceLog { start: Some(std::time::Instant::now()), events: Vec::new() }
+    }
+
+    pub fn record(&mut self, task: TaskId, state: TaskState) {
+        self.record_virtual(task, state, None);
+    }
+
+    pub fn record_virtual(&mut self, task: TaskId, state: TaskState, virtual_s: Option<f64>) {
+        let wall_us = self
+            .start
+            .map(|s| s.elapsed().as_micros() as u64)
+            .unwrap_or(0);
+        self.events.push(TraceEvent { task, state, wall_us, virtual_s });
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events for one task, in order.
+    pub fn for_task(&self, task: TaskId) -> Vec<&TraceEvent> {
+        self.events.iter().filter(|e| e.task == task).collect()
+    }
+
+    /// Export as a JSON array (one object per event).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    let mut o = Json::obj()
+                        .set("task", e.task.0)
+                        .set("state", e.state.as_str())
+                        .set("wall_us", e.wall_us);
+                    if let Some(v) = e.virtual_s {
+                        o = o.set("virtual_s", v);
+                    }
+                    o
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Multi-trial series for one experiment point (mean ± std across seeds).
+#[derive(Debug, Clone)]
+pub struct TrialSeries {
+    pub label: String,
+    pub ovh: Vec<f64>,
+    pub th: Vec<f64>,
+    pub tpt: Vec<f64>,
+    pub ttx: Vec<f64>,
+}
+
+impl TrialSeries {
+    pub fn new(label: impl Into<String>) -> TrialSeries {
+        TrialSeries { label: label.into(), ovh: vec![], th: vec![], tpt: vec![], ttx: vec![] }
+    }
+
+    pub fn push_run(&mut self, m: &RunMetrics) {
+        self.ovh.push(m.ovh.total_s());
+        self.th.push(m.throughput_tps());
+        self.tpt.push(m.tpt_s);
+        self.ttx.push(m.ttx_s);
+    }
+
+    pub fn push_aggregate(&mut self, m: &AggregateMetrics) {
+        self.ovh.push(m.ovh_s);
+        self.th.push(m.th_tps);
+        self.tpt.push(m.tpt_s);
+        self.ttx.push(m.ttx_s);
+    }
+
+    pub fn ovh_summary(&self) -> Summary {
+        Summary::of(&self.ovh)
+    }
+
+    pub fn th_summary(&self) -> Summary {
+        Summary::of(&self.th)
+    }
+
+    pub fn tpt_summary(&self) -> Summary {
+        Summary::of(&self.tpt)
+    }
+
+    pub fn ttx_summary(&self) -> Summary {
+        Summary::of(&self.ttx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(provider: ProviderId, tasks: usize, ovh: f64, tpt: f64) -> RunMetrics {
+        RunMetrics {
+            provider,
+            tasks,
+            pods: tasks,
+            ovh: Overhead { partition_s: ovh / 2.0, serialize_s: ovh / 2.0, submit_s: 0.0 },
+            tpt_s: tpt,
+            ttx_s: tpt,
+        }
+    }
+
+    #[test]
+    fn throughput_is_tasks_over_ovh() {
+        let m = run(ProviderId::Aws, 1000, 2.0, 50.0);
+        assert!((m.throughput_tps() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_sums_tasks_and_takes_max_windows() {
+        // Exp 2: four concurrent providers, each processing 4000 tasks with
+        // ~same OVH => aggregate TH ~ 4x the per-provider TH.
+        let runs: Vec<RunMetrics> = ProviderId::CLOUDS
+            .iter()
+            .map(|&p| run(p, 4000, 2.0, 100.0))
+            .collect();
+        let agg = aggregate(&runs).unwrap();
+        assert_eq!(agg.tasks, 16_000);
+        assert!((agg.ovh_s - 2.0).abs() < 1e-9);
+        let per = runs[0].throughput_tps();
+        assert!((agg.th_tps / per - 4.0).abs() < 1e-9);
+        assert!(aggregate(&[]).is_none());
+    }
+
+    #[test]
+    fn trace_log_orders_and_filters() {
+        let mut log = TraceLog::new();
+        log.record(TaskId(1), TaskState::New);
+        log.record(TaskId(2), TaskState::New);
+        log.record_virtual(TaskId(1), TaskState::Done, Some(12.5));
+        assert_eq!(log.len(), 3);
+        let t1 = log.for_task(TaskId(1));
+        assert_eq!(t1.len(), 2);
+        assert!(t1[1].wall_us >= t1[0].wall_us);
+        assert_eq!(t1[1].virtual_s, Some(12.5));
+    }
+
+    #[test]
+    fn trace_json_exports_all_events() {
+        let mut log = TraceLog::new();
+        log.record(TaskId(7), TaskState::Running);
+        let j = log.to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("task").unwrap().as_u64(), Some(7));
+        assert_eq!(arr[0].get("state").unwrap().as_str(), Some("RUNNING"));
+    }
+
+    #[test]
+    fn trial_series_summaries() {
+        let mut s = TrialSeries::new("4K/4");
+        for i in 0..5 {
+            s.push_run(&run(ProviderId::Azure, 4000, 1.0 + i as f64 * 0.1, 30.0));
+        }
+        assert_eq!(s.ovh_summary().n, 5);
+        assert!(s.th_summary().mean > 0.0);
+        assert!((s.tpt_summary().mean - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_report_combines_everything() {
+        let runs = vec![run(ProviderId::Aws, 10, 1.0, 5.0), run(ProviderId::Azure, 10, 1.0, 6.0)];
+        let agg = aggregate(&runs).unwrap();
+        let mut log = TraceLog::new();
+        log.record(TaskId(0), TaskState::New);
+        let doc = run_report(&runs, &agg, Some(log.to_json()));
+        assert_eq!(doc.at(&["per_provider"]).unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(doc.at(&["aggregate", "tasks"]).unwrap().as_usize(), Some(20));
+        assert_eq!(doc.at(&["trace"]).unwrap().as_arr().unwrap().len(), 1);
+        // round-trips through the parser
+        let text = doc.to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+        // without trace, key absent
+        let doc2 = run_report(&runs, &agg, None);
+        assert!(doc2.get("trace").is_none());
+    }
+
+    #[test]
+    fn run_metrics_json_shape() {
+        let j = run(ProviderId::Jetstream2, 10, 1.0, 5.0).to_json();
+        for key in ["provider", "tasks", "pods", "ovh_s", "th_tps", "tpt_s", "ttx_s"] {
+            assert!(j.get(key).is_some(), "{key}");
+        }
+    }
+}

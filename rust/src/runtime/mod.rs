@@ -1,0 +1,347 @@
+//! PJRT runtime: load and execute the AOT-compiled FACTS artifacts.
+//!
+//! The compile path (`python/compile/aot.py`) lowers each FACTS step to
+//! HLO **text** under `artifacts/` plus a `manifest.json` describing
+//! input/output shapes. This module is the only place that touches XLA:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. Python never runs on this path.
+//!
+//! Interchange is HLO text because jax ≥ 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 (behind the published
+//! `xla` 0.1.6 crate) rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §3).
+
+use crate::util::json::{self};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A tensor crossing the runtime boundary: f32 data + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data length must match shape"
+        );
+        Tensor { data, shape }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Shape signature of one artifact from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub quantiles: Vec<f64>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+#[derive(Debug)]
+pub enum RuntimeError {
+    Io(String),
+    Manifest(String),
+    UnknownArtifact(String),
+    ShapeMismatch { artifact: String, detail: String },
+    Xla(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Io(m) => write!(f, "io: {m}"),
+            RuntimeError::Manifest(m) => write!(f, "manifest: {m}"),
+            RuntimeError::UnknownArtifact(n) => write!(f, "unknown artifact '{n}'"),
+            RuntimeError::ShapeMismatch { artifact, detail } => {
+                write!(f, "shape mismatch for '{artifact}': {detail}")
+            }
+            RuntimeError::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, RuntimeError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| RuntimeError::Io(format!("{}: {e}", dir.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, RuntimeError> {
+        let doc = json::parse(text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let quantiles = doc
+            .get("quantiles")
+            .and_then(|q| q.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
+        let arts = doc
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| RuntimeError::Manifest("missing 'artifacts' array".into()))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| RuntimeError::Manifest("artifact missing 'name'".into()))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| RuntimeError::Manifest(format!("{name}: missing 'file'")))?
+                .to_string();
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>, RuntimeError> {
+                a.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| RuntimeError::Manifest(format!("{name}: missing '{key}'")))?
+                    .iter()
+                    .map(|io| {
+                        io.get("shape")
+                            .and_then(|s| s.as_arr())
+                            .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                            .ok_or_else(|| RuntimeError::Manifest(format!("{name}: bad shape")))
+                    })
+                    .collect()
+            };
+            let input_shapes = shapes("inputs")?;
+            let output_shapes = shapes("outputs")?;
+            artifacts.push(ArtifactSpec { name, file, input_shapes, output_shapes });
+        }
+        Ok(Manifest { quantiles, artifacts })
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The runtime: one PJRT CPU client, lazily-compiled executables keyed by
+/// artifact name. `Mutex`-guarded so service-manager threads can share it.
+pub struct PjRtRuntime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    loaded: Mutex<HashMap<String, Loaded>>,
+    exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl PjRtRuntime {
+    /// Open the artifacts directory (expects `manifest.json`).
+    pub fn load(dir: impl Into<PathBuf>) -> Result<PjRtRuntime, RuntimeError> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| RuntimeError::Xla(e.to_string()))?;
+        Ok(PjRtRuntime {
+            dir,
+            client,
+            manifest,
+            loaded: Mutex::new(HashMap::new()),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.exec_count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Number of artifacts compiled so far (observability for the
+    /// compile-once cache).
+    pub fn compiled_count(&self) -> usize {
+        self.loaded.lock().unwrap().len()
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<(), RuntimeError> {
+        let mut g = self.loaded.lock().unwrap();
+        if g.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .spec(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError::Io("non-utf8 path".into()))?,
+        )
+        .map_err(|e| RuntimeError::Xla(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| RuntimeError::Xla(format!("compile {name}: {e}")))?;
+        g.insert(name.to_string(), Loaded { exe, spec });
+        Ok(())
+    }
+
+    /// Execute one artifact with shape checking; returns the output
+    /// tensors in manifest order.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
+        self.ensure_compiled(name)?;
+        let g = self.loaded.lock().unwrap();
+        let loaded = g.get(name).unwrap();
+        let spec = &loaded.spec;
+        if inputs.len() != spec.input_shapes.len() {
+            return Err(RuntimeError::ShapeMismatch {
+                artifact: name.to_string(),
+                detail: format!(
+                    "expected {} inputs, got {}",
+                    spec.input_shapes.len(),
+                    inputs.len()
+                ),
+            });
+        }
+        for (i, (t, want)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
+            if &t.shape != want {
+                return Err(RuntimeError::ShapeMismatch {
+                    artifact: name.to_string(),
+                    detail: format!("input {i}: expected {:?}, got {:?}", want, t.shape),
+                });
+            }
+        }
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let l = xla::Literal::vec1(&t.data);
+                let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+                l.reshape(&dims).map_err(|e| RuntimeError::Xla(e.to_string()))
+            })
+            .collect::<Result<_, _>>()?;
+
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| RuntimeError::Xla(format!("execute {name}: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| RuntimeError::Xla(e.to_string()))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| RuntimeError::Xla(format!("untuple {name}: {e}")))?;
+        if parts.len() != spec.output_shapes.len() {
+            return Err(RuntimeError::ShapeMismatch {
+                artifact: name.to_string(),
+                detail: format!(
+                    "expected {} outputs, got {}",
+                    spec.output_shapes.len(),
+                    parts.len()
+                ),
+            });
+        }
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        parts
+            .into_iter()
+            .zip(&spec.output_shapes)
+            .map(|(lit, shape)| {
+                let data = lit.to_vec::<f32>().map_err(|e| RuntimeError::Xla(e.to_string()))?;
+                if data.len() != shape.iter().product::<usize>() {
+                    return Err(RuntimeError::ShapeMismatch {
+                        artifact: name.to_string(),
+                        detail: format!("output length {} vs shape {:?}", data.len(), shape),
+                    });
+                }
+                Ok(Tensor { data, shape: shape.clone() })
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory: `$HYDRA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("HYDRA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+ "format": "hlo-text-v1",
+ "quantiles": [0.05, 0.5, 0.95],
+ "artifacts": [
+  {"name": "fit_k2_small", "file": "fit_k2_small.hlo.txt",
+   "inputs": [{"name": "in0", "shape": [4, 32, 2], "dtype": "f32"},
+              {"name": "in1", "shape": [4, 32], "dtype": "f32"}],
+   "outputs": [{"name": "theta", "shape": [4, 2], "dtype": "f32"},
+               {"name": "sigma2", "shape": [4], "dtype": "f32"},
+               {"name": "A", "shape": [4, 2, 2], "dtype": "f32"}]}
+ ]
+}"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.quantiles, vec![0.05, 0.5, 0.95]);
+        let s = m.spec("fit_k2_small").unwrap();
+        assert_eq!(s.input_shapes, vec![vec![4, 32, 2], vec![4, 32]]);
+        assert_eq!(s.output_shapes.len(), 3);
+        assert!(m.spec("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"file": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn tensor_invariants() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(Tensor::scalar(5.0).shape, Vec::<usize>::new());
+        assert_eq!(Tensor::zeros(&[3, 2]).data.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length")]
+    fn tensor_shape_mismatch_panics() {
+        Tensor::new(vec![1.0], vec![2, 2]);
+    }
+
+    // Execution against real artifacts is covered by
+    // rust/tests/integration_runtime.rs (requires `make artifacts`).
+}

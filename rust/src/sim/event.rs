@@ -1,0 +1,203 @@
+//! Discrete-event simulation core: virtual clock + ordered event queue.
+//!
+//! Every platform substrate (Kubernetes clusters, HPC batch queues, VM
+//! provisioning) runs on this engine. Virtual time is decoupled from wall
+//! time on purpose: the paper's platform-side metrics (TPT, TTX) are
+//! *simulated* here, while Hydra's broker-side metric (OVH) is measured in
+//! real wall-clock time — see DESIGN.md §1 for the substitution argument.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in microseconds since simulation start.
+pub type SimTime = u64;
+
+pub const MICROS: u64 = 1;
+pub const MILLIS: u64 = 1_000;
+pub const SECONDS: u64 = 1_000_000;
+
+/// Convert seconds (f64) to SimTime, saturating at zero.
+pub fn secs(s: f64) -> SimTime {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * SECONDS as f64).round() as SimTime
+    }
+}
+
+/// Convert SimTime to seconds.
+pub fn to_secs(t: SimTime) -> f64 {
+    t as f64 / SECONDS as f64
+}
+
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want earliest-first.
+        // Ties break by insertion order (seq) for determinism.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// An event queue with a virtual clock.
+///
+/// The owning simulator defines the event payload `E` and drives the loop:
+/// `while let Some((t, e)) = q.pop() { ... q.schedule_at(...) ... }`.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events dispatched so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` at absolute virtual time `at`. Scheduling in the
+    /// past is clamped to `now` (the event fires "immediately").
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        let at = at.max(self.now);
+        self.heap.push(Scheduled { at, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a relative delay.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        self.schedule_at(self.now.saturating_add(delay), event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.at >= self.now, "virtual time went backwards");
+        self.now = s.at;
+        self.processed += 1;
+        Some((s.at, s.event))
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn next_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(30, "c");
+        q.schedule_at(10, "a");
+        q.schedule_at(20, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(10, "a"), (20, "b"), (30, "c")]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5, 1);
+        q.schedule_at(5, 2);
+        q.schedule_at(5, 3);
+        let evs: Vec<i32> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(evs, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule_at(100, ());
+        q.schedule_at(50, ());
+        assert_eq!(q.now(), 0);
+        q.pop();
+        assert_eq!(q.now(), 50);
+        q.pop();
+        assert_eq!(q.now(), 100);
+    }
+
+    #[test]
+    fn past_scheduling_clamps_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule_at(100, "later");
+        q.pop();
+        q.schedule_at(10, "past"); // clamped to 100
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (100, "past"));
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule_at(40, ());
+        q.pop();
+        q.schedule_in(5, ());
+        assert_eq!(q.next_time(), Some(45));
+    }
+
+    #[test]
+    fn unit_conversions_roundtrip() {
+        assert_eq!(secs(1.5), 1_500_000);
+        assert_eq!(secs(-3.0), 0);
+        assert!((to_secs(secs(12.25)) - 12.25).abs() < 1e-9);
+        assert_eq!(MILLIS * 1000, SECONDS);
+        assert_eq!(MICROS * 1000, MILLIS);
+    }
+
+    #[test]
+    fn processed_counts_dispatches() {
+        let mut q = EventQueue::new();
+        for i in 0..10u64 {
+            q.schedule_at(i, i);
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.processed(), 10);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,221 @@
+//! Function-as-a-Service platform simulator.
+//!
+//! The paper's Service Proxy "exposes a private interface to add new
+//! managers like, for example, a Function as a Service manager" (§3.1).
+//! This simulator is the platform behind that manager: a Lambda/Cloud-
+//! Functions-style service with
+//!
+//! * a **concurrency limit** (account-level concurrent executions),
+//! * **cold starts**: an invocation landing on no warm instance pays
+//!   `cold_start_s`; instances stay warm for `keep_warm_s` after an
+//!   invocation finishes,
+//! * per-invocation duration scaled by the provider's `cpu_speed`
+//!   (functions get one vCPU-equivalent slice).
+//!
+//! Deterministic given the seed, like the other substrates.
+
+use super::event::{secs, to_secs, EventQueue};
+use super::provider::PlatformProfile;
+use crate::util::prng::Prng;
+
+/// One function invocation (one Hydra task).
+#[derive(Debug, Clone)]
+pub struct Invocation {
+    pub task_id: u64,
+    /// Work in seconds on an AWS-reference core.
+    pub work_s: f64,
+    /// Fixed duration independent of platform speed.
+    pub sleep_s: f64,
+}
+
+/// FaaS service parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FaasSpec {
+    /// Maximum concurrent executions.
+    pub concurrency: u32,
+    /// Container/image cold-start cost (seconds).
+    pub cold_start_s: f64,
+    /// Warm-start dispatch cost (seconds).
+    pub warm_start_s: f64,
+    /// How long an idle instance stays warm.
+    pub keep_warm_s: f64,
+}
+
+impl Default for FaasSpec {
+    fn default() -> FaasSpec {
+        FaasSpec { concurrency: 64, cold_start_s: 1.2, warm_start_s: 0.02, keep_warm_s: 300.0 }
+    }
+}
+
+/// Per-invocation record (virtual seconds).
+#[derive(Debug, Clone)]
+pub struct InvocationRecord {
+    pub task_id: u64,
+    pub started_s: f64,
+    pub finished_s: f64,
+    pub cold: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct FaasReport {
+    pub makespan_s: f64,
+    pub invocations: Vec<InvocationRecord>,
+    pub cold_starts: usize,
+    pub peak_concurrency: u32,
+}
+
+enum Ev {
+    Dispatch,
+    Done { idx: usize },
+}
+
+/// Simulate a bulk of invocations against one FaaS service.
+pub struct FaasSim {
+    profile: PlatformProfile,
+    spec: FaasSpec,
+    invocations: Vec<Invocation>,
+    #[allow(dead_code)]
+    rng: Prng,
+}
+
+impl FaasSim {
+    pub fn new(profile: PlatformProfile, spec: FaasSpec, seed: u64) -> FaasSim {
+        FaasSim { profile, spec, invocations: Vec::new(), rng: Prng::new(seed) }
+    }
+
+    pub fn submit(&mut self, invocations: Vec<Invocation>) {
+        self.invocations.extend(invocations);
+    }
+
+    pub fn run(&mut self) -> FaasReport {
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        // API batch ingestion cost, as with the other services.
+        let api = self.profile.api_batch_base_s
+            + self.profile.api_per_object_s * self.invocations.len() as f64;
+        q.schedule_at(secs(api), Ev::Dispatch);
+
+        let mut next = 0usize;
+        let mut running = 0u32;
+        let mut peak = 0u32;
+        let mut cold_starts = 0usize;
+        // Pool of warm instances: each entry is the time it goes cold.
+        let mut warm_until: Vec<f64> = Vec::new();
+        let mut records: Vec<Option<InvocationRecord>> = vec![None; self.invocations.len()];
+
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                Ev::Dispatch | Ev::Done { .. } => {
+                    if let Ev::Done { idx } = ev {
+                        running -= 1;
+                        let now = to_secs(q.now());
+                        let rec = records[idx].as_mut().unwrap();
+                        rec.finished_s = now.max(rec.started_s);
+                        // The instance that served it stays warm.
+                        warm_until.push(now + self.spec.keep_warm_s);
+                    }
+                    // Dispatch as many pending invocations as concurrency
+                    // allows.
+                    while next < self.invocations.len() && running < self.spec.concurrency {
+                        let now = to_secs(q.now());
+                        // Reuse a warm instance if one is available.
+                        let warm_slot = warm_until.iter().position(|&t| t > now);
+                        let (start_cost, cold) = match warm_slot {
+                            Some(i) => {
+                                warm_until.swap_remove(i);
+                                (self.spec.warm_start_s, false)
+                            }
+                            None => {
+                                cold_starts += 1;
+                                (self.spec.cold_start_s, true)
+                            }
+                        };
+                        let inv = &self.invocations[next];
+                        let run = inv.sleep_s + self.profile.payload_duration_s(inv.work_s, 1);
+                        let started = now + start_cost;
+                        records[next] = Some(InvocationRecord {
+                            task_id: inv.task_id,
+                            started_s: started,
+                            finished_s: started + run,
+                            cold,
+                        });
+                        q.schedule_in(secs(start_cost + run), Ev::Done { idx: next });
+                        next += 1;
+                        running += 1;
+                        peak = peak.max(running);
+                    }
+                }
+            }
+        }
+
+        FaasReport {
+            makespan_s: to_secs(q.now()),
+            invocations: records.into_iter().flatten().collect(),
+            cold_starts,
+            peak_concurrency: peak,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::provider::ProviderId;
+
+    fn run(n: usize, work: f64, spec: FaasSpec) -> FaasReport {
+        let profile = PlatformProfile::of(ProviderId::Aws);
+        let mut sim = FaasSim::new(profile, spec, 1);
+        sim.submit(
+            (0..n as u64)
+                .map(|i| Invocation { task_id: i, work_s: work, sleep_s: 0.0 })
+                .collect(),
+        );
+        sim.run()
+    }
+
+    #[test]
+    fn all_invocations_complete_in_order_windows() {
+        let r = run(200, 1.0, FaasSpec::default());
+        assert_eq!(r.invocations.len(), 200);
+        for i in &r.invocations {
+            assert!(i.finished_s >= i.started_s);
+            assert!(i.finished_s <= r.makespan_s + 1e-9);
+        }
+    }
+
+    #[test]
+    fn concurrency_limit_respected() {
+        let spec = FaasSpec { concurrency: 8, ..FaasSpec::default() };
+        let r = run(100, 2.0, spec);
+        assert!(r.peak_concurrency <= 8);
+    }
+
+    #[test]
+    fn first_wave_is_cold_then_warm_reuse() {
+        let spec = FaasSpec { concurrency: 16, ..FaasSpec::default() };
+        let r = run(64, 1.0, spec);
+        // 16 cold starts for the first wave; later invocations reuse.
+        assert_eq!(r.cold_starts, 16, "{}", r.cold_starts);
+        let warm = r.invocations.iter().filter(|i| !i.cold).count();
+        assert_eq!(warm, 48);
+    }
+
+    #[test]
+    fn keep_warm_expiry_forces_new_cold_starts() {
+        // keep_warm shorter than the gap created by long runs => instances
+        // go cold between waves.
+        let spec = FaasSpec {
+            concurrency: 4,
+            keep_warm_s: 0.0, // expire immediately
+            ..FaasSpec::default()
+        };
+        let r = run(12, 1.0, spec);
+        assert_eq!(r.cold_starts, 12, "every invocation should be cold");
+    }
+
+    #[test]
+    fn more_concurrency_is_faster() {
+        let slow = run(128, 4.0, FaasSpec { concurrency: 8, ..FaasSpec::default() });
+        let fast = run(128, 4.0, FaasSpec { concurrency: 64, ..FaasSpec::default() });
+        assert!(fast.makespan_s < slow.makespan_s);
+    }
+}

@@ -1,0 +1,296 @@
+//! HPC platform simulator: Slurm-like batch queue + pilot-job agent.
+//!
+//! Stands in for ACCESS Bridges2 driven through RADICAL-Pilot (paper §3.1,
+//! §5.3–5.4). The pilot abstraction is what Hydra's HPC Manager connector
+//! targets: one batch *pilot job* acquires N whole nodes, waits in the
+//! queue, boots an agent, and then executes bulk-submitted tasks on the
+//! pilot's cores without further queue round-trips.
+//!
+//! Model:
+//! * queue wait ~ lognormal(mean = `queue_wait_mean_s`, cv = `queue_wait_cv`)
+//!   — the paper reports "short and consistent queuing time" for its runs.
+//! * agent boot is a constant `pilot_boot_s`.
+//! * the agent launches tasks through a serialized spawner costing
+//!   `task_launch_s` per task (the RADICAL-Pilot executor), onto free cores
+//!   greedily in FIFO order; a task holds `cores` cores for its duration.
+//! * payload durations scale with the platform's `cpu_speed` (bare-metal
+//!   EPYC on Bridges2: the Fig 5 advantage).
+
+use super::event::{secs, to_secs, EventQueue};
+use super::provider::PlatformProfile;
+use crate::util::prng::Prng;
+
+/// One executable task submitted onto the pilot.
+#[derive(Debug, Clone)]
+pub struct HpcTaskSpec {
+    pub task_id: u64,
+    pub cores: u32,
+    /// Payload work in seconds on an AWS-reference core (0 = noop/sleep 0).
+    pub work_s: f64,
+    /// Fixed duration independent of platform speed (`sleep` tasks).
+    pub sleep_s: f64,
+}
+
+impl HpcTaskSpec {
+    pub fn noop(task_id: u64) -> HpcTaskSpec {
+        HpcTaskSpec { task_id, cores: 1, work_s: 0.0, sleep_s: 0.0 }
+    }
+}
+
+/// Pilot job resource request (whole nodes, as Bridges2 requires — the
+/// paper notes it "does not allow acquiring less than 128 cores").
+#[derive(Debug, Clone, Copy)]
+pub struct PilotSpec {
+    pub nodes: u32,
+}
+
+impl PilotSpec {
+    pub fn cores(&self, profile: &PlatformProfile) -> u32 {
+        self.nodes * profile.cores_per_node
+    }
+}
+
+/// Per-task execution record (virtual seconds since pilot submission).
+#[derive(Debug, Clone)]
+pub struct HpcTaskRecord {
+    pub task_id: u64,
+    pub launched_s: f64,
+    pub finished_s: f64,
+    /// Whether the task exited non-zero (injected failures).
+    pub failed: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct HpcReport {
+    pub queue_wait_s: f64,
+    pub agent_ready_s: f64,
+    /// Makespan from submission to last task completion (the TTX numerator
+    /// for Experiment 3/4 on the HPC platform).
+    pub makespan_s: f64,
+    pub tasks: Vec<HpcTaskRecord>,
+    pub events_processed: u64,
+    pub peak_cores_busy: u32,
+}
+
+enum Ev {
+    AgentReady,
+    LauncherFree,
+    TaskDone { idx: usize },
+}
+
+/// Simulate one pilot lifecycle executing `tasks`.
+pub struct HpcSim {
+    profile: PlatformProfile,
+    pilot: PilotSpec,
+    tasks: Vec<HpcTaskSpec>,
+    rng: Prng,
+    failure_rate: f64,
+}
+
+impl HpcSim {
+    pub fn new(profile: PlatformProfile, pilot: PilotSpec, seed: u64) -> HpcSim {
+        HpcSim { profile, pilot, tasks: Vec::new(), rng: Prng::new(seed), failure_rate: 0.0 }
+    }
+
+    /// Enable failure injection with per-task probability `p`.
+    pub fn with_failure_rate(mut self, p: f64) -> HpcSim {
+        self.failure_rate = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Bulk-submit task descriptions (the HPC Manager sends one bulk, as
+    /// with the CaaS path).
+    pub fn submit(&mut self, tasks: Vec<HpcTaskSpec>) {
+        self.tasks.extend(tasks);
+    }
+
+    pub fn run(&mut self) -> HpcReport {
+        let total_cores = self.pilot.cores(&self.profile);
+        assert!(total_cores > 0, "pilot must request at least one node");
+        let mut q: EventQueue<Ev> = EventQueue::new();
+
+        let queue_wait = if self.profile.queue_wait_mean_s > 0.0 {
+            self.rng
+                .lognormal_mean_cv(self.profile.queue_wait_mean_s, self.profile.queue_wait_cv)
+        } else {
+            0.0
+        };
+        let agent_ready = queue_wait + self.profile.pilot_boot_s;
+        q.schedule_at(secs(agent_ready), Ev::AgentReady);
+
+        let fail_flags: Vec<bool> = (0..self.tasks.len())
+            .map(|_| self.failure_rate > 0.0 && self.rng.bool_with_p(self.failure_rate))
+            .collect();
+        let mut free_cores = total_cores;
+        let mut next = 0usize; // FIFO cursor into self.tasks
+        let mut launcher_free = false;
+        let mut records: Vec<Option<HpcTaskRecord>> = vec![None; self.tasks.len()];
+        let mut peak = 0u32;
+
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                Ev::AgentReady | Ev::LauncherFree => {
+                    launcher_free = true;
+                    try_launch(
+                        &mut q, &self.profile, &self.tasks, &fail_flags, &mut next,
+                        &mut free_cores, &mut launcher_free, &mut records, &mut peak,
+                        total_cores,
+                    );
+                }
+                Ev::TaskDone { idx } => {
+                    free_cores += self.tasks[idx].cores.min(total_cores);
+                    let rec = records[idx].as_mut().unwrap();
+                    // Clamp against float rounding of the micros clock so
+                    // finished >= launched holds exactly.
+                    rec.finished_s = to_secs(q.now()).max(rec.launched_s);
+                    try_launch(
+                        &mut q, &self.profile, &self.tasks, &fail_flags, &mut next,
+                        &mut free_cores, &mut launcher_free, &mut records, &mut peak,
+                        total_cores,
+                    );
+                }
+            }
+        }
+
+        HpcReport {
+            queue_wait_s: queue_wait,
+            agent_ready_s: agent_ready,
+            makespan_s: to_secs(q.now()),
+            tasks: records.into_iter().flatten().collect(),
+            events_processed: q.processed(),
+            peak_cores_busy: peak,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_launch(
+    q: &mut EventQueue<Ev>,
+    profile: &PlatformProfile,
+    tasks: &[HpcTaskSpec],
+    fail_flags: &[bool],
+    next: &mut usize,
+    free_cores: &mut u32,
+    launcher_free: &mut bool,
+    records: &mut [Option<HpcTaskRecord>],
+    peak: &mut u32,
+    total_cores: u32,
+) {
+    // The spawner is serialized: it launches one task, then frees after
+    // task_launch_s. FIFO: if the head task does not fit, wait for cores.
+    if !*launcher_free || *next >= tasks.len() {
+        return;
+    }
+    let t = &tasks[*next];
+    let need = t.cores.min(total_cores); // oversized tasks clamp to pilot width
+    if need > *free_cores {
+        return; // head-of-line: wait for a TaskDone to free cores
+    }
+    *free_cores -= need;
+    let busy = total_cores - *free_cores;
+    *peak = (*peak).max(busy);
+    let idx = *next;
+    *next += 1;
+    *launcher_free = false;
+
+    let launch_done = to_secs(q.now()) + profile.task_launch_s;
+    let run = t.sleep_s + profile.payload_duration_s(t.work_s, need);
+    records[idx] = Some(HpcTaskRecord {
+        task_id: t.task_id,
+        launched_s: launch_done,
+        finished_s: launch_done + run, // finalized again at TaskDone
+        failed: fail_flags[idx],
+    });
+    q.schedule_in(secs(profile.task_launch_s), Ev::LauncherFree);
+    q.schedule_in(secs(profile.task_launch_s + run), Ev::TaskDone { idx });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::provider::{PlatformProfile, ProviderId};
+
+    fn b2() -> PlatformProfile {
+        PlatformProfile::of(ProviderId::Bridges2)
+    }
+
+    fn run_tasks(tasks: Vec<HpcTaskSpec>, nodes: u32, seed: u64) -> HpcReport {
+        let mut sim = HpcSim::new(b2(), PilotSpec { nodes }, seed);
+        sim.submit(tasks);
+        sim.run()
+    }
+
+    #[test]
+    fn all_tasks_complete() {
+        let tasks: Vec<_> = (0..500).map(HpcTaskSpec::noop).collect();
+        let r = run_tasks(tasks, 1, 1);
+        assert_eq!(r.tasks.len(), 500);
+        for t in &r.tasks {
+            assert!(t.finished_s >= t.launched_s);
+            assert!(t.launched_s >= r.agent_ready_s);
+        }
+    }
+
+    #[test]
+    fn queue_wait_short_and_consistent() {
+        // Paper §5.3: short, consistent queue times. CV 0.15 around 45 s.
+        let waits: Vec<f64> = (0..50)
+            .map(|s| run_tasks(vec![HpcTaskSpec::noop(0)], 1, s).queue_wait_s)
+            .collect();
+        let sum: f64 = waits.iter().sum();
+        let mean = sum / waits.len() as f64;
+        assert!((mean - 45.0).abs() < 10.0, "mean queue wait {mean}");
+        assert!(waits.iter().all(|w| *w > 10.0 && *w < 150.0));
+    }
+
+    #[test]
+    fn cores_capacity_respected() {
+        let tasks: Vec<_> = (0..300)
+            .map(|i| HpcTaskSpec { task_id: i, cores: 4, work_s: 1.0, sleep_s: 0.0 })
+            .collect();
+        let r = run_tasks(tasks, 1, 3);
+        assert!(r.peak_cores_busy <= 128);
+        assert_eq!(r.tasks.len(), 300);
+    }
+
+    #[test]
+    fn more_nodes_is_faster() {
+        let mk = |nodes| {
+            // Long enough tasks that cores, not the serialized launcher,
+            // are the bottleneck.
+            let tasks: Vec<_> = (0..512)
+                .map(|i| HpcTaskSpec { task_id: i, cores: 1, work_s: 2000.0, sleep_s: 0.0 })
+                .collect();
+            run_tasks(tasks, nodes, 7).makespan_s
+        };
+        let one = mk(1);
+        let two = mk(2);
+        assert!(two < one, "{two} !< {one}");
+    }
+
+    #[test]
+    fn oversized_task_clamps_to_pilot_width() {
+        // A 256-core task on a 128-core pilot runs clamped instead of
+        // deadlocking the FIFO head.
+        let r = run_tasks(vec![HpcTaskSpec { task_id: 0, cores: 256, work_s: 10.0, sleep_s: 0.0 }], 1, 9);
+        assert_eq!(r.tasks.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t: Vec<_> = (0..100).map(HpcTaskSpec::noop).collect();
+        let a = run_tasks(t.clone(), 2, 42);
+        let b = run_tasks(t, 2, 42);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.queue_wait_s, b.queue_wait_s);
+    }
+
+    #[test]
+    fn bare_metal_speed_beats_cloud_reference() {
+        // 110 s of AWS-reference work on one core should take ~10 s on
+        // Bridges2 (cpu_speed 11).
+        let r = run_tasks(vec![HpcTaskSpec { task_id: 0, cores: 1, work_s: 110.0, sleep_s: 0.0 }], 1, 5);
+        let t = &r.tasks[0];
+        assert!(((t.finished_s - t.launched_s) - 10.0).abs() < 1e-6);
+    }
+}

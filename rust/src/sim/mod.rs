@@ -1,0 +1,17 @@
+//! Platform substrates: deterministic simulators standing in for the live
+//! cloud/HPC testbeds of the paper's evaluation (see DESIGN.md §1).
+//!
+//! * [`event`] — discrete-event engine (virtual clock + ordered queue).
+//! * [`provider`] — calibrated per-platform profiles (JET2, CHI, AWS,
+//!   Azure, Bridges2).
+//! * [`kubernetes`] — cluster/pod lifecycle + scheduler (EKS/AKS stand-in).
+//! * [`hpc`] — batch queue + pilot agent (Bridges2 + RADICAL-Pilot stand-in).
+//! * [`faas`] — function-as-a-service (cold/warm starts, concurrency cap).
+//! * [`vm`] — VM/cluster provisioning latencies.
+
+pub mod event;
+pub mod faas;
+pub mod hpc;
+pub mod kubernetes;
+pub mod provider;
+pub mod vm;

@@ -1,0 +1,360 @@
+//! Platform profiles: the calibrated constants behind each simulated
+//! provider.
+//!
+//! The original evaluation ran on live allocations (Jetstream2, Chameleon,
+//! AWS, Azure, Bridges2). Those are unavailable here, so each platform is a
+//! deterministic simulator parameterized by this profile. The constants are
+//! calibrated so the *relationships* the paper reports hold (see DESIGN.md
+//! §4 "expected shapes"):
+//!
+//! * Fig 2 (bottom): Jetstream2 has the lowest per-container cost at small
+//!   vCPU counts (its vCPUs pin to physical cores); Azure has the flattest
+//!   contention curve (hypervisor optimizations) and overtakes Jetstream2
+//!   at 16 vCPUs; Chameleon has the steepest contention curve (least
+//!   optimized hypervisor); SCPP costs ≈ +9% TPT via the per-pod sandbox.
+//! * Fig 5: per-core compute speed Jetstream2 ≈ 2.5× AWS; Bridges2 ≈ 5×
+//!   Jetstream2 end-to-end (per-core speed, no virtualization overhead, and
+//!   128-core nodes), i.e. ≈ 10× AWS.
+//! * Exp 3A: HPC queue waits were "short and consistent" in the paper's
+//!   runs — mean 45 s with low variance.
+
+use std::fmt;
+
+/// The platforms of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProviderId {
+    Jetstream2,
+    Chameleon,
+    Aws,
+    Azure,
+    Bridges2,
+}
+
+impl ProviderId {
+    pub const ALL: [ProviderId; 5] = [
+        ProviderId::Jetstream2,
+        ProviderId::Chameleon,
+        ProviderId::Aws,
+        ProviderId::Azure,
+        ProviderId::Bridges2,
+    ];
+
+    /// The four cloud providers of Experiments 1–2.
+    pub const CLOUDS: [ProviderId; 4] = [
+        ProviderId::Jetstream2,
+        ProviderId::Chameleon,
+        ProviderId::Aws,
+        ProviderId::Azure,
+    ];
+
+    pub fn short_name(self) -> &'static str {
+        match self {
+            ProviderId::Jetstream2 => "JET2",
+            ProviderId::Chameleon => "CHI",
+            ProviderId::Aws => "AWS",
+            ProviderId::Azure => "AZURE",
+            ProviderId::Bridges2 => "BRIDGES2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProviderId> {
+        match s.to_ascii_lowercase().as_str() {
+            "jet2" | "jetstream2" => Some(ProviderId::Jetstream2),
+            "chi" | "chameleon" => Some(ProviderId::Chameleon),
+            "aws" => Some(ProviderId::Aws),
+            "azure" => Some(ProviderId::Azure),
+            "bridges2" | "b2" | "hpc" => Some(ProviderId::Bridges2),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ProviderId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.short_name())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlatformKind {
+    Cloud,
+    Hpc,
+}
+
+/// How guest vCPUs map onto host silicon (paper §5.1 uses this to explain
+/// Jetstream2's baseline advantage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuPinning {
+    PhysicalCore,
+    Thread,
+    /// Bare-metal HPC nodes: no hypervisor at all.
+    BareMetal,
+}
+
+/// Calibrated constants for one platform. All times in seconds.
+#[derive(Debug, Clone)]
+pub struct PlatformProfile {
+    pub id: ProviderId,
+    pub kind: PlatformKind,
+    pub pinning: CpuPinning,
+
+    // --- Kubernetes control plane (cloud platforms) -----------------------
+    /// Base latency of one bulk API submission call.
+    pub api_batch_base_s: f64,
+    /// Marginal API-server cost per object in a bulk submission.
+    pub api_per_object_s: f64,
+    /// Scheduler dequeue-and-bind time per pod.
+    pub sched_per_pod_s: f64,
+    /// Mean container start (sandbox + image-cached container boot).
+    pub container_start_s: f64,
+    /// Coefficient of variation of container start.
+    pub container_start_cv: f64,
+    /// Extra per-pod sandbox setup; the SCPP ≈ +9% TPT effect — SCPP pays
+    /// this once per *task*, MCPP amortizes it across the pod's containers.
+    pub pod_overhead_s: f64,
+    pub pod_teardown_s: f64,
+    /// Contention slope: effective per-container cost multiplier is
+    /// `1 + contention * (busy_vcpus - 1)` — the hypervisor-quality knob
+    /// behind the strong-scaling differences in Fig 2 (bottom).
+    pub contention: f64,
+
+    // --- compute ----------------------------------------------------------
+    /// Relative per-core execution speed for task payloads (AWS vCPU = 1.0).
+    pub cpu_speed: f64,
+    pub cores_per_node: u32,
+
+    // --- provisioning -----------------------------------------------------
+    /// Mean VM/cluster-node provisioning latency.
+    pub provision_mean_s: f64,
+    pub provision_cv: f64,
+
+    // --- HPC batch system (HPC platforms) ----------------------------------
+    pub queue_wait_mean_s: f64,
+    pub queue_wait_cv: f64,
+    /// Pilot-job agent bootstrap once the batch job starts.
+    pub pilot_boot_s: f64,
+    /// Per-task launch overhead inside the pilot (RADICAL-Pilot executor).
+    pub task_launch_s: f64,
+}
+
+impl PlatformProfile {
+    /// The calibrated profile for a provider (see module docs for the
+    /// paper-facing rationale of each constant).
+    pub fn of(id: ProviderId) -> PlatformProfile {
+        match id {
+            ProviderId::Jetstream2 => PlatformProfile {
+                id,
+                kind: PlatformKind::Cloud,
+                pinning: CpuPinning::PhysicalCore,
+                api_batch_base_s: 0.050,
+                api_per_object_s: 0.0018,
+                sched_per_pod_s: 0.004,
+                container_start_s: 0.90, // physical-core pinning: fastest baseline
+                container_start_cv: 0.10,
+                pod_overhead_s: 0.105,
+                pod_teardown_s: 0.30,
+                contention: 0.050,
+                cpu_speed: 2.5, // EPYC-Milan physical cores (Fig 5: 2.5x AWS)
+                cores_per_node: 16,
+                provision_mean_s: 95.0,
+                provision_cv: 0.15,
+                queue_wait_mean_s: 0.0,
+                queue_wait_cv: 0.0,
+                pilot_boot_s: 0.0,
+                task_launch_s: 0.0,
+            },
+            ProviderId::Chameleon => PlatformProfile {
+                id,
+                kind: PlatformKind::Cloud,
+                pinning: CpuPinning::Thread,
+                api_batch_base_s: 0.060,
+                api_per_object_s: 0.0022,
+                sched_per_pod_s: 0.005,
+                container_start_s: 1.30, // Haswell vCPUs on threads
+                container_start_cv: 0.14,
+                pod_overhead_s: 0.150,
+                pod_teardown_s: 0.35,
+                contention: 0.065, // least optimized hypervisor: worst scaling
+                cpu_speed: 0.9,
+                cores_per_node: 16,
+                provision_mean_s: 120.0,
+                provision_cv: 0.20,
+                queue_wait_mean_s: 0.0,
+                queue_wait_cv: 0.0,
+                pilot_boot_s: 0.0,
+                task_launch_s: 0.0,
+            },
+            ProviderId::Aws => PlatformProfile {
+                id,
+                kind: PlatformKind::Cloud,
+                pinning: CpuPinning::Thread,
+                api_batch_base_s: 0.045,
+                api_per_object_s: 0.0016,
+                sched_per_pod_s: 0.004,
+                container_start_s: 1.25, // Xeon vCPUs on threads
+                container_start_cv: 0.12,
+                pod_overhead_s: 0.140,
+                pod_teardown_s: 0.32,
+                contention: 0.020,
+                cpu_speed: 1.0, // the Fig 5 reference point
+                cores_per_node: 16,
+                provision_mean_s: 180.0, // EKS node groups are slow to come up
+                provision_cv: 0.15,
+                queue_wait_mean_s: 0.0,
+                queue_wait_cv: 0.0,
+                pilot_boot_s: 0.0,
+                task_launch_s: 0.0,
+            },
+            ProviderId::Azure => PlatformProfile {
+                id,
+                kind: PlatformKind::Cloud,
+                pinning: CpuPinning::Thread,
+                api_batch_base_s: 0.048,
+                api_per_object_s: 0.0017,
+                sched_per_pod_s: 0.004,
+                container_start_s: 1.20,
+                container_start_cv: 0.11,
+                // AKS hypervisor/containerd optimizations: cheapest sandbox
+                // ops of the four clouds — with 16 busy vCPUs the node is
+                // kubelet-bound, which is where Azure overtakes Jetstream2
+                // in Fig 2 (bottom).
+                pod_overhead_s: 0.085,
+                pod_teardown_s: 0.31,
+                contention: 0.005, // hypervisor optimizations: flattest curve
+                cpu_speed: 1.1,
+                cores_per_node: 16,
+                provision_mean_s: 200.0,
+                provision_cv: 0.18,
+                queue_wait_mean_s: 0.0,
+                queue_wait_cv: 0.0,
+                pilot_boot_s: 0.0,
+                task_launch_s: 0.0,
+            },
+            ProviderId::Bridges2 => PlatformProfile {
+                id,
+                kind: PlatformKind::Hpc,
+                pinning: CpuPinning::BareMetal,
+                api_batch_base_s: 0.0,
+                api_per_object_s: 0.0,
+                sched_per_pod_s: 0.0,
+                container_start_s: 0.0,
+                container_start_cv: 0.0,
+                pod_overhead_s: 0.0,
+                pod_teardown_s: 0.0,
+                contention: 0.0, // bare metal
+                cpu_speed: 11.0, // Fig 5: ~10x AWS, ~5x Jetstream2 end-to-end
+                cores_per_node: 128,
+                provision_mean_s: 0.0,
+                provision_cv: 0.0,
+                queue_wait_mean_s: 45.0, // "short and consistent" queue times
+                queue_wait_cv: 0.15,
+                pilot_boot_s: 30.0,
+                task_launch_s: 0.01, // pilot executor bulk-spawn rate (~100 tasks/s)
+            },
+        }
+    }
+
+    /// Effective per-container start cost when `busy` of the node's vCPUs
+    /// are occupied: the contention model behind Fig 2's strong-scaling
+    /// curves.
+    pub fn effective_start_s(&self, busy_vcpus: u32) -> f64 {
+        self.container_start_s * (1.0 + self.contention * busy_vcpus.saturating_sub(1) as f64)
+    }
+
+    /// Virtual duration of a task payload that needs `work_s` seconds on an
+    /// AWS-reference core, using `cpus` cores on this platform.
+    pub fn payload_duration_s(&self, work_s: f64, cpus: u32) -> f64 {
+        let cpus = cpus.max(1) as f64;
+        work_s / (self.cpu_speed * cpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_profiles_constructible_and_sane() {
+        for id in ProviderId::ALL {
+            let p = PlatformProfile::of(id);
+            assert_eq!(p.id, id);
+            assert!(p.cpu_speed > 0.0);
+            assert!(p.cores_per_node > 0);
+            match p.kind {
+                PlatformKind::Cloud => {
+                    assert!(p.container_start_s > 0.0);
+                    assert!(p.queue_wait_mean_s == 0.0);
+                }
+                PlatformKind::Hpc => {
+                    assert!(p.queue_wait_mean_s > 0.0);
+                    assert!(p.pilot_boot_s > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jet2_fastest_baseline_at_low_vcpus() {
+        // Fig 2 bottom: Jetstream2 beats the other clouds at 4 vCPUs.
+        let at4: Vec<(ProviderId, f64)> = ProviderId::CLOUDS
+            .iter()
+            .map(|&id| (id, PlatformProfile::of(id).effective_start_s(4)))
+            .collect();
+        let jet2 = at4.iter().find(|(id, _)| *id == ProviderId::Jetstream2).unwrap().1;
+        for (id, v) in &at4 {
+            if *id != ProviderId::Jetstream2 {
+                assert!(jet2 < *v, "JET2 {jet2} !< {id} {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn azure_overtakes_jet2_at_16_vcpus() {
+        // Fig 2 bottom: Azure "consistently outperforms Jetstream2 with 16 vCPUs".
+        let jet2 = PlatformProfile::of(ProviderId::Jetstream2).effective_start_s(16);
+        let azure = PlatformProfile::of(ProviderId::Azure).effective_start_s(16);
+        assert!(azure < jet2, "azure {azure} !< jet2 {jet2}");
+    }
+
+    #[test]
+    fn chameleon_scales_worst() {
+        // Fig 2 bottom: Chameleon shows the worst scaling.
+        for id in [ProviderId::Jetstream2, ProviderId::Aws, ProviderId::Azure] {
+            let chi = PlatformProfile::of(ProviderId::Chameleon);
+            let other = PlatformProfile::of(id);
+            let chi_growth = chi.effective_start_s(16) / chi.effective_start_s(1);
+            let o_growth = other.effective_start_s(16) / other.effective_start_s(1);
+            assert!(chi_growth > o_growth, "{id}");
+        }
+    }
+
+    #[test]
+    fn fig5_speed_ratios() {
+        let aws = PlatformProfile::of(ProviderId::Aws).cpu_speed;
+        let jet2 = PlatformProfile::of(ProviderId::Jetstream2).cpu_speed;
+        let b2 = PlatformProfile::of(ProviderId::Bridges2).cpu_speed;
+        assert!((jet2 / aws - 2.5).abs() < 0.1, "JET2 ~ 2.5x AWS");
+        assert!(b2 / aws >= 8.0 && b2 / aws <= 12.5, "B2 ~ 10x AWS");
+        assert!(b2 / jet2 >= 3.5 && b2 / jet2 <= 5.5, "B2 ~ 5x JET2 (incl. node effects)");
+    }
+
+    #[test]
+    fn payload_duration_scales_with_cores_and_speed() {
+        let b2 = PlatformProfile::of(ProviderId::Bridges2);
+        let aws = PlatformProfile::of(ProviderId::Aws);
+        assert!(b2.payload_duration_s(100.0, 1) < aws.payload_duration_s(100.0, 1));
+        assert!((aws.payload_duration_s(100.0, 4) - 25.0).abs() < 1e-9);
+        // zero cpus clamps to 1
+        assert!((aws.payload_duration_s(10.0, 0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn provider_parse_roundtrip() {
+        for id in ProviderId::ALL {
+            assert_eq!(ProviderId::parse(id.short_name()), Some(id));
+            assert_eq!(ProviderId::parse(&id.short_name().to_lowercase()), Some(id));
+        }
+        assert_eq!(ProviderId::parse("jetstream2"), Some(ProviderId::Jetstream2));
+        assert!(ProviderId::parse("gcp").is_none());
+    }
+}

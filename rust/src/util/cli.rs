@@ -1,0 +1,334 @@
+//! Declarative command-line parsing (no `clap` in the offline environment).
+//!
+//! Supports the subset the `hydra` binary and the bench harnesses need:
+//! subcommands, `--flag`, `--key value` / `--key=value` options with typed
+//! accessors and defaults, positional arguments, and generated `--help`
+//! text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// An option/flag specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(default) => value option ("" = required).
+    pub default: Option<&'static str>,
+}
+
+/// A (sub)command specification.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Command {
+        self.opts.push(OptSpec { name, help, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Command {
+        self.opts.push(OptSpec { name, help, default: Some(default) });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Command {
+        self.positionals.push((name, help));
+        self
+    }
+
+    fn usage(&self, program: &str) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {program} {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            match o.default {
+                None => s.push_str(&format!("  --{:<22} {}\n", o.name, o.help)),
+                Some("") => s.push_str(&format!("  --{:<22} {} (required)\n",
+                                                format!("{} <v>", o.name), o.help)),
+                Some(d) => s.push_str(&format!("  --{:<22} {} [default: {d}]\n",
+                                               format!("{} <v>", o.name), o.help)),
+            }
+        }
+        s.push_str("  --help                   show this message\n");
+        s
+    }
+}
+
+/// Parsed arguments for a matched command.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown option queried: --{name}"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected integer, got '{}'", self.str(name))))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        Ok(self.u64(name)? as usize)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected number, got '{}'", self.str(name))))
+    }
+
+    /// Comma-separated list of integers, e.g. `--tasks 4000,8000,16000`.
+    pub fn u64_list(&self, name: &str) -> Result<Vec<u64>, CliError> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{name}: bad list element '{s}'")))
+            })
+            .collect()
+    }
+}
+
+/// A CLI application: a set of subcommands.
+pub struct App {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+pub enum Parsed {
+    /// Ready to run.
+    Run(Matches),
+    /// `--help` was requested; the string is the help text to print.
+    Help(String),
+}
+
+impl App {
+    pub fn new(program: &'static str, about: &'static str) -> App {
+        App { program, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> App {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn top_usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n",
+                            self.program, self.about, self.program);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<12} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '<COMMAND> --help' for command options.\n");
+        s
+    }
+
+    /// Parse argv (excluding the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, CliError> {
+        let Some(cmd_name) = argv.first() else {
+            return Ok(Parsed::Help(self.top_usage()));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Ok(Parsed::Help(self.top_usage()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError(format!("unknown command '{cmd_name}'")))?;
+
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        for o in &cmd.opts {
+            match o.default {
+                None => {
+                    flags.insert(o.name.to_string(), false);
+                }
+                Some(d) => {
+                    values.insert(o.name.to_string(), d.to_string());
+                }
+            }
+        }
+
+        let mut positionals = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Ok(Parsed::Help(cmd.usage(self.program)));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key} for '{cmd_name}'")))?;
+                match spec.default {
+                    None => {
+                        if inline.is_some() {
+                            return Err(CliError(format!("--{key} takes no value")));
+                        }
+                        flags.insert(key, true);
+                    }
+                    Some(_) => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                            }
+                        };
+                        values.insert(key, v);
+                    }
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+
+        if positionals.len() < cmd.positionals.len() {
+            return Err(CliError(format!(
+                "'{cmd_name}' expects {} positional argument(s)",
+                cmd.positionals.len()
+            )));
+        }
+        for o in &cmd.opts {
+            if o.default == Some("") && values.get(o.name).map(|v| v.is_empty()).unwrap_or(true) {
+                return Err(CliError(format!("--{} is required", o.name)));
+            }
+        }
+        Ok(Parsed::Run(Matches { command: cmd_name.clone(), values, flags, positionals }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("hydra", "broker")
+            .command(
+                Command::new("run", "run a workload")
+                    .opt("tasks", "1000", "number of tasks")
+                    .opt("provider", "jet2", "target provider")
+                    .opt("out", "", "output file")
+                    .flag("scpp", "single container per pod"),
+            )
+            .command(Command::new("facts", "run FACTS").positional("config", "config path"))
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let m = match app().parse(&argv(&["run", "--tasks", "4000", "--scpp", "--out", "x"])) {
+            Ok(Parsed::Run(m)) => m,
+            other => panic!("{other:?}", other = matches!(other, Ok(_))),
+        };
+        assert_eq!(m.u64("tasks").unwrap(), 4000);
+        assert_eq!(m.str("provider"), "jet2");
+        assert!(m.flag("scpp"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = match app().parse(&argv(&["run", "--tasks=64", "--out=y"])) {
+            Ok(Parsed::Run(m)) => m,
+            _ => panic!(),
+        };
+        assert_eq!(m.u64("tasks").unwrap(), 64);
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let e = app().parse(&argv(&["run"])).err().unwrap();
+        assert!(e.0.contains("--out is required"), "{}", e.0);
+    }
+
+    #[test]
+    fn unknown_command_and_option_rejected() {
+        assert!(app().parse(&argv(&["nope"])).is_err());
+        assert!(app().parse(&argv(&["run", "--bogus", "1", "--out", "x"])).is_err());
+    }
+
+    #[test]
+    fn positional_required() {
+        assert!(app().parse(&argv(&["facts"])).is_err());
+        let m = match app().parse(&argv(&["facts", "cfg.toml"])) {
+            Ok(Parsed::Run(m)) => m,
+            _ => panic!(),
+        };
+        assert_eq!(m.positionals, vec!["cfg.toml".to_string()]);
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&argv(&[])), Ok(Parsed::Help(_))));
+        assert!(matches!(app().parse(&argv(&["--help"])), Ok(Parsed::Help(_))));
+        match app().parse(&argv(&["run", "--help"])) {
+            Ok(Parsed::Help(h)) => assert!(h.contains("--tasks")),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn list_option() {
+        let m = match app().parse(&argv(&["run", "--tasks", "1,2,3", "--out", "x"])) {
+            Ok(Parsed::Run(m)) => m,
+            _ => panic!(),
+        };
+        assert_eq!(m.u64_list("tasks").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn flag_rejects_value() {
+        assert!(app().parse(&argv(&["run", "--scpp=1", "--out", "x"])).is_err());
+    }
+}

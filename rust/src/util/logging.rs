@@ -1,0 +1,149 @@
+//! Leveled logging to stderr, configured via `HYDRA_LOG`
+//! (`error|warn|info|debug|trace`, default `warn`).
+//!
+//! The broker's hot path never formats log arguments unless the level is
+//! enabled (the macros check first), so logging is free when off.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Warn,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn init_from_env() {
+    INIT.get_or_init(|| {
+        let lvl = std::env::var("HYDRA_LOG")
+            .map(|v| Level::from_env(&v))
+            .unwrap_or(Level::Warn);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+/// Current level (reads `HYDRA_LOG` once).
+pub fn level() -> Level {
+    init_from_env();
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, benches).
+pub fn set_level(lvl: Level) {
+    init_from_env();
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+/// Emit a record. Called by the macros; prefer those.
+pub fn log(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        eprintln!("[{:5} {target}] {msg}", lvl.as_str());
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Error) {
+            $crate::util::logging::log($crate::util::logging::Level::Error, $target,
+                                       format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Warn) {
+            $crate::util::logging::log($crate::util::logging::Level::Warn, $target,
+                                       format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Info) {
+            $crate::util::logging::log($crate::util::logging::Level::Info, $target,
+                                       format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Debug) {
+            $crate::util::logging::log($crate::util::logging::Level::Debug, $target,
+                                       format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn parse_from_env_strings() {
+        assert_eq!(Level::from_env("DEBUG"), Level::Debug);
+        assert_eq!(Level::from_env("warning"), Level::Warn);
+        assert_eq!(Level::from_env("bogus"), Level::Warn);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Warn);
+    }
+}

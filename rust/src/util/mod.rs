@@ -1,0 +1,90 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON, CLI parsing, TOML-lite configs, deterministic PRNG, property
+//! testing, logging, and stats. See DESIGN.md §1 for the substitution table
+//! (these stand in for serde_json / clap / proptest / criterion, which are
+//! unavailable here).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod toml_lite;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide monotonic ID source (task ids, pod ids, workflow ids).
+#[derive(Debug, Default)]
+pub struct IdGen {
+    next: AtomicU64,
+}
+
+impl IdGen {
+    pub const fn new() -> IdGen {
+        IdGen { next: AtomicU64::new(0) }
+    }
+
+    pub fn next(&self) -> u64 {
+        self.next.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// Wall-clock stopwatch for OVH measurements (real broker work, not
+/// simulated time — see DESIGN.md §1).
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+/// Format seconds for human-readable tables: `1.23s`, `45.6ms`, `789us`.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idgen_monotonic() {
+        let g = IdGen::new();
+        let a = g.next();
+        let b = g.next();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_secs() >= 0.002);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0456), "45.60ms");
+        assert_eq!(fmt_secs(0.000789), "789us");
+    }
+}

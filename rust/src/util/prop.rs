@@ -1,0 +1,206 @@
+//! A small property-based testing harness.
+//!
+//! The offline environment ships no `proptest`, so this module provides the
+//! subset we need to state coordinator invariants (routing, batching, task
+//! state machines) as properties over generated inputs: seeded generators,
+//! a runner that reports the failing seed, and size-directed shrinking by
+//! re-running with smaller size budgets.
+//!
+//! Usage:
+//! ```no_run
+//! use hydra::util::prop::{forall, Gen};
+//! forall("sum is commutative", 200, |g| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Input source handed to property bodies. `size` bounds generated
+/// collection lengths so failures shrink toward small cases.
+pub struct Gen {
+    rng: Prng,
+    /// Current size budget in [1, 100].
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen { rng: Prng::new(seed), size: size.max(1) }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi_inclusive: u64) -> u64 {
+        self.rng.range_u64(lo, hi_inclusive.saturating_add(1))
+    }
+
+    pub fn usize(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.u64(lo as u64, hi_inclusive as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool_with_p(0.5)
+    }
+
+    /// Length scaled by the current size budget (at least `min`).
+    pub fn len(&mut self, min: usize, max_at_full_size: usize) -> usize {
+        let hi = (max_at_full_size * self.size / 100).max(min);
+        self.usize(min, hi)
+    }
+
+    pub fn vec<T>(&mut self, min: usize, max_at_full_size: usize,
+                  mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.len(min, max_at_full_size);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.range_usize(0, xs.len());
+        &xs[i]
+    }
+
+    pub fn string(&mut self, max_len: usize) -> String {
+        let n = self.usize(0, max_len);
+        (0..n)
+            .map(|_| {
+                let alphabet = b"abcdefghijklmnopqrstuvwxyz0123456789-_";
+                alphabet[self.rng.range_usize(0, alphabet.len())] as char
+            })
+            .collect()
+    }
+}
+
+/// Outcome of a single case, captured across the unwind boundary.
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    f: &F, seed: u64, size: usize,
+) -> Result<(), String> {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed, size);
+        f(&mut g);
+    });
+    match result {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            Err(msg)
+        }
+    }
+}
+
+/// Run `cases` random cases of the property; on failure, shrink the size
+/// budget to find a smaller failing case, then panic with the seed and
+/// message so the case can be replayed deterministically.
+pub fn forall<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    forall_seeded(name, 0xC0FFEE, cases, f)
+}
+
+/// `forall` with an explicit base seed (replay a failure by pasting the
+/// reported seed here).
+pub fn forall_seeded<F>(name: &str, base_seed: u64, cases: u64, f: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    // Quiet the default panic printer while we probe cases.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut failure: Option<(u64, usize, String)> = None;
+
+    'outer: for i in 0..cases {
+        let seed = base_seed.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15);
+        // Grow sizes over the run: early cases are small by construction.
+        let size = (1 + (i * 100 / cases.max(1)) as usize).min(100);
+        if let Err(msg) = run_case(&f, seed, size) {
+            // Shrink: retry the same seed with progressively smaller sizes
+            // and keep the smallest size that still fails.
+            let mut best = (seed, size, msg);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                match run_case(&f, best.0, s) {
+                    Err(m) => best = (best.0, s, m),
+                    Ok(()) => break,
+                }
+            }
+            failure = Some(best);
+            break 'outer;
+        }
+    }
+
+    std::panic::set_hook(prev_hook);
+    if let Some((seed, size, msg)) = failure {
+        panic!(
+            "property '{name}' failed (replay: forall_seeded(\"{name}\", {seed:#x}, 1, ..) \
+             with Gen size {size}): {msg}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("add commutes", 100, |g| {
+            let a = g.u64(0, 1 << 20);
+            let b = g.u64(0, 1 << 20);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails on big input", 50, |g| {
+                let v = g.vec(0, 50, |g| g.u64(0, 10));
+                assert!(v.len() < 3, "len was {}", v.len());
+            });
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay"), "{msg}");
+    }
+
+    #[test]
+    fn sizes_grow_over_run() {
+        // With 100 cases the first case has size 1: vec len <= max(0*1/100,..)
+        let mut g = Gen::new(1, 1);
+        let v = g.vec(0, 100, |g| g.bool());
+        assert!(v.len() <= 1);
+        let mut g = Gen::new(1, 100);
+        let v = g.vec(0, 100, |g| g.bool());
+        assert!(v.len() <= 100);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut g1 = Gen::new(99, 50);
+        let mut g2 = Gen::new(99, 50);
+        for _ in 0..32 {
+            assert_eq!(g1.u64(0, 1000), g2.u64(0, 1000));
+        }
+    }
+
+    #[test]
+    fn string_alphabet() {
+        let mut g = Gen::new(5, 100);
+        for _ in 0..50 {
+            let s = g.string(20);
+            assert!(s.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'));
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! A TOML-subset parser for Hydra configuration files.
+//!
+//! Supports what `configs/*.toml` actually use: `[section]` and
+//! `[section.sub]` headers, `key = value` with strings, integers, floats,
+//! booleans and homogeneous arrays, comments (`#`), and blank lines.
+//! Not supported (rejected, not silently misparsed): multi-line strings,
+//! dates, inline tables, arrays of tables.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section path ("a.b") -> key -> value. Top-level keys
+/// live under the empty section "".
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    pub fn str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(|v| v.as_str())
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// All section names under a prefix, e.g. `subsections("provider")`
+    /// yields `provider.aws`, `provider.jet2`, ...
+    pub fn subsections<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{prefix}.");
+        self.sections
+            .keys()
+            .filter(move |k| k.starts_with(&want))
+            .map(|k| k.as_str())
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    doc.sections.entry(String::new()).or_default();
+    let mut current = String::new();
+
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty()
+                || !name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c))
+            {
+                return Err(err(lineno, "invalid section name"));
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(val.trim(), lineno)?;
+        doc.sections.get_mut(&current).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn err(line: usize, message: &str) -> TomlError {
+    TomlError { line, message: message.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if s.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        let mut out = String::new();
+        let mut chars = body.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err(err(lineno, "bad escape in string")),
+                }
+            } else if c == '"' {
+                return Err(err(lineno, "unescaped quote in string"));
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, lineno)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(lineno, &format!("cannot parse value '{s}'")))
+}
+
+/// Split on commas not nested in brackets/strings (for arrays of arrays).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# global
+seed = 42
+name = "hydra-run"
+
+[provider.jet2]
+kind = "cloud"
+vcpus = 16
+weight = 1.5
+enabled = true
+regions = ["iu", "tacc"]
+
+[provider.bridges2]
+kind = "hpc"
+cores_per_node = 128
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = parse(DOC).unwrap();
+        assert_eq!(d.i64_or("", "seed", 0), 42);
+        assert_eq!(d.str("", "name"), Some("hydra-run"));
+        assert_eq!(d.str("provider.jet2", "kind"), Some("cloud"));
+        assert_eq!(d.i64_or("provider.jet2", "vcpus", 0), 16);
+        assert_eq!(d.f64_or("provider.jet2", "weight", 0.0), 1.5);
+        assert!(d.bool_or("provider.jet2", "enabled", false));
+        let regions = d.get("provider.jet2", "regions").unwrap().as_arr().unwrap();
+        assert_eq!(regions.len(), 2);
+        assert_eq!(regions[0].as_str(), Some("iu"));
+    }
+
+    #[test]
+    fn subsections_enumerate_providers() {
+        let d = parse(DOC).unwrap();
+        let names: Vec<&str> = d.subsections("provider").collect();
+        assert_eq!(names, vec!["provider.bridges2", "provider.jet2"]);
+    }
+
+    #[test]
+    fn comments_and_hash_in_strings() {
+        let d = parse("x = \"a#b\" # trailing\ny = 1 # c\n").unwrap();
+        assert_eq!(d.str("", "x"), Some("a#b"));
+        assert_eq!(d.i64_or("", "y", 0), 1);
+    }
+
+    #[test]
+    fn int_float_distinction_and_underscores() {
+        let d = parse("a = 10_000\nb = 2.5\nc = -3\n").unwrap();
+        assert_eq!(d.get("", "a"), Some(&TomlValue::Int(10000)));
+        assert_eq!(d.get("", "b"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(d.get("", "c"), Some(&TomlValue::Int(-3)));
+        // ints coerce to f64 on demand
+        assert_eq!(d.f64_or("", "a", 0.0), 10_000.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("x = \"unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let d = parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(d.str("", "s"), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let d = parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        let outer = d.get("", "m").unwrap().as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_arr().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn missing_keys_fall_back_to_defaults() {
+        let d = parse("").unwrap();
+        assert_eq!(d.i64_or("nope", "k", 9), 9);
+        assert!(d.str("nope", "k").is_none());
+    }
+}

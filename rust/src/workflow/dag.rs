@@ -1,0 +1,202 @@
+//! Workflow DAG specification and validation.
+
+use crate::api::task::TaskDescription;
+
+/// One step of a workflow: a task template plus dependencies on earlier
+/// steps (by index into `WorkflowSpec::steps`).
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub name: String,
+    pub task: TaskDescription,
+    pub deps: Vec<usize>,
+}
+
+impl Step {
+    pub fn new(name: impl Into<String>, task: TaskDescription) -> Step {
+        Step { name: name.into(), task, deps: Vec::new() }
+    }
+
+    pub fn after(mut self, dep: usize) -> Step {
+        self.deps.push(dep);
+        self
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkflowError {
+    Empty,
+    BadDependency { step: usize, dep: usize },
+    Cycle { involving: usize },
+    DuplicateName(String),
+}
+
+impl std::fmt::Display for WorkflowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkflowError::Empty => write!(f, "workflow has no steps"),
+            WorkflowError::BadDependency { step, dep } => {
+                write!(f, "step {step} depends on out-of-range step {dep}")
+            }
+            WorkflowError::Cycle { involving } => {
+                write!(f, "dependency cycle involving step {involving}")
+            }
+            WorkflowError::DuplicateName(n) => write!(f, "duplicate step name '{n}'"),
+        }
+    }
+}
+
+impl std::error::Error for WorkflowError {}
+
+/// A named DAG of steps.
+#[derive(Debug, Clone)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub steps: Vec<Step>,
+}
+
+impl WorkflowSpec {
+    pub fn new(name: impl Into<String>) -> WorkflowSpec {
+        WorkflowSpec { name: name.into(), steps: Vec::new() }
+    }
+
+    pub fn step(mut self, s: Step) -> WorkflowSpec {
+        self.steps.push(s);
+        self
+    }
+
+    /// Structural validation: non-empty, in-range deps, unique names,
+    /// acyclic.
+    pub fn validate(&self) -> Result<(), WorkflowError> {
+        if self.steps.is_empty() {
+            return Err(WorkflowError::Empty);
+        }
+        let mut names = std::collections::HashSet::new();
+        for (i, s) in self.steps.iter().enumerate() {
+            if !names.insert(s.name.clone()) {
+                return Err(WorkflowError::DuplicateName(s.name.clone()));
+            }
+            for &d in &s.deps {
+                if d >= self.steps.len() {
+                    return Err(WorkflowError::BadDependency { step: i, dep: d });
+                }
+            }
+        }
+        self.levels().map(|_| ())
+    }
+
+    /// Topological levels: level k contains every step whose longest
+    /// dependency chain has length k. Steps within a level are
+    /// independent and run concurrently (one submission wave each).
+    pub fn levels(&self) -> Result<Vec<Vec<usize>>, WorkflowError> {
+        let n = self.steps.len();
+        let mut level = vec![usize::MAX; n]; // MAX = unassigned
+        let mut remaining = n;
+        let mut progressed = true;
+        while remaining > 0 && progressed {
+            progressed = false;
+            for i in 0..n {
+                if level[i] != usize::MAX {
+                    continue;
+                }
+                let deps = &self.steps[i].deps;
+                if deps.iter().any(|&d| d < n && level[d] == usize::MAX) {
+                    continue;
+                }
+                let lvl = deps
+                    .iter()
+                    .filter(|&&d| d < n)
+                    .map(|&d| level[d] + 1)
+                    .max()
+                    .unwrap_or(0);
+                level[i] = lvl;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        if remaining > 0 {
+            let involving = (0..n).find(|&i| level[i] == usize::MAX).unwrap();
+            return Err(WorkflowError::Cycle { involving });
+        }
+        let max_level = level.iter().copied().max().unwrap_or(0);
+        let mut out = vec![Vec::new(); max_level + 1];
+        for (i, &l) in level.iter().enumerate() {
+            out[l].push(i);
+        }
+        Ok(out)
+    }
+
+    /// Longest chain length (critical path in steps).
+    pub fn depth(&self) -> Result<usize, WorkflowError> {
+        Ok(self.levels()?.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::task::TaskDescription;
+
+    fn t(name: &str) -> TaskDescription {
+        TaskDescription::executable(name, "step")
+    }
+
+    fn chain4() -> WorkflowSpec {
+        WorkflowSpec::new("facts")
+            .step(Step::new("pre", t("pre")))
+            .step(Step::new("fit", t("fit")).after(0))
+            .step(Step::new("project", t("project")).after(1))
+            .step(Step::new("post", t("post")).after(2))
+    }
+
+    #[test]
+    fn chain_validates_with_four_levels() {
+        let w = chain4();
+        w.validate().unwrap();
+        assert_eq!(w.levels().unwrap(), vec![vec![0], vec![1], vec![2], vec![3]]);
+        assert_eq!(w.depth().unwrap(), 4);
+    }
+
+    #[test]
+    fn diamond_has_three_levels() {
+        let w = WorkflowSpec::new("diamond")
+            .step(Step::new("a", t("a")))
+            .step(Step::new("b", t("b")).after(0))
+            .step(Step::new("c", t("c")).after(0))
+            .step(Step::new("d", t("d")).after(1).after(2));
+        assert_eq!(w.levels().unwrap(), vec![vec![0], vec![1, 2], vec![3]]);
+    }
+
+    #[test]
+    fn independent_steps_share_level_zero() {
+        let w = WorkflowSpec::new("par")
+            .step(Step::new("a", t("a")))
+            .step(Step::new("b", t("b")))
+            .step(Step::new("c", t("c")));
+        assert_eq!(w.levels().unwrap(), vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let w = WorkflowSpec::new("cycle")
+            .step(Step::new("a", t("a")).after(1))
+            .step(Step::new("b", t("b")).after(0));
+        assert!(matches!(w.validate(), Err(WorkflowError::Cycle { .. })));
+    }
+
+    #[test]
+    fn self_loop_detected() {
+        let w = WorkflowSpec::new("self").step(Step::new("a", t("a")).after(0));
+        assert!(matches!(w.validate(), Err(WorkflowError::Cycle { involving: 0 })));
+    }
+
+    #[test]
+    fn bad_dep_and_duplicates_rejected() {
+        let w = WorkflowSpec::new("bad").step(Step::new("a", t("a")).after(5));
+        assert!(matches!(w.validate(), Err(WorkflowError::BadDependency { step: 0, dep: 5 })));
+        let w = WorkflowSpec::new("dup")
+            .step(Step::new("x", t("x")))
+            .step(Step::new("x", t("x")));
+        assert!(matches!(w.validate(), Err(WorkflowError::DuplicateName(_))));
+        assert!(matches!(WorkflowSpec::new("empty").validate(), Err(WorkflowError::Empty)));
+    }
+}

@@ -1,0 +1,15 @@
+//! Workflow engine: DAG specifications and level-synchronous execution.
+//!
+//! Experiment 4 needs more than independent workloads: "Hydra has to
+//! deploy a stack on both cloud and HPC platforms that enables the
+//! execution of workflows, not just workloads" — Argo on the Kubernetes
+//! side, RADICAL-EnTK on the HPC side. This module is the stand-in for
+//! both: a validated DAG of steps executed wave-by-wave (level-synchronous
+//! scheduling, the same stage-barrier model EnTK uses for FACTS) through
+//! any Hydra service manager.
+
+pub mod dag;
+pub mod engine;
+
+pub use dag::{Step, WorkflowError, WorkflowSpec};
+pub use engine::{WorkflowEngine, WorkflowRunReport};

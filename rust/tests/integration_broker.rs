@@ -1,0 +1,198 @@
+//! Integration: the broker end to end across simulated platforms.
+//!
+//! Exercises the full paper pipeline — provider proxy → service proxy →
+//! policy binding → CaaS/HPC managers → partitioning → bulk submission →
+//! platform simulation → tracing — at Experiment-like scales (shrunk for
+//! CI wall-time; the benches run the paper-scale versions).
+
+use hydra::api::task::{Payload, TaskDescription, TaskState};
+use hydra::api::ResourceRequest;
+use hydra::broker::{BrokerPolicy, Hydra, PartitionModel, PodBuildMode};
+use hydra::sim::provider::ProviderId;
+
+fn containers(n: usize) -> Vec<TaskDescription> {
+    (0..n)
+        .map(|i| TaskDescription::container(format!("noop-{i}"), "hydra/noop:latest"))
+        .collect()
+}
+
+#[test]
+fn experiment1_shape_per_provider_scaling() {
+    // Exp 1 (shrunk): per-provider runs; TPT shrinks with vCPUs.
+    for provider in [ProviderId::Jetstream2, ProviderId::Aws] {
+        let mut tpts = Vec::new();
+        for vcpus in [4u32, 8, 16] {
+            let hydra = Hydra::builder()
+                .simulated_provider(provider)
+                .resource(ResourceRequest::kubernetes(provider, 1, vcpus))
+                .partition_model(PartitionModel::Scpp)
+                .seed(1)
+                .build()
+                .unwrap();
+            let run = hydra.submit(containers(400), &BrokerPolicy::RoundRobin).unwrap();
+            tpts.push(run.aggregate.tpt_s);
+        }
+        assert!(tpts[1] < tpts[0] && tpts[2] < tpts[1], "{provider}: strong scaling {tpts:?}");
+    }
+}
+
+#[test]
+fn experiment2_shape_cross_provider_consistency() {
+    // Exp 2 (shrunk): concurrent 4-provider run; tasks conserved, all
+    // traced to Done, equal split.
+    let mut b = Hydra::builder().partition_model(PartitionModel::Mcpp { max_cpp: 16 });
+    for p in ProviderId::CLOUDS {
+        b = b
+            .simulated_provider(p)
+            .resource(ResourceRequest::kubernetes(p, 1, 16));
+    }
+    let hydra = b.seed(2).build().unwrap();
+    let run = hydra.submit(containers(1600), &BrokerPolicy::RoundRobin).unwrap();
+    assert_eq!(run.reports.len(), 4);
+    assert_eq!(run.aggregate.tasks, 1600);
+    for m in run.per_provider() {
+        assert_eq!(m.tasks, 400);
+    }
+    let counts = hydra.registry().counts();
+    assert_eq!(counts.get(&TaskState::Done), Some(&1600));
+}
+
+#[test]
+fn experiment3a_shape_adding_hpc_keeps_broker_overhead() {
+    // Exp 3A (shrunk): the HPC path must not add disproportionate broker
+    // overhead per task compared to the cloud path.
+    let cloud_only = {
+        let hydra = Hydra::builder()
+            .simulated_provider(ProviderId::Aws)
+            .resource(ResourceRequest::kubernetes(ProviderId::Aws, 1, 16))
+            .partition_model(PartitionModel::Scpp)
+            .seed(3)
+            .build()
+            .unwrap();
+        let run = hydra.submit(containers(500), &BrokerPolicy::RoundRobin).unwrap();
+        run.aggregate.ovh_s / 500.0
+    };
+    let with_hpc = {
+        let hydra = Hydra::builder()
+            .simulated_provider(ProviderId::Bridges2)
+            .resource(ResourceRequest::pilot(ProviderId::Bridges2, 1))
+            .seed(3)
+            .build()
+            .unwrap();
+        let tasks: Vec<TaskDescription> = (0..500)
+            .map(|i| TaskDescription::executable(format!("noop-{i}"), "true"))
+            .collect();
+        let run = hydra.submit(tasks, &BrokerPolicy::RoundRobin).unwrap();
+        run.aggregate.ovh_s / 500.0
+    };
+    let ratio = with_hpc / cloud_only;
+    assert!(
+        ratio < 5.0,
+        "HPC per-task OVH {with_hpc} vs cloud {cloud_only} (x{ratio})"
+    );
+}
+
+#[test]
+fn experiment3b_shape_heterogeneous_tasks() {
+    // Exp 3B (shrunk): heterogeneous durations/sizes across cloud + HPC;
+    // everything completes; container/executable routing holds.
+    let mut b = Hydra::builder();
+    for p in [ProviderId::Jetstream2, ProviderId::Azure] {
+        b = b.simulated_provider(p).resource(
+            ResourceRequest::kubernetes(p, 2, 16).with_gpus_per_node(8),
+        );
+    }
+    b = b
+        .simulated_provider(ProviderId::Bridges2)
+        .resource(ResourceRequest::pilot(ProviderId::Bridges2, 1));
+    let hydra = b.partition_model(PartitionModel::Scpp).seed(4).build().unwrap();
+
+    let mut rng_state = 12345u64;
+    let mut next = move || {
+        rng_state = rng_state.wrapping_mul(6364136223846793005).wrapping_add(1);
+        rng_state >> 33
+    };
+    let tasks: Vec<TaskDescription> = (0..512)
+        .map(|i| {
+            let dur = 1.0 + (next() % 10) as f64; // 1-10 s
+            let cpus = 1 + (next() % 4) as u32; // 1-4 cpus
+            let gpus = (next() % 9) as u32 / 2; // 0-4 gpus (cluster cap 8)
+            if i % 2 == 0 {
+                TaskDescription::container(format!("con-{i}"), "hydra/sleep")
+                    .with_cpus(cpus)
+                    .with_gpus(gpus)
+                    .with_payload(Payload::Sleep(dur))
+            } else {
+                TaskDescription::executable(format!("exe-{i}"), "sleep")
+                    .with_cpus(cpus)
+                    .with_payload(Payload::Sleep(dur))
+            }
+        })
+        .collect();
+    let run = hydra.submit(tasks, &BrokerPolicy::ByTaskKind).unwrap();
+    assert_eq!(run.aggregate.tasks, 512);
+    assert!(hydra.registry().all_final());
+    assert_eq!(run.assignment[&ProviderId::Bridges2].len(), 256);
+    assert_eq!(
+        run.assignment[&ProviderId::Jetstream2].len() + run.assignment[&ProviderId::Azure].len(),
+        256
+    );
+}
+
+#[test]
+fn disk_vs_memory_build_modes_same_platform_outcome() {
+    // The §6 ablation: identical platform-side results (same pods, same
+    // seed); only the broker-side cost differs.
+    let dir = std::env::temp_dir().join(format!("hydra-it-disk-{}", std::process::id()));
+    let run_with = |mode: PodBuildMode, seed: u64| {
+        let hydra = Hydra::builder()
+            .simulated_provider(ProviderId::Chameleon)
+            .resource(ResourceRequest::kubernetes(ProviderId::Chameleon, 1, 16))
+            .partition_model(PartitionModel::Scpp)
+            .build_mode(mode)
+            .seed(seed)
+            .build()
+            .unwrap();
+        let run = hydra.submit(containers(300), &BrokerPolicy::RoundRobin).unwrap();
+        (run.aggregate.ovh_s, run.aggregate.tpt_s)
+    };
+    let (_ovh_mem, tpt_mem) = run_with(PodBuildMode::Memory, 9);
+    let (_ovh_disk, tpt_disk) = run_with(PodBuildMode::Disk { staging_dir: dir.clone() }, 9);
+    assert!((tpt_mem - tpt_disk).abs() < 1e-9);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unschedulable_task_fails_workload_cleanly() {
+    let hydra = Hydra::builder()
+        .simulated_provider(ProviderId::Aws)
+        .resource(ResourceRequest::kubernetes(ProviderId::Aws, 1, 8))
+        .seed(5)
+        .build()
+        .unwrap();
+    let mut tasks = containers(3);
+    tasks[1] = tasks[1].clone().with_cpus(64); // cannot fit any node
+    assert!(hydra.submit(tasks, &BrokerPolicy::RoundRobin).is_err());
+}
+
+#[test]
+fn trace_records_full_lifecycle_ordering() {
+    let hydra = Hydra::builder()
+        .simulated_provider(ProviderId::Azure)
+        .resource(ResourceRequest::kubernetes(ProviderId::Azure, 1, 8))
+        .seed(6)
+        .build()
+        .unwrap();
+    hydra.submit(containers(20), &BrokerPolicy::RoundRobin).unwrap();
+    let trace = hydra.registry().trace_json();
+    let events = trace.as_arr().unwrap();
+    assert_eq!(events.len(), 120, "20 tasks x 6 lifecycle states");
+    for task in 0..20u64 {
+        let mut last = 0u64;
+        for e in events.iter().filter(|e| e.get("task").unwrap().as_u64() == Some(task)) {
+            let ts = e.get("wall_us").unwrap().as_u64().unwrap();
+            assert!(ts >= last);
+            last = ts;
+        }
+    }
+}

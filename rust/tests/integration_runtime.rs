@@ -1,0 +1,163 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` (the Makefile runs it before `cargo test`).
+//! These tests prove the L2/L1 → L3 bridge: HLO text lowered from
+//! JAX+Pallas loads, compiles and executes in-process with correct
+//! numerics, with Python nowhere on the path.
+
+use hydra::facts::{data, pipeline::FactsPipeline, FactsSize, QUANTILES};
+use hydra::runtime::{default_artifacts_dir, PjRtRuntime, Tensor};
+
+fn runtime() -> PjRtRuntime {
+    PjRtRuntime::load(default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_size_variants() {
+    let rt = runtime();
+    let m = rt.manifest();
+    assert_eq!(m.quantiles, QUANTILES.to_vec());
+    for size in ["small", "default", "large"] {
+        for step in ["preprocess", "fit_k2", "fit_k4", "project_se", "project_poly",
+                     "postprocess"] {
+            assert!(
+                m.spec(&format!("{step}_{size}")).is_some(),
+                "missing artifact {step}_{size}"
+            );
+        }
+    }
+}
+
+#[test]
+fn preprocess_executes_with_correct_numerics() {
+    let rt = runtime();
+    let (b, t, _, _) = FactsSize::Small.dims();
+    // Constant temperature 3.0 => anomaly column must be exactly 0.
+    let temps = Tensor::new(vec![3.0; b * t], vec![b, t]);
+    let rates = Tensor::new(vec![1.5; b * t], vec![b, t]);
+    let out = rt.execute("preprocess_small", &[temps, rates]).unwrap();
+    assert_eq!(out.len(), 4);
+    let x4 = &out[0];
+    assert_eq!(x4.shape, vec![b, t, 4]);
+    for i in 0..b * t {
+        assert!((x4.data[i * 4] - 1.0).abs() < 1e-6, "ones column");
+        assert!(x4.data[i * 4 + 1].abs() < 1e-5, "anomaly column");
+    }
+    let tref = &out[3];
+    for v in &tref.data {
+        assert!((v - 3.0).abs() < 1e-5, "reference temperature");
+    }
+}
+
+#[test]
+fn fit_recovers_known_coefficients() {
+    let rt = runtime();
+    let (b, t, _, _) = FactsSize::Small.dims();
+    // y = 2 + 3*x with x in [0,1): theta should be ~[2, 3].
+    let mut x2 = Vec::with_capacity(b * t * 2);
+    let mut y = Vec::with_capacity(b * t);
+    for _site in 0..b {
+        for i in 0..t {
+            let x = i as f32 / t as f32;
+            x2.extend_from_slice(&[1.0, x]);
+            y.push(2.0 + 3.0 * x);
+        }
+    }
+    let out = rt
+        .execute("fit_k2_small", &[Tensor::new(x2, vec![b, t, 2]), Tensor::new(y, vec![b, t])])
+        .unwrap();
+    let theta = &out[0];
+    assert_eq!(theta.shape, vec![b, 2]);
+    for site in 0..b {
+        assert!((theta.data[site * 2] - 2.0).abs() < 0.05, "intercept {}", theta.data[site * 2]);
+        assert!((theta.data[site * 2 + 1] - 3.0).abs() < 0.1, "slope {}", theta.data[site * 2 + 1]);
+    }
+    let sigma2 = &out[1];
+    for v in &sigma2.data {
+        assert!(*v < 1e-3, "perfect fit has ~zero residual, got {v}");
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_shapes_and_names() {
+    let rt = runtime();
+    assert!(rt.execute("nope_small", &[]).is_err());
+    let bad = Tensor::zeros(&[2, 2]);
+    assert!(rt.execute("preprocess_small", &[bad.clone(), bad]).is_err());
+    let (b, t, _, _) = FactsSize::Small.dims();
+    let one = Tensor::zeros(&[b, t]);
+    assert!(rt.execute("preprocess_small", &[one]).is_err(), "arity check");
+}
+
+#[test]
+fn executables_are_compiled_once_and_reused() {
+    let rt = runtime();
+    let (b, t, _, _) = FactsSize::Small.dims();
+    let temps = Tensor::zeros(&[b, t]);
+    let rates = Tensor::zeros(&[b, t]);
+    assert_eq!(rt.compiled_count(), 0);
+    rt.execute("preprocess_small", &[temps.clone(), rates.clone()]).unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    rt.execute("preprocess_small", &[temps, rates]).unwrap();
+    assert_eq!(rt.compiled_count(), 1, "second call reuses the executable");
+    assert_eq!(rt.executions(), 2);
+}
+
+#[test]
+fn full_facts_pipeline_produces_plausible_sea_level_rise() {
+    let rt = runtime();
+    let pipe = FactsPipeline::new(&rt, FactsSize::Small);
+    let inputs = data::generate(42, FactsSize::Small);
+    let r = pipe.run(&inputs).unwrap();
+
+    let (_, _, _, y) = FactsSize::Small.dims();
+    let q = QUANTILES.len();
+    assert_eq!(r.combined.shape, vec![q, y]);
+    assert_eq!(r.envelope.shape, vec![2, y]);
+
+    // Quantile fan is ordered at the horizon.
+    for qi in 1..q {
+        assert!(
+            r.combined.data[qi * y + (y - 1)] >= r.combined.data[(qi - 1) * y + (y - 1)] - 1e-3,
+            "quantiles must be ordered"
+        );
+    }
+    // Warming scenario + positive sensitivities => rising seas, and the
+    // magnitude is centimeters-to-meters over the horizon, not garbage.
+    assert!(r.total_rise_mm > 0.0, "total rise {}", r.total_rise_mm);
+    assert!(r.total_rise_mm < 5000.0, "total rise {} mm implausible", r.total_rise_mm);
+    // Median rise grows along the projection (cumulative integral of a
+    // positive forcing).
+    let mid = q / 2;
+    let early = r.combined.data[mid * y + 2];
+    let late = r.combined.data[mid * y + (y - 1)];
+    assert!(late > early, "median must grow: {early} -> {late}");
+    // All four steps actually ran.
+    assert!(r.timings.pre_s > 0.0 && r.timings.fit_s > 0.0);
+    assert!(r.timings.project_s > 0.0 && r.timings.post_s > 0.0);
+}
+
+#[test]
+fn pipeline_is_deterministic_given_inputs() {
+    let rt = runtime();
+    let pipe = FactsPipeline::new(&rt, FactsSize::Small);
+    let inputs = data::generate(7, FactsSize::Small);
+    let a = pipe.run(&inputs).unwrap();
+    let b = pipe.run(&inputs).unwrap();
+    assert_eq!(a.combined.data, b.combined.data);
+    assert_eq!(a.total_rise_mm, b.total_rise_mm);
+}
+
+#[test]
+fn larger_ensemble_tightens_or_matches_quantile_noise() {
+    // large = 4x the MC samples of default; the fan should remain ordered
+    // and the median should agree within MC noise.
+    let rt = runtime();
+    let d_def = data::generate(9, FactsSize::Default);
+    let d_lrg = data::generate(9, FactsSize::Large);
+    let r_def = FactsPipeline::new(&rt, FactsSize::Default).run(&d_def).unwrap();
+    let r_lrg = FactsPipeline::new(&rt, FactsSize::Large).run(&d_lrg).unwrap();
+    let rel = (r_def.total_rise_mm - r_lrg.total_rise_mm).abs()
+        / r_def.total_rise_mm.abs().max(1.0);
+    assert!(rel < 0.25, "default {} vs large {}", r_def.total_rise_mm, r_lrg.total_rise_mm);
+}

@@ -1,0 +1,233 @@
+//! Property tests over coordinator invariants (routing, batching, state),
+//! using the hand-rolled `util::prop` harness (proptest is unavailable in
+//! the offline environment — see DESIGN.md §1).
+
+use hydra::api::task::{Payload, TaskDescription, TaskId, TaskState};
+use hydra::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
+use hydra::broker::policy::{assign, BrokerPolicy};
+use hydra::broker::state::TaskRegistry;
+use hydra::sim::kubernetes::{simulate_batch, ClusterSpec};
+use hydra::sim::provider::{PlatformProfile, ProviderId};
+use hydra::util::prop::{forall, Gen};
+
+fn gen_task(g: &mut Gen, max_cpu: u32) -> TaskDescription {
+    let name = format!("t-{}", g.u64(0, 1 << 30));
+    let mut t = if g.bool() {
+        TaskDescription::container(name, "img:latest")
+    } else {
+        TaskDescription::executable(name, "exe")
+    };
+    t = t.with_cpus(g.u64(1, max_cpu as u64) as u32);
+    t = t.with_mem_mb(g.u64(64, 2048));
+    t = match g.u64(0, 2) {
+        0 => t.with_payload(Payload::Noop),
+        1 => t.with_payload(Payload::Sleep(g.f64(0.1, 10.0))),
+        _ => t.with_payload(Payload::Work(g.f64(0.1, 100.0))),
+    };
+    t
+}
+
+#[test]
+fn prop_partition_conserves_tasks_and_capacity() {
+    forall("partition conserves tasks and respects capacity", 150, |g| {
+        let vcpus = g.u64(2, 32) as u32;
+        let cluster = ClusterSpec {
+            nodes: g.u64(1, 8) as u32,
+            vcpus_per_node: vcpus,
+            gpus_per_node: 0,
+            mem_mb_per_node: 1 << 30,
+        };
+        let tasks: Vec<(TaskId, TaskDescription)> = g
+            .vec(1, 300, |g| gen_task(g, vcpus))
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| (TaskId(i as u64), t))
+            .collect();
+        let model = if g.bool() {
+            PartitionModel::Scpp
+        } else {
+            PartitionModel::Mcpp { max_cpp: g.usize(1, 32) }
+        };
+        let p = Partitioner::new(model, PodBuildMode::Memory);
+        let pods = p.partition(&tasks, &cluster, 0).unwrap();
+
+        // Every task exactly once.
+        let mut seen: Vec<u64> =
+            pods.iter().flat_map(|p| p.containers.iter().map(|c| c.task_id)).collect();
+        seen.sort();
+        let want: Vec<u64> = (0..tasks.len() as u64).collect();
+        assert_eq!(seen, want, "task conservation");
+
+        // Every pod fits an empty node.
+        for pod in &pods {
+            assert!(pod.cpus() <= cluster.vcpus_per_node, "pod cpu over capacity");
+            assert!(pod.mem_mb() <= cluster.mem_mb_per_node, "pod mem over capacity");
+            match model {
+                PartitionModel::Scpp => assert_eq!(pod.containers.len(), 1),
+                PartitionModel::Mcpp { max_cpp } => {
+                    assert!(pod.containers.len() <= max_cpp);
+                }
+            }
+        }
+
+        // Pod ids are consecutive from the offset.
+        for (i, pod) in pods.iter().enumerate() {
+            assert_eq!(pod.id, i as u64);
+        }
+    });
+}
+
+#[test]
+fn prop_scpp_never_fewer_pods_than_mcpp() {
+    forall("SCPP produces >= pods than MCPP for the same workload", 100, |g| {
+        let cluster = ClusterSpec::uniform(1, 16);
+        let tasks: Vec<(TaskId, TaskDescription)> = g
+            .vec(1, 200, |g| gen_task(g, 4))
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| (TaskId(i as u64), t))
+            .collect();
+        let scpp = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory)
+            .partition(&tasks, &cluster, 0)
+            .unwrap();
+        let mcpp = Partitioner::new(
+            PartitionModel::Mcpp { max_cpp: g.usize(2, 16) },
+            PodBuildMode::Memory,
+        )
+        .partition(&tasks, &cluster, 0)
+        .unwrap();
+        assert!(scpp.len() >= mcpp.len(), "scpp {} < mcpp {}", scpp.len(), mcpp.len());
+        assert_eq!(scpp.len(), tasks.len());
+    });
+}
+
+#[test]
+fn prop_policy_assignment_is_a_partition_of_tasks() {
+    forall("policy assignment covers each task exactly once", 150, |g| {
+        let n_prov = g.usize(1, 4);
+        let providers: Vec<ProviderId> = ProviderId::CLOUDS[..n_prov].to_vec();
+        let tasks: Vec<(TaskId, TaskDescription)> = g
+            .vec(0, 250, |g| {
+                let mut t = gen_task(g, 4);
+                // Sometimes bind explicitly to an acquired provider.
+                if g.u64(0, 3) == 0 {
+                    t = t.on(*g.choice(&providers));
+                }
+                t
+            })
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| (TaskId(i as u64), t))
+            .collect();
+        let policy = match g.u64(0, 2) {
+            0 => BrokerPolicy::RoundRobin,
+            1 => BrokerPolicy::Weighted(
+                providers.iter().map(|p| (*p, g.f64(0.1, 5.0))).collect(),
+            ),
+            _ => BrokerPolicy::RoundRobin,
+        };
+        let a = assign(&policy, &tasks, &providers).unwrap();
+
+        let mut all: Vec<u64> = a.values().flatten().map(|id| id.0).collect();
+        all.sort();
+        let want: Vec<u64> = (0..tasks.len() as u64).collect();
+        assert_eq!(all, want, "assignment must partition the workload");
+
+        for p in a.keys() {
+            assert!(providers.contains(p), "unacquired provider in assignment");
+        }
+        // Explicit bindings honored.
+        for (id, t) in &tasks {
+            if let Some(p) = t.provider {
+                assert!(a[&p].contains(id), "explicit binding broken");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_state_machine_no_final_state_escapes() {
+    forall("final states are terminal under random transition storms", 100, |g| {
+        let reg = TaskRegistry::new();
+        let id = reg.register(TaskDescription::container("t", "i"));
+        let states = [
+            TaskState::Validated,
+            TaskState::Partitioned,
+            TaskState::Submitted,
+            TaskState::Running,
+            TaskState::Done,
+            TaskState::Failed,
+            TaskState::Canceled,
+        ];
+        let mut was_final = false;
+        for _ in 0..g.usize(1, 40) {
+            let target = *g.choice(&states);
+            let before = reg.state_of(id).unwrap();
+            let r = reg.transition(id, target);
+            let after = reg.state_of(id).unwrap();
+            if was_final {
+                assert!(r.is_err(), "transition out of final state accepted");
+                assert_eq!(before, after);
+            }
+            if r.is_err() {
+                assert_eq!(before, after, "failed transition must not change state");
+            }
+            was_final = after.is_final();
+        }
+    });
+}
+
+#[test]
+fn prop_simulation_conserves_tasks_and_orders_time() {
+    forall("kubernetes sim conserves tasks and orders timestamps", 60, |g| {
+        let cluster = ClusterSpec::uniform(g.u64(1, 4) as u32, g.u64(2, 16) as u32);
+        let tasks: Vec<(TaskId, TaskDescription)> = g
+            .vec(1, 120, |g| gen_task(g, 2))
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| (TaskId(i as u64), t))
+            .collect();
+        let p = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory);
+        let pods = p.partition(&tasks, &cluster, 0).unwrap();
+        let n_pods = pods.len();
+        let profile = PlatformProfile::of(*g.choice(&ProviderId::CLOUDS));
+        let seed = g.u64(0, u64::MAX / 2);
+        let report = simulate_batch(&profile, cluster, pods, seed);
+        assert_eq!(report.pods_completed, n_pods);
+        assert_eq!(report.tasks.len(), tasks.len());
+        for t in &report.tasks {
+            assert!(t.scheduled_s <= t.started_s);
+            assert!(t.started_s <= t.finished_s);
+            assert!(t.finished_s <= report.makespan_s + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_documents() {
+    use hydra::util::json::{parse, Json};
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.u64(0, 3) } else { g.u64(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e9, 1e9) * 100.0).round() / 100.0),
+            3 => Json::Str(g.string(24)),
+            4 => Json::Arr((0..g.usize(0, 5)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..g.usize(0, 5) {
+                    o = o.set(&format!("k{i}-{}", g.string(6)), gen_json(g, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    forall("json serialize/parse roundtrip", 200, |g| {
+        let doc = gen_json(g, 3);
+        let text = doc.to_string_compact();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, doc, "roundtrip failed for {text}");
+        let pretty = doc.to_string_pretty();
+        assert_eq!(parse(&pretty).unwrap(), doc, "pretty roundtrip failed");
+    });
+}
