@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verify + perf smoke in one command (ISSUE 1 CI/tooling satellite):
+#
+#   ./smoke.sh
+#
+# Builds release, runs the test suite, then runs the bench_quick harness,
+# which emits machine-readable BENCH_quick.json (the ROADMAP perf
+# trajectory record) into this directory.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+cargo run --release --bin bench_quick
+
+echo
+echo "smoke: OK (tier-1 green, BENCH_quick.json written)"

@@ -54,6 +54,13 @@ pub enum Payload {
 }
 
 /// User-facing task description (built via the builder methods).
+///
+/// After registration the broker never clones one of these (§Perf): the
+/// registry stores `Arc<TaskDescription>` and the policy layer,
+/// per-provider slices, and manager threads all share that handle —
+/// `TaskRegistry::register_all_shared` / `descriptions_of` hand the
+/// shared handles out in bulk, and the managers accept any
+/// `Borrow<TaskDescription>`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskDescription {
     pub name: String,

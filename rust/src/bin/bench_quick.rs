@@ -1,0 +1,209 @@
+//! bench_quick — the perf-trajectory smoke harness.
+//!
+//! A fast subset of Experiments 1–2 (4K tasks, fixed seeds) plus the
+//! Kubernetes scheduling microbench (16K pods, indexed vs linear-scan
+//! scheduler), emitting machine-readable `BENCH_quick.json` so every PR
+//! from this one onward leaves a comparable perf record (ROADMAP "Open
+//! items" → perf trajectory). Runs in seconds; wired into `rust/smoke.sh`
+//! after build + tests.
+//!
+//! Reported quantities:
+//! * **OVH** (ms) and **TH** (task/s) — broker-side cost/throughput for
+//!   the 4K-task points (the paper's Fig 2/3 metrics).
+//! * **events/s** — simulator event throughput for the 16K-pod
+//!   scheduling microbench, for the indexed scheduler and the seed's
+//!   linear scan, with the speedup and a determinism cross-check
+//!   (identical `TaskRecord`s from both schedulers).
+
+use hydra::api::{ResourceRequest, TaskDescription};
+use hydra::broker::{BrokerPolicy, Hydra, PartitionModel};
+use hydra::sim::kubernetes::{
+    ClusterSpec, ContainerSpec, KubernetesSim, PodSpec, SchedulerKind,
+};
+use hydra::sim::provider::ProviderId;
+use hydra::util::json::Json;
+use hydra::util::stats::Summary;
+use hydra::util::Stopwatch;
+
+/// Fixed seeds: the trajectory must be comparable across PRs.
+const SEEDS: [u64; 3] = [0xBEEF, 0xC0DE, 0xD00D];
+const POINT_TASKS: usize = 4000;
+const MICRO_PODS: usize = 16_000;
+const MICRO_NODES: u32 = 256;
+const MICRO_VCPUS: u32 = 16;
+const MICRO_SEED: u64 = 7;
+
+struct Point {
+    name: &'static str,
+    ovh_ms: Summary,
+    th_tps: Summary,
+    tpt_s: Summary,
+    pods: usize,
+}
+
+fn noop_containers(n: usize) -> Vec<TaskDescription> {
+    (0..n)
+        .map(|i| TaskDescription::container(format!("noop-{i}"), "hydra/noop:latest"))
+        .collect()
+}
+
+fn run_point(
+    name: &'static str,
+    providers: &[ProviderId],
+    model: PartitionModel,
+) -> Point {
+    let mut ovh = Vec::new();
+    let mut th = Vec::new();
+    let mut tpt = Vec::new();
+    let mut pods = 0usize;
+    for &seed in &SEEDS {
+        let mut b = Hydra::builder().partition_model(model).seed(seed);
+        for &p in providers {
+            b = b
+                .simulated_provider(p)
+                .resource(ResourceRequest::kubernetes(p, 1, 16));
+        }
+        let hydra = b.build().expect("simulated providers must build");
+        let run = hydra
+            .submit(noop_containers(POINT_TASKS), &BrokerPolicy::RoundRobin)
+            .expect("noop workload must broker");
+        ovh.push(run.aggregate.ovh_s * 1e3);
+        th.push(run.aggregate.th_tps);
+        tpt.push(run.aggregate.tpt_s);
+        pods = run.aggregate.pods;
+    }
+    Point {
+        name,
+        ovh_ms: Summary::of(&ovh),
+        th_tps: Summary::of(&th),
+        tpt_s: Summary::of(&tpt),
+        pods,
+    }
+}
+
+fn micro_pods() -> Vec<PodSpec> {
+    (0..MICRO_PODS as u64)
+        .map(|i| PodSpec { id: i, containers: vec![ContainerSpec::noop(i + 1)] })
+        .collect()
+}
+
+struct MicroRun {
+    wall_s: f64,
+    events: u64,
+    events_per_s: f64,
+    makespan_s: f64,
+}
+
+fn run_micro(kind: SchedulerKind) -> (MicroRun, Vec<hydra::sim::kubernetes::TaskRecord>) {
+    let profile = hydra::sim::provider::PlatformProfile::of(ProviderId::Jetstream2);
+    let cluster = ClusterSpec::uniform(MICRO_NODES, MICRO_VCPUS);
+    let mut sim = KubernetesSim::new(profile, cluster, MICRO_SEED).with_scheduler(kind);
+    sim.submit(micro_pods(), 0.0);
+    let sw = Stopwatch::start();
+    let report = sim.run();
+    let wall_s = sw.elapsed_secs();
+    assert_eq!(report.pods_completed, MICRO_PODS, "{kind:?}: pods lost");
+    let events_per_s = if wall_s > 0.0 {
+        report.events_processed as f64 / wall_s
+    } else {
+        f64::INFINITY
+    };
+    (
+        MicroRun {
+            wall_s,
+            events: report.events_processed,
+            events_per_s,
+            makespan_s: report.makespan_s,
+        },
+        report.tasks,
+    )
+}
+
+fn point_json(p: &Point) -> Json {
+    Json::obj()
+        .set("name", p.name)
+        .set("tasks", POINT_TASKS)
+        .set("pods", p.pods)
+        .set("ovh_ms_mean", p.ovh_ms.mean)
+        .set("ovh_ms_std", p.ovh_ms.std)
+        .set("th_tps_mean", p.th_tps.mean)
+        .set("th_tps_std", p.th_tps.std)
+        .set("tpt_s_mean", p.tpt_s.mean)
+}
+
+fn micro_json(m: &MicroRun) -> Json {
+    Json::obj()
+        .set("wall_s", m.wall_s)
+        .set("events", m.events)
+        .set("events_per_s", m.events_per_s)
+        .set("makespan_s", m.makespan_s)
+}
+
+fn main() {
+    println!("bench_quick: perf-trajectory smoke (fixed seeds {SEEDS:?})");
+    println!("\n--- broker points ({POINT_TASKS} noop tasks) ---");
+    println!(
+        "{:<16} {:>8} {:>16} {:>14} {:>10}",
+        "POINT", "PODS", "OVH (ms)", "TH (task/s)", "TPT (s)"
+    );
+    let points = [
+        run_point("exp1_mcpp_4k", &[ProviderId::Jetstream2], PartitionModel::Mcpp { max_cpp: 16 }),
+        run_point("exp1_scpp_4k", &[ProviderId::Jetstream2], PartitionModel::Scpp),
+        run_point("exp2_clouds_4k", &ProviderId::CLOUDS, PartitionModel::Mcpp { max_cpp: 16 }),
+    ];
+    for p in &points {
+        println!(
+            "{:<16} {:>8} {:>8.2} ±{:>5.2} {:>14.0} {:>10.1}",
+            p.name, p.pods, p.ovh_ms.mean, p.ovh_ms.std, p.th_tps.mean, p.tpt_s.mean
+        );
+    }
+
+    println!(
+        "\n--- scheduling microbench ({MICRO_PODS} pods, {MICRO_NODES} nodes x {MICRO_VCPUS} vCPUs, seed {MICRO_SEED}) ---"
+    );
+    let (linear, linear_records) = run_micro(SchedulerKind::LinearScan);
+    let (indexed, indexed_records) = run_micro(SchedulerKind::Indexed);
+    let records_identical = linear_records == indexed_records;
+    let speedup = linear.wall_s / indexed.wall_s.max(1e-12);
+    println!(
+        "{:<12} {:>10} {:>12} {:>14}",
+        "SCHEDULER", "WALL (s)", "EVENTS", "EVENTS/s"
+    );
+    println!(
+        "{:<12} {:>10.3} {:>12} {:>14.0}",
+        "linear", linear.wall_s, linear.events, linear.events_per_s
+    );
+    println!(
+        "{:<12} {:>10.3} {:>12} {:>14.0}",
+        "indexed", indexed.wall_s, indexed.events, indexed.events_per_s
+    );
+    println!(
+        "speedup: {speedup:.2}x | identical TaskRecords: {records_identical} | \
+         virtual makespan {:.1}s (both)",
+        indexed.makespan_s
+    );
+    assert!(
+        records_identical,
+        "indexed scheduler diverged from the linear-scan reference"
+    );
+
+    let doc = Json::obj()
+        .set("schema", "hydra-bench-quick/v1")
+        .set("seeds", Json::Arr(SEEDS.iter().map(|&s| Json::Num(s as f64)).collect()))
+        .set("points", Json::Arr(points.iter().map(point_json).collect()))
+        .set(
+            "sched_microbench",
+            Json::obj()
+                .set("pods", MICRO_PODS)
+                .set("nodes", MICRO_NODES as u64)
+                .set("vcpus_per_node", MICRO_VCPUS as u64)
+                .set("seed", MICRO_SEED)
+                .set("linear", micro_json(&linear))
+                .set("indexed", micro_json(&indexed))
+                .set("speedup", speedup)
+                .set("records_identical", records_identical),
+        );
+    let path = "BENCH_quick.json";
+    std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_quick.json");
+    println!("\n(wrote {path})");
+}

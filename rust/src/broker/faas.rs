@@ -70,13 +70,18 @@ impl FaasManager {
     }
 
     /// Execute a workload as function invocations.
-    pub fn execute(
+    ///
+    /// Generic over `Borrow<TaskDescription>` like the CaaS/HPC managers:
+    /// descriptions arrive as registry-shared `Arc` handles on the broker
+    /// path (§Perf).
+    pub fn execute<T: std::borrow::Borrow<TaskDescription>>(
         &self,
-        tasks: &[(TaskId, TaskDescription)],
+        tasks: &[(TaskId, T)],
         registry: &TaskRegistry,
     ) -> Result<FaasRunReport, FaasError> {
         let ids: Vec<TaskId> = tasks.iter().map(|(id, _)| *id).collect();
         for (_, t) in tasks {
+            let t = t.borrow();
             t.validate().map_err(FaasError::InvalidTask)?;
             if t.gpus > 0 {
                 return Err(FaasError::InvalidTask(format!(
@@ -92,7 +97,7 @@ impl FaasManager {
         let invocations: Vec<Invocation> = tasks
             .iter()
             .map(|(id, t)| {
-                let (work_s, sleep_s) = match t.payload {
+                let (work_s, sleep_s) = match t.borrow().payload {
                     Payload::Noop => (0.0, 0.0),
                     Payload::Sleep(s) => (0.0, s),
                     Payload::Work(w) => (w, 0.0),
@@ -113,7 +118,7 @@ impl FaasManager {
                 buf.push(',');
             }
             Json::obj()
-                .set("function", t.name.as_str())
+                .set("function", t.borrow().name.as_str())
                 .set("qualifier", "$LATEST")
                 .set("payload", Json::obj().set("hydra_task_id", id.0))
                 .write_into(&mut buf);

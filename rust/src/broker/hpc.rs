@@ -83,14 +83,18 @@ impl HpcManager {
 
     /// Execute a workload: validate → serialize bulk task descriptions →
     /// submit onto the pilot → trace to completion.
-    pub fn execute(
+    ///
+    /// Generic over `Borrow<TaskDescription>`: the service proxy passes
+    /// `Arc<TaskDescription>` handles shared with the registry (§Perf: no
+    /// description clone per manager hop).
+    pub fn execute<T: std::borrow::Borrow<TaskDescription>>(
         &self,
-        tasks: &[(TaskId, TaskDescription)],
+        tasks: &[(TaskId, T)],
         registry: &TaskRegistry,
     ) -> Result<HpcRunReport, HpcError> {
         let ids: Vec<TaskId> = tasks.iter().map(|(id, _)| *id).collect();
         for (_, t) in tasks {
-            t.validate().map_err(HpcError::InvalidTask)?;
+            t.borrow().validate().map_err(HpcError::InvalidTask)?;
         }
         registry.transition_all(&ids, TaskState::Validated)?;
 
@@ -100,6 +104,7 @@ impl HpcManager {
         let specs: Vec<HpcTaskSpec> = tasks
             .iter()
             .map(|(id, t)| {
+                let t = t.borrow();
                 let (work_s, sleep_s) = match t.payload {
                     Payload::Noop => (0.0, 0.0),
                     Payload::Sleep(s) => (0.0, s),
@@ -113,18 +118,16 @@ impl HpcManager {
         registry.transition_all(&ids, TaskState::Partitioned)?;
 
         // -- OVH: serialize the bulk submission (RADICAL-Pilot-style task
-        // description dicts in one JSON document) ------------------------
+        // description dicts in one JSON document) — written straight into
+        // the bulk buffer, no per-task scratch String (§Perf).
         let sw = Stopwatch::start();
         let mut buf = String::with_capacity(tasks.len() * 128);
         buf.push('[');
-        let mut scratch = String::with_capacity(160);
         for (i, ((id, t), spec)) in tasks.iter().zip(&specs).enumerate() {
             if i > 0 {
                 buf.push(',');
             }
-            scratch.clear();
-            task_dict(*id, t, spec).write_into(&mut scratch);
-            buf.push_str(&scratch);
+            task_dict(*id, t.borrow(), spec).write_into(&mut buf);
         }
         buf.push(']');
         let bytes_serialized = buf.len();

@@ -18,10 +18,22 @@
 //!   the file system. That is inefficient").
 //! * **Memory** — manifests are built in RAM and handed to the provider
 //!   API directly (their prototyped fix; see benches/ablations.rs).
+//!
+//! §Perf (data-path overhaul): the pipeline is zero-copy end to end —
+//! `partition` builds the `Vec<PodSpec>` once, `build_manifests` takes it
+//! *by value* and returns it inside [`PreparedWorkload`] (no `to_vec`),
+//! and the manager moves the same vector into the simulator's `submit`.
+//! Memory-mode manifests are written into **one shared buffer per batch**
+//! (`manifest_blob` + byte spans) instead of one `String` per pod, so
+//! serializing a 16K-pod workload costs O(log) buffer growths, not 16K
+//! allocations. Task descriptions arrive behind `Borrow<TaskDescription>`
+//! so callers can pass `Arc<TaskDescription>` handles shared with the
+//! registry instead of cloned descriptions.
 
 use crate::api::task::{TaskDescription, TaskId, TaskKind, Payload};
 use crate::sim::kubernetes::{ClusterSpec, ContainerSpec, PodSpec};
-use crate::util::json::Json;
+use crate::util::json::{push_json_str, push_u64, push_u64_padded, Json};
+use std::borrow::Borrow;
 use std::io::Write;
 use std::path::PathBuf;
 
@@ -51,15 +63,41 @@ pub enum PodBuildMode {
 }
 
 /// A prepared workload: simulator-ready pods plus their serialized
-/// manifests (bytes written to disk in Disk mode).
+/// manifests. Memory mode concatenates every manifest into one
+/// `manifest_blob` addressed by byte spans (one buffer per batch, §Perf);
+/// Disk mode records the staging file paths instead.
 #[derive(Debug)]
 pub struct PreparedWorkload {
     pub pods: Vec<PodSpec>,
-    /// Compact JSON manifests, index-aligned with `pods` (Memory mode
-    /// keeps them; Disk mode records the file paths instead).
-    pub manifests: Vec<String>,
+    /// All Memory-mode manifests back to back; empty in Disk mode.
+    pub manifest_blob: String,
+    /// `(start, end)` byte ranges of each pod's manifest in
+    /// `manifest_blob`, index-aligned with `pods` (Memory mode only).
+    pub manifest_spans: Vec<(usize, usize)>,
     pub manifest_paths: Vec<PathBuf>,
     pub bytes_serialized: usize,
+}
+
+impl PreparedWorkload {
+    /// The i-th pod's manifest. **Memory mode only**: Disk mode keeps no
+    /// manifests in memory (read them back via `manifest_paths`), so
+    /// `manifest_count()` is 0 there and any index panics — check the
+    /// build mode or `manifest_count()` first.
+    pub fn manifest(&self, i: usize) -> &str {
+        let (s, e) = self.manifest_spans[i];
+        &self.manifest_blob[s..e]
+    }
+
+    /// Iterate Memory-mode manifests in pod order (empty in Disk mode).
+    pub fn manifests(&self) -> impl Iterator<Item = &str> + '_ {
+        self.manifest_spans.iter().map(|&(s, e)| &self.manifest_blob[s..e])
+    }
+
+    /// Number of in-memory manifests: `pods.len()` in Memory mode, 0 in
+    /// Disk mode (where `manifest_paths.len()` counts instead).
+    pub fn manifest_count(&self) -> usize {
+        self.manifest_spans.len()
+    }
 }
 
 /// Partitioning/serialization errors.
@@ -95,9 +133,13 @@ impl Partitioner {
 
     /// Partition `tasks` into pods that individually fit an empty node of
     /// `cluster`. Preserves task order (FIFO fairness downstream).
-    pub fn partition(
+    ///
+    /// Generic over `Borrow<TaskDescription>`: the broker passes
+    /// `Arc<TaskDescription>` handles shared with the registry; tests may
+    /// pass owned descriptions.
+    pub fn partition<T: Borrow<TaskDescription>>(
         &self,
-        tasks: &[(TaskId, TaskDescription)],
+        tasks: &[(TaskId, T)],
         cluster: &ClusterSpec,
         first_pod_id: u64,
     ) -> Result<Vec<PodSpec>, PartitionError> {
@@ -105,6 +147,7 @@ impl Partitioner {
         let cap_gpus = cluster.gpus_per_node;
         let cap_mem = cluster.mem_mb_per_node;
         for (id, t) in tasks {
+            let t = t.borrow();
             if t.cpus > cap_cpus {
                 return Err(PartitionError::Unschedulable {
                     task: *id,
@@ -135,7 +178,7 @@ impl Partitioner {
         let (mut cur_cpu, mut cur_gpu, mut cur_mem) = (0u32, 0u32, 0u64);
         let mut pod_id = first_pod_id;
         for (id, t) in tasks {
-            let c = to_container(*id, t);
+            let c = to_container(*id, t.borrow());
             let fits = cur.len() < max_cpp
                 && cur_cpu + c.cpus <= cap_cpus
                 && cur_gpu + c.gpus <= cap_gpus
@@ -161,38 +204,46 @@ impl Partitioner {
     /// Build (and in Disk mode persist) the Kubernetes manifests for a
     /// set of pods. The serialization cost measured here is the dominant
     /// OVH component of the paper's Experiment 1.
-    pub fn build_manifests(
+    ///
+    /// Takes `pods` by value and hands the same vector back inside the
+    /// [`PreparedWorkload`] — the caller moves it onward to the simulator
+    /// without any `PodSpec` clone (§Perf).
+    pub fn build_manifests<T: Borrow<TaskDescription>>(
         &self,
-        pods: &[PodSpec],
-        tasks: &[(TaskId, TaskDescription)],
+        pods: Vec<PodSpec>,
+        tasks: &[(TaskId, T)],
     ) -> Result<PreparedWorkload, PartitionError> {
         // Index task descriptions for manifest enrichment (image, name).
         let by_id: std::collections::HashMap<u64, &TaskDescription> =
-            tasks.iter().map(|(id, t)| (id.0, t)).collect();
+            tasks.iter().map(|(id, t)| (id.0, t.borrow())).collect();
 
-        let mut manifests = Vec::with_capacity(pods.len());
+        let mut blob = String::new();
+        let mut spans = Vec::new();
         let mut paths = Vec::new();
         let mut bytes = 0usize;
-        let mut buf = String::with_capacity(1024);
 
-        if let PodBuildMode::Disk { staging_dir } = &self.build_mode {
-            std::fs::create_dir_all(staging_dir)
-                .map_err(|e| PartitionError::Io(e.to_string()))?;
-        }
-
-        for pod in pods {
-            buf.clear();
-            write_pod_manifest(&mut buf, pod, &by_id);
-            bytes += buf.len();
-            match &self.build_mode {
-                PodBuildMode::Memory => {
-                    // Hand the buffer off instead of copying it; the next
-                    // iteration re-reserves at the observed size (§Perf:
-                    // halves allocator traffic on the 16K-pod path).
-                    let len = buf.len();
-                    manifests.push(std::mem::replace(&mut buf, String::with_capacity(len)));
+        match &self.build_mode {
+            PodBuildMode::Memory => {
+                // One buffer for the whole batch: spans index into it, and
+                // growth is amortized-doubling instead of per-pod Strings.
+                blob.reserve(pods.len() * 384);
+                spans.reserve(pods.len());
+                for pod in &pods {
+                    let start = blob.len();
+                    write_pod_manifest(&mut blob, pod, &by_id);
+                    spans.push((start, blob.len()));
                 }
-                PodBuildMode::Disk { staging_dir } => {
+                bytes = blob.len();
+            }
+            PodBuildMode::Disk { staging_dir } => {
+                std::fs::create_dir_all(staging_dir)
+                    .map_err(|e| PartitionError::Io(e.to_string()))?;
+                let mut buf = String::with_capacity(1024);
+                paths.reserve(pods.len());
+                for pod in &pods {
+                    buf.clear();
+                    write_pod_manifest(&mut buf, pod, &by_id);
+                    bytes += buf.len();
                     let path = staging_dir.join(format!("pod-{:08}.json", pod.id));
                     let f = std::fs::File::create(&path)
                         .map_err(|e| PartitionError::Io(e.to_string()))?;
@@ -200,14 +251,14 @@ impl Partitioner {
                     w.write_all(buf.as_bytes())
                         .map_err(|e| PartitionError::Io(e.to_string()))?;
                     w.flush().map_err(|e| PartitionError::Io(e.to_string()))?;
-                    manifests.push(String::new());
                     paths.push(path);
                 }
             }
         }
         Ok(PreparedWorkload {
-            pods: pods.to_vec(),
-            manifests,
+            pods,
+            manifest_blob: blob,
+            manifest_spans: spans,
             manifest_paths: paths,
             bytes_serialized: bytes,
         })
@@ -237,7 +288,9 @@ fn to_container(id: TaskId, t: &TaskDescription) -> ContainerSpec {
 /// [`Json`] tree — the broker's measured hot path (§Perf: the tree
 /// construction dominated OVH; direct writing cut serialize time ~3x).
 /// Byte-identical to `pod_manifest(..).write_into(..)`, enforced by
-/// `fast_path_matches_tree_path` below.
+/// `fast_path_matches_tree_path` below. The numeric/string writers are
+/// `util::json`'s in-place push helpers — one escaping implementation for
+/// both paths.
 fn write_pod_manifest(
     out: &mut String,
     pod: &PodSpec,
@@ -255,17 +308,17 @@ fn write_pod_manifest(
         out.push_str("{\"name\":");
         match tasks.get(&c.task_id) {
             Some(t) => {
-                write_json_str(out, &t.name);
+                push_json_str(out, &t.name);
                 out.push_str(",\"image\":");
                 match &t.kind {
-                    TaskKind::Container { image } => write_json_str(out, image),
+                    TaskKind::Container { image } => push_json_str(out, image),
                     TaskKind::Executable { command } => {
-                        write_json_str(out, &format!("exec://{command}"))
+                        push_json_str(out, &format!("exec://{command}"))
                     }
                 }
             }
             None => {
-                write_json_str(out, &format!("task-{}", c.task_id));
+                push_json_str(out, &format!("task-{}", c.task_id));
                 out.push_str(",\"image\":\"noop:latest\"");
             }
         }
@@ -283,50 +336,6 @@ fn write_pod_manifest(
         out.push_str("\"}]}");
     }
     out.push_str("]}}");
-}
-
-/// Append a decimal u64 without the `fmt` machinery (§Perf hot path).
-fn push_u64(out: &mut String, v: u64) {
-    push_u64_padded(out, v, 1);
-}
-
-/// Append a decimal u64 left-padded with zeros to at least `width`.
-fn push_u64_padded(out: &mut String, mut v: u64, width: usize) {
-    let mut digits = [0u8; 20];
-    let mut i = 20;
-    loop {
-        i -= 1;
-        digits[i] = b'0' + (v % 10) as u8;
-        v /= 10;
-        if v == 0 {
-            break;
-        }
-    }
-    let have = 20 - i;
-    for _ in have..width {
-        out.push('0');
-    }
-    out.push_str(std::str::from_utf8(&digits[i..]).unwrap());
-}
-
-/// JSON string escaping identical to `util::json`'s serializer.
-fn write_json_str(out: &mut String, s: &str) {
-    out.push('"');
-    for ch in s.chars() {
-        match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                use std::fmt::Write;
-                let _ = write!(out, "\\u{:04x}", c as u32);
-            }
-            c => out.push(c),
-        }
-    }
-    out.push('"');
 }
 
 /// Build a Kubernetes-style pod manifest document (reference/tree path;
@@ -440,6 +449,25 @@ mod tests {
     }
 
     #[test]
+    fn partition_accepts_arc_shared_descriptions() {
+        // The broker's hot path passes Arc handles shared with the
+        // registry; result must match the owned-description path.
+        use std::sync::Arc;
+        let owned = tasks(24);
+        let shared: Vec<(TaskId, Arc<TaskDescription>)> = owned
+            .iter()
+            .map(|(id, t)| (*id, Arc::new(t.clone())))
+            .collect();
+        let p = Partitioner::new(PartitionModel::Mcpp { max_cpp: 5 }, PodBuildMode::Memory);
+        let a = p.partition(&owned, &cluster(), 0).unwrap();
+        let b = p.partition(&shared, &cluster(), 0).unwrap();
+        assert_eq!(a.len(), b.len());
+        let wa = p.build_manifests(a, &owned).unwrap();
+        let wb = p.build_manifests(b, &shared).unwrap();
+        assert_eq!(wa.manifest_blob, wb.manifest_blob);
+    }
+
+    #[test]
     fn heterogeneous_tasks_respect_cpu_capacity() {
         let mut ts = tasks(10);
         for (i, (_, t)) in ts.iter_mut().enumerate() {
@@ -493,15 +521,37 @@ mod tests {
         let p = Partitioner::new(PartitionModel::Mcpp { max_cpp: 4 }, PodBuildMode::Memory);
         let ts = tasks(10);
         let pods = p.partition(&ts, &cluster(), 0).unwrap();
-        let w = p.build_manifests(&pods, &ts).unwrap();
-        assert_eq!(w.manifests.len(), pods.len());
+        let n_pods = pods.len();
+        let w = p.build_manifests(pods, &ts).unwrap();
+        assert_eq!(w.manifest_count(), n_pods);
+        assert_eq!(w.pods.len(), n_pods);
         assert!(w.bytes_serialized > 0);
-        for m in &w.manifests {
+        assert_eq!(w.bytes_serialized, w.manifest_blob.len());
+        for m in w.manifests() {
             let doc = json::parse(m).unwrap();
             assert_eq!(doc.get("kind").unwrap().as_str(), Some("Pod"));
             assert!(doc.at(&["spec", "containers"]).unwrap().as_arr().unwrap().len() <= 4);
             assert_eq!(doc.at(&["spec", "restartPolicy"]).unwrap().as_str(), Some("Never"));
         }
+    }
+
+    #[test]
+    fn manifest_spans_tile_the_blob_exactly() {
+        // One buffer per batch: spans must cover the blob back to back
+        // with no gaps or overlaps.
+        let p = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory);
+        let ts = tasks(9);
+        let pods = p.partition(&ts, &cluster(), 0).unwrap();
+        let w = p.build_manifests(pods, &ts).unwrap();
+        let mut cursor = 0usize;
+        for i in 0..w.manifest_count() {
+            let (s, e) = w.manifest_spans[i];
+            assert_eq!(s, cursor);
+            assert!(e > s);
+            cursor = e;
+        }
+        assert_eq!(cursor, w.manifest_blob.len());
+        assert_eq!(w.manifest(0), w.manifests().next().unwrap());
     }
 
     #[test]
@@ -513,7 +563,7 @@ mod tests {
         );
         let ts = tasks(7);
         let pods = p.partition(&ts, &cluster(), 0).unwrap();
-        let w = p.build_manifests(&pods, &ts).unwrap();
+        let w = p.build_manifests(pods, &ts).unwrap();
         assert_eq!(w.manifest_paths.len(), 7);
         for path in &w.manifest_paths {
             let content = std::fs::read_to_string(path).unwrap();
@@ -530,10 +580,10 @@ mod tests {
         let scpp = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory);
         let mcpp = Partitioner::new(PartitionModel::Mcpp { max_cpp: 16 }, PodBuildMode::Memory);
         let ws = scpp
-            .build_manifests(&scpp.partition(&ts, &cluster(), 0).unwrap(), &ts)
+            .build_manifests(scpp.partition(&ts, &cluster(), 0).unwrap(), &ts)
             .unwrap();
         let wm = mcpp
-            .build_manifests(&mcpp.partition(&ts, &cluster(), 0).unwrap(), &ts)
+            .build_manifests(mcpp.partition(&ts, &cluster(), 0).unwrap(), &ts)
             .unwrap();
         assert!(ws.bytes_serialized > wm.bytes_serialized);
     }
@@ -566,7 +616,7 @@ mod tests {
         let c = ClusterSpec::uniform(1, 16).with_gpus(8);
         let p = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory);
         let pods = p.partition(&ts, &c, 0).unwrap();
-        let w = p.build_manifests(&pods, &ts).unwrap();
-        assert!(w.manifests[0].contains("nvidia.com/gpu"));
+        let w = p.build_manifests(pods, &ts).unwrap();
+        assert!(w.manifest(0).contains("nvidia.com/gpu"));
     }
 }

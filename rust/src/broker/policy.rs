@@ -75,13 +75,18 @@ pub fn perf_weighted(providers_with_cores: &[(ProviderId, u32)]) -> BrokerPolicy
 
 /// Bind every task to exactly one acquired provider.
 ///
+/// Generic over `Borrow<TaskDescription>` so the broker can pass
+/// `Arc<TaskDescription>` handles shared with the registry (§Perf: no
+/// description clones on the brokering path) while tests pass owned
+/// descriptions.
+///
 /// Invariants (property-tested in `rust/tests/prop_invariants.rs`):
 /// * every input task appears in exactly one provider list;
 /// * only acquired providers appear;
 /// * explicit bindings are honored verbatim.
-pub fn assign(
+pub fn assign<T: std::borrow::Borrow<TaskDescription>>(
     policy: &BrokerPolicy,
-    tasks: &[(TaskId, TaskDescription)],
+    tasks: &[(TaskId, T)],
     providers: &[ProviderId],
 ) -> Result<Assignment, PolicyError> {
     if providers.is_empty() {
@@ -92,6 +97,7 @@ pub fn assign(
     // Pass 1: explicit bindings.
     let mut unbound: Vec<(TaskId, &TaskDescription)> = Vec::new();
     for (id, t) in tasks {
+        let t = t.borrow();
         match t.provider {
             Some(p) => {
                 out.get_mut(&p)
@@ -323,6 +329,22 @@ mod tests {
 
     #[test]
     fn no_providers_errors() {
-        assert_eq!(assign(&BrokerPolicy::RoundRobin, &[], &[]), Err(PolicyError::NoProviders));
+        let none: [(TaskId, TaskDescription); 0] = [];
+        assert_eq!(assign(&BrokerPolicy::RoundRobin, &none, &[]), Err(PolicyError::NoProviders));
+    }
+
+    #[test]
+    fn assign_accepts_arc_shared_descriptions() {
+        use std::sync::Arc;
+        let tasks: Vec<(TaskId, Arc<TaskDescription>)> = (0..8)
+            .map(|i| {
+                let (id, t) = con(i);
+                (id, Arc::new(t))
+            })
+            .collect();
+        let provs = [ProviderId::Aws, ProviderId::Azure];
+        let a = assign(&BrokerPolicy::RoundRobin, &tasks, &provs).unwrap();
+        assert_eq!(total_assigned(&a), 8);
+        assert_eq!(a[&ProviderId::Aws].len(), 4);
     }
 }

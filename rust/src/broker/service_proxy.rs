@@ -24,6 +24,7 @@ use crate::metrics::{aggregate, AggregateMetrics, RunMetrics};
 use crate::sim::provider::ProviderId;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 
 /// Per-provider execution detail.
 #[derive(Debug)]
@@ -147,21 +148,25 @@ impl ServiceProxy {
 
     /// Broker a workload: register, bind by policy, execute concurrently
     /// on every assigned provider, aggregate.
+    ///
+    /// §Perf data path: descriptions are moved into the registry once and
+    /// shared from there as `Arc` handles — binding, slicing, and every
+    /// manager thread bump a refcount instead of deep-cloning
+    /// `TaskDescription`s per hop.
     pub fn run(
         &self,
         descs: Vec<TaskDescription>,
         policy: &BrokerPolicy,
     ) -> Result<BrokerRun, BrokerError> {
-        let ids = self.registry.register_all(descs.clone());
-        let tasks: Vec<(TaskId, TaskDescription)> =
-            ids.into_iter().zip(descs.into_iter()).collect();
+        let tasks: Vec<(TaskId, Arc<TaskDescription>)> =
+            self.registry.register_all_shared(descs);
 
         let acquired: Vec<ProviderId> = self.resources.keys().copied().collect();
         let assignment = assign(policy, &tasks, &acquired)?;
 
-        // Index descriptions for per-provider slices.
-        let by_id: BTreeMap<u64, TaskDescription> =
-            tasks.iter().map(|(id, t)| (id.0, t.clone())).collect();
+        // Index description handles for per-provider slices.
+        let by_id: BTreeMap<u64, Arc<TaskDescription>> =
+            tasks.iter().map(|(id, t)| (id.0, Arc::clone(t))).collect();
 
         let (tx, rx) = mpsc::channel::<(ProviderId, Result<ManagerReport, String>)>();
         let mut threads = Vec::new();
@@ -172,9 +177,9 @@ impl ServiceProxy {
                 continue;
             }
             expected += 1;
-            let slice: Vec<(TaskId, TaskDescription)> = task_ids
+            let slice: Vec<(TaskId, Arc<TaskDescription>)> = task_ids
                 .iter()
-                .map(|id| (*id, by_id.get(&id.0).unwrap().clone()))
+                .map(|id| (*id, Arc::clone(by_id.get(&id.0).unwrap())))
                 .collect();
             let req = self.resources.get(&provider).unwrap().clone();
             let cfg = self.providers.handle(provider).unwrap().config.clone();

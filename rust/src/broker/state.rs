@@ -12,7 +12,10 @@ use std::sync::{Arc, Mutex};
 
 #[derive(Debug)]
 pub struct TaskEntry {
-    pub desc: TaskDescription,
+    /// Shared handle: the registry, the policy layer, and every manager
+    /// thread read the same immutable description instead of cloning it
+    /// per hop (§Perf data-path overhaul).
+    pub desc: Arc<TaskDescription>,
     pub state: TaskState,
 }
 
@@ -59,18 +62,44 @@ impl TaskRegistry {
     /// Register a new task in state `New`, returning its id.
     pub fn register(&self, desc: TaskDescription) -> TaskId {
         let mut g = self.inner.lock().unwrap();
+        Self::register_locked(&mut g, desc).0
+    }
+
+    /// Register a whole workload, preserving order. Takes the mutex once
+    /// for the whole batch (§Perf: was one lock per task).
+    pub fn register_all(&self, descs: Vec<TaskDescription>) -> Vec<TaskId> {
+        let mut g = self.inner.lock().unwrap();
+        descs
+            .into_iter()
+            .map(|d| Self::register_locked(&mut g, d).0)
+            .collect()
+    }
+
+    /// Register a whole workload and hand back the shared description
+    /// handles in one lock acquisition — the broker's submit path uses
+    /// this instead of `register_all` + `descriptions_of` (§Perf: no
+    /// second lock/lookup round-trip for descriptions it just stored).
+    pub fn register_all_shared(
+        &self,
+        descs: Vec<TaskDescription>,
+    ) -> Vec<(TaskId, Arc<TaskDescription>)> {
+        let mut g = self.inner.lock().unwrap();
+        descs
+            .into_iter()
+            .map(|d| Self::register_locked(&mut g, d))
+            .collect()
+    }
+
+    /// The single registration implementation; callers hold the lock.
+    fn register_locked(g: &mut Inner, desc: TaskDescription) -> (TaskId, Arc<TaskDescription>) {
         let id = TaskId(g.next_id);
         g.next_id += 1;
-        g.tasks.insert(id.0, TaskEntry { desc, state: TaskState::New });
+        let desc = Arc::new(desc);
+        g.tasks.insert(id.0, TaskEntry { desc: Arc::clone(&desc), state: TaskState::New });
         if let Some(t) = g.trace.as_mut() {
             t.record(id, TaskState::New);
         }
-        id
-    }
-
-    /// Register a whole workload, preserving order.
-    pub fn register_all(&self, descs: Vec<TaskDescription>) -> Vec<TaskId> {
-        descs.into_iter().map(|d| self.register(d)).collect()
+        (id, desc)
     }
 
     /// Validated state transition with tracing.
@@ -121,8 +150,28 @@ impl TaskRegistry {
         self.inner.lock().unwrap().tasks.get(&id.0).map(|e| e.state)
     }
 
-    pub fn description_of(&self, id: TaskId) -> Option<TaskDescription> {
-        self.inner.lock().unwrap().tasks.get(&id.0).map(|e| e.desc.clone())
+    /// Shared handle to one task's description (cheap refcount bump, no
+    /// deep clone).
+    pub fn description_of(&self, id: TaskId) -> Option<Arc<TaskDescription>> {
+        self.inner.lock().unwrap().tasks.get(&id.0).map(|e| Arc::clone(&e.desc))
+    }
+
+    /// Bulk description lookup: one mutex acquisition for the whole id
+    /// slice, in id order. Managers resolving per-task descriptions in a
+    /// loop should call this instead of `description_of` per task (§Perf).
+    pub fn descriptions_of(
+        &self,
+        ids: &[TaskId],
+    ) -> Result<Vec<Arc<TaskDescription>>, StateError> {
+        let g = self.inner.lock().unwrap();
+        ids.iter()
+            .map(|id| {
+                g.tasks
+                    .get(&id.0)
+                    .map(|e| Arc::clone(&e.desc))
+                    .ok_or(StateError::UnknownTask(*id))
+            })
+            .collect()
     }
 
     pub fn len(&self) -> usize {
@@ -256,6 +305,40 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(reg.counts().get(&TaskState::Submitted), Some(&100));
+    }
+
+    #[test]
+    fn descriptions_of_resolves_in_order_with_one_lock() {
+        let reg = TaskRegistry::new();
+        let ids = reg.register_all(vec![
+            TaskDescription::container("a", "img"),
+            TaskDescription::container("b", "img"),
+            TaskDescription::container("c", "img"),
+        ]);
+        let descs = reg.descriptions_of(&ids).unwrap();
+        assert_eq!(descs.len(), 3);
+        assert_eq!(descs[0].name, "a");
+        assert_eq!(descs[2].name, "c");
+        // Handles are shared with the registry, not deep copies.
+        assert!(Arc::ptr_eq(&descs[1], &reg.description_of(ids[1]).unwrap()));
+        // Unknown ids error rather than silently skipping.
+        let e = reg.descriptions_of(&[ids[0], TaskId(999)]).unwrap_err();
+        assert_eq!(e, StateError::UnknownTask(TaskId(999)));
+    }
+
+    #[test]
+    fn register_all_shared_hands_back_registry_handles() {
+        let reg = TaskRegistry::new();
+        let tasks = reg.register_all_shared(vec![
+            TaskDescription::container("x", "img"),
+            TaskDescription::container("y", "img"),
+        ]);
+        assert_eq!(tasks[0].0, TaskId(0));
+        assert_eq!(tasks[1].1.name, "y");
+        // Same Arc the registry holds — no copy was made.
+        assert!(Arc::ptr_eq(&tasks[0].1, &reg.description_of(tasks[0].0).unwrap()));
+        assert_eq!(reg.trace_len(), 2);
+        assert_eq!(reg.state_of(TaskId(1)), Some(TaskState::New));
     }
 
     #[test]

@@ -15,13 +15,24 @@
 //!   greedily in FIFO order; a task holds `cores` cores for its duration.
 //! * payload durations scale with the platform's `cpu_speed` (bare-metal
 //!   EPYC on Bridges2: the Fig 5 advantage).
+//!
+//! # Scheduling cost (§Perf / DESIGN-note)
+//!
+//! The pilot is the HPC analogue of the Kubernetes free-capacity index:
+//! the pilot's capacity is a *single* scalar (free cores across whole
+//! nodes), so the index degenerates to a counter plus a FIFO cursor into
+//! the submitted task list. [`PilotAgent`] keeps both; every simulator
+//! event (agent-ready, launcher-free, task-done) is **O(1)** — there is no
+//! per-event rescan of the task list, and a run processes O(T) events for
+//! T tasks.
 
 use super::event::{secs, to_secs, EventQueue};
 use super::provider::PlatformProfile;
 use crate::util::prng::Prng;
 
-/// One executable task submitted onto the pilot.
-#[derive(Debug, Clone)]
+/// One executable task submitted onto the pilot. All-scalar and `Copy`:
+/// the launch path reads specs in place, never cloning the bulk list.
+#[derive(Debug, Clone, Copy)]
 pub struct HpcTaskSpec {
     pub task_id: u64,
     pub cores: u32,
@@ -51,7 +62,7 @@ impl PilotSpec {
 }
 
 /// Per-task execution record (virtual seconds since pilot submission).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HpcTaskRecord {
     pub task_id: u64,
     pub launched_s: f64,
@@ -76,6 +87,56 @@ enum Ev {
     AgentReady,
     LauncherFree,
     TaskDone { idx: usize },
+}
+
+/// The agent's O(1) launch state: free-core counter + FIFO cursor +
+/// serialized-launcher flag (see module docs).
+struct PilotAgent {
+    next: usize,
+    free_cores: u32,
+    total_cores: u32,
+    launcher_free: bool,
+    peak: u32,
+}
+
+impl PilotAgent {
+    /// Launch the FIFO-head task if the launcher is idle and the head
+    /// fits; otherwise wait for a TaskDone to free cores (head-of-line)
+    /// or a LauncherFree to re-arm the spawner. O(1).
+    fn try_launch(
+        &mut self,
+        q: &mut EventQueue<Ev>,
+        profile: &PlatformProfile,
+        tasks: &[HpcTaskSpec],
+        fail_flags: &[bool],
+        records: &mut [Option<HpcTaskRecord>],
+    ) {
+        if !self.launcher_free || self.next >= tasks.len() {
+            return;
+        }
+        let t = tasks[self.next];
+        let need = t.cores.min(self.total_cores); // oversized tasks clamp to pilot width
+        if need > self.free_cores {
+            return; // head-of-line: wait for a TaskDone to free cores
+        }
+        self.free_cores -= need;
+        let busy = self.total_cores - self.free_cores;
+        self.peak = self.peak.max(busy);
+        let idx = self.next;
+        self.next += 1;
+        self.launcher_free = false;
+
+        let launch_done = to_secs(q.now()) + profile.task_launch_s;
+        let run = t.sleep_s + profile.payload_duration_s(t.work_s, need);
+        records[idx] = Some(HpcTaskRecord {
+            task_id: t.task_id,
+            launched_s: launch_done,
+            finished_s: launch_done + run, // finalized again at TaskDone
+            failed: fail_flags[idx],
+        });
+        q.schedule_in(secs(profile.task_launch_s), Ev::LauncherFree);
+        q.schedule_in(secs(profile.task_launch_s + run), Ev::TaskDone { idx });
+    }
 }
 
 /// Simulate one pilot lifecycle executing `tasks`.
@@ -121,33 +182,30 @@ impl HpcSim {
         let fail_flags: Vec<bool> = (0..self.tasks.len())
             .map(|_| self.failure_rate > 0.0 && self.rng.bool_with_p(self.failure_rate))
             .collect();
-        let mut free_cores = total_cores;
-        let mut next = 0usize; // FIFO cursor into self.tasks
-        let mut launcher_free = false;
         let mut records: Vec<Option<HpcTaskRecord>> = vec![None; self.tasks.len()];
-        let mut peak = 0u32;
+        let mut agent = PilotAgent {
+            next: 0,
+            free_cores: total_cores,
+            total_cores,
+            launcher_free: false,
+            peak: 0,
+        };
 
         while let Some((_, ev)) = q.pop() {
             match ev {
                 Ev::AgentReady | Ev::LauncherFree => {
-                    launcher_free = true;
-                    try_launch(
-                        &mut q, &self.profile, &self.tasks, &fail_flags, &mut next,
-                        &mut free_cores, &mut launcher_free, &mut records, &mut peak,
-                        total_cores,
-                    );
+                    agent.launcher_free = true;
+                    agent.try_launch(&mut q, &self.profile, &self.tasks, &fail_flags,
+                                     &mut records);
                 }
                 Ev::TaskDone { idx } => {
-                    free_cores += self.tasks[idx].cores.min(total_cores);
+                    agent.free_cores += self.tasks[idx].cores.min(total_cores);
                     let rec = records[idx].as_mut().unwrap();
                     // Clamp against float rounding of the micros clock so
                     // finished >= launched holds exactly.
                     rec.finished_s = to_secs(q.now()).max(rec.launched_s);
-                    try_launch(
-                        &mut q, &self.profile, &self.tasks, &fail_flags, &mut next,
-                        &mut free_cores, &mut launcher_free, &mut records, &mut peak,
-                        total_cores,
-                    );
+                    agent.try_launch(&mut q, &self.profile, &self.tasks, &fail_flags,
+                                     &mut records);
                 }
             }
         }
@@ -158,51 +216,9 @@ impl HpcSim {
             makespan_s: to_secs(q.now()),
             tasks: records.into_iter().flatten().collect(),
             events_processed: q.processed(),
-            peak_cores_busy: peak,
+            peak_cores_busy: agent.peak,
         }
     }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn try_launch(
-    q: &mut EventQueue<Ev>,
-    profile: &PlatformProfile,
-    tasks: &[HpcTaskSpec],
-    fail_flags: &[bool],
-    next: &mut usize,
-    free_cores: &mut u32,
-    launcher_free: &mut bool,
-    records: &mut [Option<HpcTaskRecord>],
-    peak: &mut u32,
-    total_cores: u32,
-) {
-    // The spawner is serialized: it launches one task, then frees after
-    // task_launch_s. FIFO: if the head task does not fit, wait for cores.
-    if !*launcher_free || *next >= tasks.len() {
-        return;
-    }
-    let t = &tasks[*next];
-    let need = t.cores.min(total_cores); // oversized tasks clamp to pilot width
-    if need > *free_cores {
-        return; // head-of-line: wait for a TaskDone to free cores
-    }
-    *free_cores -= need;
-    let busy = total_cores - *free_cores;
-    *peak = (*peak).max(busy);
-    let idx = *next;
-    *next += 1;
-    *launcher_free = false;
-
-    let launch_done = to_secs(q.now()) + profile.task_launch_s;
-    let run = t.sleep_s + profile.payload_duration_s(t.work_s, need);
-    records[idx] = Some(HpcTaskRecord {
-        task_id: t.task_id,
-        launched_s: launch_done,
-        finished_s: launch_done + run, // finalized again at TaskDone
-        failed: fail_flags[idx],
-    });
-    q.schedule_in(secs(profile.task_launch_s), Ev::LauncherFree);
-    q.schedule_in(secs(profile.task_launch_s + run), Ev::TaskDone { idx });
 }
 
 #[cfg(test)]
@@ -283,6 +299,7 @@ mod tests {
         let b = run_tasks(t, 2, 42);
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.queue_wait_s, b.queue_wait_s);
+        assert_eq!(a.tasks, b.tasks);
     }
 
     #[test]
@@ -292,5 +309,16 @@ mod tests {
         let r = run_tasks(vec![HpcTaskSpec { task_id: 0, cores: 1, work_s: 110.0, sleep_s: 0.0 }], 1, 5);
         let t = &r.tasks[0];
         assert!(((t.finished_s - t.launched_s) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn event_count_scales_linearly_with_tasks() {
+        // O(1) per event, O(T) events per run: AgentReady + per task one
+        // LauncherFree + one TaskDone.
+        for n in [100u64, 400] {
+            let tasks: Vec<_> = (0..n).map(HpcTaskSpec::noop).collect();
+            let r = run_tasks(tasks, 1, 11);
+            assert_eq!(r.events_processed, 1 + 2 * n);
+        }
     }
 }

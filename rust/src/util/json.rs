@@ -199,38 +199,59 @@ fn indent(out: &mut String, depth: usize) {
 fn write_num(n: f64, out: &mut String) {
     if n.fract() == 0.0 && n.abs() < 9.0e15 {
         // Integral values print without the trailing ".0" — Kubernetes
-        // manifests expect integer resource counts.
-        let i = n as i64;
-        let mut buf = itoa(i);
-        out.push_str(&mut buf);
+        // manifests expect integer resource counts. Digits go straight
+        // into the caller's buffer: no intermediate String (§Perf).
+        push_i64(out, n as i64);
     } else {
-        out.push_str(&format!("{n}"));
+        // Non-integral floats go through the fmt machinery, but writing
+        // *into* the buffer — `write!` appends in place where `format!`
+        // would allocate a fresh String per number (§Perf hot path).
+        use std::fmt::Write;
+        let _ = write!(out, "{n}");
     }
 }
 
-/// Integer formatting without going through `format!` (hot path).
-fn itoa(v: i64) -> String {
-    if v == 0 {
-        return "0".to_string();
+/// Append a decimal i64 to `out` without the `fmt` machinery or any
+/// intermediate allocation (§Perf hot path).
+pub fn push_i64(out: &mut String, v: i64) {
+    if v < 0 {
+        out.push('-');
+        push_u64(out, v.unsigned_abs());
+    } else {
+        push_u64(out, v as u64);
     }
-    let neg = v < 0;
+}
+
+/// Append a decimal u64 to `out`, digits written in place.
+pub fn push_u64(out: &mut String, v: u64) {
+    push_u64_padded(out, v, 1);
+}
+
+/// Append a decimal u64 left-padded with zeros to at least `width`
+/// (manifest names like `hydra-pod-00000042`).
+pub fn push_u64_padded(out: &mut String, mut v: u64, width: usize) {
     let mut digits = [0u8; 20];
     let mut i = 20;
-    let mut u = (v as i128).unsigned_abs() as u64;
-    while u > 0 {
+    loop {
         i -= 1;
-        digits[i] = b'0' + (u % 10) as u8;
-        u /= 10;
+        digits[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
     }
-    let mut s = String::with_capacity(21 - i);
-    if neg {
-        s.push('-');
+    let have = 20 - i;
+    for _ in have..width {
+        out.push('0');
     }
-    s.push_str(std::str::from_utf8(&digits[i..]).unwrap());
-    s
+    out.push_str(std::str::from_utf8(&digits[i..]).unwrap());
 }
 
-fn write_escaped(s: &str, out: &mut String) {
+/// Append `s` as a JSON string literal (quoted + escaped). This is the
+/// single escaping implementation shared by the tree serializer and the
+/// partitioner's direct-write manifest path — keeping the two
+/// byte-identical by construction.
+pub fn push_json_str(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -240,12 +261,17 @@ fn write_escaped(s: &str, out: &mut String) {
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
             c if (c as u32) < 0x20 => {
-                out.push_str(&format!("\\u{:04x}", c as u32));
+                use std::fmt::Write;
+                let _ = write!(out, "\\u{:04x}", c as u32);
             }
             c => out.push(c),
         }
     }
     out.push('"');
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    push_json_str(out, s);
 }
 
 impl From<&str> for Json {
@@ -596,6 +622,42 @@ mod tests {
         assert!(doc.at(&["a", "b"]).is_some());
         assert!(doc.at(&["a", "c"]).is_none());
         assert!(doc.at(&["x"]).is_none());
+    }
+
+    #[test]
+    fn push_helpers_write_digits_in_place() {
+        let mut s = String::from("x=");
+        push_u64(&mut s, 0);
+        s.push(',');
+        push_u64(&mut s, u64::MAX);
+        s.push(',');
+        push_i64(&mut s, i64::MIN);
+        s.push(',');
+        push_i64(&mut s, 42);
+        s.push(',');
+        push_u64_padded(&mut s, 7, 4);
+        assert_eq!(s, "x=0,18446744073709551615,-9223372036854775808,42,0007");
+    }
+
+    #[test]
+    fn numbers_match_fmt_machinery() {
+        for v in [0i64, 1, -1, 10, -10, 999, i64::MAX, i64::MIN, 1234567890] {
+            let mut s = String::new();
+            push_i64(&mut s, v);
+            assert_eq!(s, format!("{v}"));
+        }
+        for n in [0.5f64, -2.25, 1e-9, 3.14159, 12.75] {
+            assert_eq!(Json::Num(n).to_string_compact(), format!("{n}"));
+        }
+    }
+
+    #[test]
+    fn push_json_str_matches_serializer() {
+        for s in ["plain", "with \"quotes\"", "tabs\tand\nnewlines", "ctrl\u{1}", "héllo ☂"] {
+            let mut direct = String::new();
+            push_json_str(&mut direct, s);
+            assert_eq!(direct, Json::Str(s.to_string()).to_string_compact());
+        }
     }
 
     #[test]

@@ -88,9 +88,10 @@ impl WorkflowEngine {
                 }
             }
             total_tasks += descs.len();
-            let ids = registry.register_all(descs.clone());
-            let tasks: Vec<(TaskId, TaskDescription)> =
-                ids.into_iter().zip(descs.into_iter()).collect();
+            // Move the wave's descriptions into the registry and share
+            // them back as Arc handles (§Perf: no per-wave deep clone).
+            let tasks: Vec<(TaskId, std::sync::Arc<TaskDescription>)> =
+                registry.register_all_shared(descs);
 
             let seed = self.seed ^ (wave_idx as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
             match self.resource.service {

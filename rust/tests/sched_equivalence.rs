@@ -1,0 +1,132 @@
+//! Integration: the indexed scheduler is observably identical to the
+//! seed's linear scan, end to end through the public API.
+//!
+//! The unit tests in `sim::kubernetes` prove record-level equivalence at
+//! the simulator layer; here we drive the same guarantee from outside the
+//! crate — the surface `bench_quick` and downstream users rely on — and
+//! check the Arc-shared broker data path produces identical platform
+//! outcomes to the owned-description path.
+
+use hydra::api::task::{TaskDescription, TaskId};
+use hydra::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
+use hydra::broker::state::TaskRegistry;
+use hydra::sim::kubernetes::{ClusterSpec, KubernetesSim, PodSpec, SchedulerKind};
+use hydra::sim::provider::{PlatformProfile, ProviderId};
+use std::sync::Arc;
+
+fn workload(n: usize) -> Vec<(TaskId, TaskDescription)> {
+    (0..n)
+        .map(|i| {
+            let t = TaskDescription::container(format!("t{i}"), "noop:latest")
+                .with_cpus(1 + (i as u32 % 3))
+                .with_mem_mb(128 + (i as u64 % 5) * 512);
+            (TaskId(i as u64), t)
+        })
+        .collect()
+}
+
+fn partitioned_pods(tasks: &[(TaskId, TaskDescription)], cluster: &ClusterSpec) -> Vec<PodSpec> {
+    Partitioner::new(PartitionModel::Mcpp { max_cpp: 8 }, PodBuildMode::Memory)
+        .partition(tasks, cluster, 0)
+        .unwrap()
+}
+
+fn run(kind: SchedulerKind, cluster: ClusterSpec, pods: Vec<PodSpec>, seed: u64)
+    -> hydra::sim::kubernetes::SimReport
+{
+    let profile = PlatformProfile::of(ProviderId::Aws);
+    let mut sim = KubernetesSim::new(profile, cluster, seed).with_scheduler(kind);
+    sim.submit(pods, 0.0);
+    sim.run()
+}
+
+#[test]
+fn indexed_equals_linear_on_partitioned_1k_workload() {
+    // 1K tasks through the real partitioner, then both schedulers: the
+    // acceptance equivalence at integration scale.
+    let cluster = ClusterSpec::uniform(16, 16);
+    let tasks = workload(1000);
+    let a = run(SchedulerKind::Indexed, cluster, partitioned_pods(&tasks, &cluster), 2024);
+    let b = run(SchedulerKind::LinearScan, cluster, partitioned_pods(&tasks, &cluster), 2024);
+    assert_eq!(a.tasks.len(), 1000);
+    assert_eq!(a.tasks, b.tasks, "TaskRecord streams diverged");
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.makespan_s, b.makespan_s);
+}
+
+#[test]
+fn free_capacity_restored_after_multi_batch_run() {
+    let cluster = ClusterSpec::uniform(4, 8);
+    let tasks = workload(200);
+    let profile = PlatformProfile::of(ProviderId::Azure);
+    let mut sim = KubernetesSim::new(profile, cluster, 5);
+    let pods = partitioned_pods(&tasks, &cluster);
+    let half = pods.len() / 2;
+    let mut first = pods;
+    let second = first.split_off(half);
+    sim.submit(first, 0.0);
+    sim.submit(second, 3.0);
+    let r = sim.run();
+    assert_eq!(r.tasks.len(), 200);
+    assert_eq!(
+        sim.free_capacity(),
+        (
+            cluster.nodes * cluster.vcpus_per_node,
+            cluster.nodes * cluster.gpus_per_node,
+            cluster.nodes as u64 * cluster.mem_mb_per_node,
+        ),
+        "teardown must return every reservation to the index"
+    );
+}
+
+#[test]
+fn arc_shared_descriptions_match_owned_through_caas() {
+    // The Arc data path (registry-shared handles) must be observationally
+    // identical to owned descriptions: same pods, same manifests bytes,
+    // same virtual timings.
+    use hydra::api::ProviderConfig;
+    use hydra::api::ResourceRequest;
+    use hydra::broker::caas::CaasManager;
+
+    let mk_manager = || {
+        CaasManager::new(
+            ProviderConfig::simulated(ProviderId::Aws),
+            ResourceRequest::kubernetes(ProviderId::Aws, 1, 16),
+            Partitioner::new(PartitionModel::Mcpp { max_cpp: 16 }, PodBuildMode::Memory),
+            31,
+        )
+        .unwrap()
+    };
+
+    // Owned path.
+    let reg_a = TaskRegistry::new();
+    let owned: Vec<(TaskId, TaskDescription)> = (0..120)
+        .map(|i| {
+            let d = TaskDescription::container(format!("t{i}"), "noop:latest");
+            (reg_a.register(d.clone()), d)
+        })
+        .collect();
+    let ra = mk_manager().execute(&owned, &reg_a).unwrap();
+
+    // Shared path: register, then resolve Arc handles in bulk.
+    let reg_b = TaskRegistry::new();
+    let ids = reg_b.register_all(
+        (0..120)
+            .map(|i| TaskDescription::container(format!("t{i}"), "noop:latest"))
+            .collect(),
+    );
+    let shared: Vec<(TaskId, Arc<TaskDescription>)> = ids
+        .iter()
+        .copied()
+        .zip(reg_b.descriptions_of(&ids).unwrap())
+        .collect();
+    let rb = mk_manager().execute(&shared, &reg_b).unwrap();
+
+    assert_eq!(ra.metrics.pods, rb.metrics.pods);
+    assert_eq!(ra.bytes_serialized, rb.bytes_serialized);
+    assert_eq!(ra.sim.tasks.len(), rb.sim.tasks.len());
+    // Same seed + same pods => identical virtual timelines.
+    assert_eq!(ra.sim.makespan_s, rb.sim.makespan_s);
+    assert_eq!(ra.sim.events_processed, rb.sim.events_processed);
+    assert!(reg_a.all_final() && reg_b.all_final());
+}
