@@ -1,0 +1,115 @@
+#!/usr/bin/env bash
+# bench_gate.sh — perf-regression gate over the BENCH_quick trajectory
+# (ISSUE 3 satellite; wired into .github/workflows/ci.yml as a
+# non-blocking step until two PRs of trajectory data exist).
+#
+#   ./ci/bench_gate.sh [fresh.json] [baseline.json]   # compare (default:
+#                                                     # BENCH_quick.json vs
+#                                                     # BENCH_baseline.json)
+#   ./ci/bench_gate.sh --refresh                      # promote the fresh
+#                                                     # run to baseline
+#
+# Exit 1 when any row shared by both files regresses by more than
+# BENCH_GATE_TOLERANCE (default 0.25 = 25%):
+#   * events/s rows (sched microbench) must not drop;
+#   * OVH and serialize_ms rows (broker points) must not rise.
+# Rows present in only one file are reported but never fail the gate —
+# the schema is expected to grow a row per optimization PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--refresh" ]]; then
+  cp BENCH_quick.json BENCH_baseline.json
+  echo "bench_gate: baseline refreshed from BENCH_quick.json"
+  exit 0
+fi
+
+fresh="${1:-BENCH_quick.json}"
+base="${2:-BENCH_baseline.json}"
+tol="${BENCH_GATE_TOLERANCE:-0.25}"
+
+if [[ ! -f "$fresh" ]]; then
+  echo "bench_gate: no fresh bench at $fresh (run ./smoke.sh first)" >&2
+  exit 1
+fi
+if [[ ! -f "$base" ]]; then
+  echo "bench_gate: no baseline at $base — skipping gate"
+  exit 0
+fi
+
+python3 - "$fresh" "$base" "$tol" <<'PY'
+import json
+import sys
+
+fresh_path, base_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
+fresh = json.load(open(fresh_path))
+base = json.load(open(base_path))
+
+# A bad schema in the *fresh* file is a failure — otherwise a PR that
+# breaks bench_quick's output silently disables the gate. Only a
+# baseline-side mismatch (e.g. an old baseline after a schema bump) is
+# a clean skip.
+fresh_schema = fresh.get("schema")
+if fresh_schema != "hydra-bench-quick/v1":
+    print(f"bench_gate: {fresh_path}: unexpected schema {fresh_schema!r}; "
+          "bench output is broken — failing the gate")
+    sys.exit(1)
+base_schema = base.get("schema")
+if base_schema != "hydra-bench-quick/v1":
+    print(f"bench_gate: {base_path}: baseline schema {base_schema!r} predates "
+          "the current format; skipping gate (refresh the baseline)")
+    sys.exit(0)
+
+
+def rows(doc):
+    """Flatten a bench document into {row_name: (value, higher_is_better)}."""
+    out = {}
+    for p in doc.get("points", []):
+        name = p.get("name", "?")
+        if isinstance(p.get("ovh_ms_mean"), (int, float)):
+            out[f"{name}.ovh_ms"] = (p["ovh_ms_mean"], False)
+        if isinstance(p.get("serialize_ms_mean"), (int, float)):
+            out[f"{name}.serialize_ms"] = (p["serialize_ms_mean"], False)
+    micro = doc.get("serialize_microbench") or {}
+    if isinstance(micro.get("serialize_ms_parallel"), (int, float)):
+        out["serialize_micro.parallel_ms"] = (micro["serialize_ms_parallel"], False)
+    sched = doc.get("sched_microbench") or {}
+    for kind in ("linear", "indexed"):
+        eps = (sched.get(kind) or {}).get("events_per_s")
+        if isinstance(eps, (int, float)):
+            out[f"sched.{kind}.events_per_s"] = (eps, True)
+    return out
+
+
+fresh_rows, base_rows = rows(fresh), rows(base)
+if not base_rows:
+    print(f"bench_gate: {base_path} has no comparable rows (placeholder baseline); "
+          "gate passes vacuously — refresh it from a measured run with "
+          "'./ci/bench_gate.sh --refresh'")
+    sys.exit(0)
+
+failures = []
+for key in sorted(base_rows):
+    old, higher_is_better = base_rows[key]
+    if key not in fresh_rows:
+        print(f"bench_gate: {key}: present in baseline only (row dropped?)")
+        continue
+    new = fresh_rows[key][0]
+    if old <= 0:
+        print(f"bench_gate: {key}: non-positive baseline {old}; skipped")
+        continue
+    change = (new - old) / old
+    regressed = (change < -tol) if higher_is_better else (change > tol)
+    status = "REGRESSED" if regressed else "ok"
+    print(f"bench_gate: {key}: {old:.4g} -> {new:.4g} ({change:+.1%}) [{status}]")
+    if regressed:
+        failures.append(key)
+for key in sorted(set(fresh_rows) - set(base_rows)):
+    print(f"bench_gate: {key}: new row (no baseline yet)")
+
+if failures:
+    print(f"bench_gate: FAIL — {len(failures)} row(s) regressed beyond "
+          f"{tol:.0%}: {', '.join(failures)}")
+    sys.exit(1)
+print(f"bench_gate: OK — no shared row regressed beyond {tol:.0%}")
+PY

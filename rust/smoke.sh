@@ -9,6 +9,26 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+if [[ "${1:-}" == "--help" || "${1:-}" == "-h" ]]; then
+  cat <<'USAGE'
+usage: ./smoke.sh
+
+Runs the tier-1 verify plus the perf smoke, in order:
+  1. cargo build --release
+  2. cargo test -q
+  3. cargo run --release --bin bench_quick   (writes BENCH_quick.json,
+     schema hydra-bench-quick/v1 — the ROADMAP perf-trajectory record)
+
+CI runs this same script: the smoke-bench job in
+.github/workflows/ci.yml invokes ./smoke.sh, diffs the fresh
+BENCH_quick.json against the committed BENCH_baseline.json via
+./ci/bench_gate.sh (non-blocking for now), and uploads BENCH_quick.json
+as a build artifact. Promote a measured run to the committed baseline
+with: ./ci/bench_gate.sh --refresh
+USAGE
+  exit 0
+fi
+
 cargo build --release
 cargo test -q
 cargo run --release --bin bench_quick

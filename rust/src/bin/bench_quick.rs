@@ -8,18 +8,22 @@
 //! after build + tests.
 //!
 //! Reported quantities:
-//! * **OVH** (ms) and **TH** (task/s) — broker-side cost/throughput for
-//!   the 4K-task points (the paper's Fig 2/3 metrics).
+//! * **OVH** (ms), **SER** (ms, the serialize phase alone) and **TH**
+//!   (task/s) — broker-side cost/throughput for the 4K-task points (the
+//!   paper's Fig 2/3 metrics).
+//! * **serialize microbench** — threads=1 vs threads=N manifest
+//!   serialization + bulk framing on the 4K-task SCPP point (ISSUE 3
+//!   tentpole), with a byte-identity cross-check on the framed payload.
 //! * **events/s** — simulator event throughput for the 16K-pod
 //!   scheduling microbench, for the indexed scheduler and the seed's
 //!   linear scan, with the speedup and a determinism cross-check
 //!   (identical `TaskRecord`s from both schedulers).
 
+use hydra::api::task::TaskId;
 use hydra::api::{ResourceRequest, TaskDescription};
-use hydra::broker::{BrokerPolicy, Hydra, PartitionModel};
-use hydra::sim::kubernetes::{
-    ClusterSpec, ContainerSpec, KubernetesSim, PodSpec, SchedulerKind,
-};
+use hydra::broker::partitioner::Partitioner;
+use hydra::broker::{BrokerPolicy, Hydra, PartitionModel, PodBuildMode, SerializeOptions};
+use hydra::sim::kubernetes::{ClusterSpec, ContainerSpec, KubernetesSim, PodSpec, SchedulerKind};
 use hydra::sim::provider::ProviderId;
 use hydra::util::json::Json;
 use hydra::util::stats::Summary;
@@ -36,6 +40,8 @@ const MICRO_SEED: u64 = 7;
 struct Point {
     name: &'static str,
     ovh_ms: Summary,
+    /// Serialize-phase window: max over concurrent providers, like OVH.
+    serialize_ms: Summary,
     th_tps: Summary,
     tpt_s: Summary,
     pods: usize,
@@ -47,12 +53,9 @@ fn noop_containers(n: usize) -> Vec<TaskDescription> {
         .collect()
 }
 
-fn run_point(
-    name: &'static str,
-    providers: &[ProviderId],
-    model: PartitionModel,
-) -> Point {
+fn run_point(name: &'static str, providers: &[ProviderId], model: PartitionModel) -> Point {
     let mut ovh = Vec::new();
+    let mut ser = Vec::new();
     let mut th = Vec::new();
     let mut tpt = Vec::new();
     let mut pods = 0usize;
@@ -68,6 +71,12 @@ fn run_point(
             .submit(noop_containers(POINT_TASKS), &BrokerPolicy::RoundRobin)
             .expect("noop workload must broker");
         ovh.push(run.aggregate.ovh_s * 1e3);
+        let serialize_window = run
+            .reports
+            .values()
+            .map(|r| r.metrics().ovh.serialize_s)
+            .fold(0.0, f64::max);
+        ser.push(serialize_window * 1e3);
         th.push(run.aggregate.th_tps);
         tpt.push(run.aggregate.tpt_s);
         pods = run.aggregate.pods;
@@ -75,9 +84,62 @@ fn run_point(
     Point {
         name,
         ovh_ms: Summary::of(&ovh),
+        serialize_ms: Summary::of(&ser),
         th_tps: Summary::of(&th),
         tpt_s: Summary::of(&tpt),
         pods,
+    }
+}
+
+/// ISSUE 3 tentpole row: threads=1 vs threads=N manifest serialization +
+/// bulk framing for the 4K-task SCPP point (the serialization-heaviest
+/// quick point: one manifest per task). Best-of-5 per configuration;
+/// asserts the framed payloads are byte-identical.
+struct SerializeMicro {
+    threads: usize,
+    serial_ms: f64,
+    parallel_ms: f64,
+    speedup: f64,
+    bulk_bytes: usize,
+}
+
+fn run_serialize_micro() -> SerializeMicro {
+    let tasks: Vec<(TaskId, TaskDescription)> = (0..POINT_TASKS)
+        .map(|i| {
+            (
+                TaskId(i as u64),
+                TaskDescription::container(format!("noop-{i}"), "hydra/noop:latest"),
+            )
+        })
+        .collect();
+    let cluster = ClusterSpec::uniform(1, 16);
+    let time_with = |opts: SerializeOptions| -> (f64, Vec<u8>) {
+        let p = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory).with_serialize(opts);
+        let mut best = f64::INFINITY;
+        let mut bulk = Vec::new();
+        for _ in 0..5 {
+            let pods = p.partition(&tasks, &cluster, 0).expect("noop tasks fit");
+            let sw = Stopwatch::start();
+            let prepared = p.build_manifests(pods, &tasks).expect("memory mode");
+            let framed = prepared.frame_bulk(opts);
+            best = best.min(sw.elapsed_secs());
+            bulk = framed;
+        }
+        (best * 1e3, bulk)
+    };
+    let (serial_ms, serial_bulk) = time_with(SerializeOptions::serial());
+    let auto = SerializeOptions::default();
+    let (parallel_ms, parallel_bulk) = time_with(auto);
+    assert_eq!(
+        serial_bulk, parallel_bulk,
+        "parallel serialization diverged from the serial reference"
+    );
+    SerializeMicro {
+        threads: auto.effective_threads(),
+        serial_ms,
+        parallel_ms,
+        speedup: serial_ms / parallel_ms.max(1e-9),
+        bulk_bytes: serial_bulk.len(),
     }
 }
 
@@ -126,6 +188,8 @@ fn point_json(p: &Point) -> Json {
         .set("pods", p.pods)
         .set("ovh_ms_mean", p.ovh_ms.mean)
         .set("ovh_ms_std", p.ovh_ms.std)
+        .set("serialize_ms_mean", p.serialize_ms.mean)
+        .set("serialize_ms_std", p.serialize_ms.std)
         .set("th_tps_mean", p.th_tps.mean)
         .set("th_tps_std", p.th_tps.std)
         .set("tpt_s_mean", p.tpt_s.mean)
@@ -143,8 +207,8 @@ fn main() {
     println!("bench_quick: perf-trajectory smoke (fixed seeds {SEEDS:?})");
     println!("\n--- broker points ({POINT_TASKS} noop tasks) ---");
     println!(
-        "{:<16} {:>8} {:>16} {:>14} {:>10}",
-        "POINT", "PODS", "OVH (ms)", "TH (task/s)", "TPT (s)"
+        "{:<16} {:>8} {:>16} {:>10} {:>14} {:>10}",
+        "POINT", "PODS", "OVH (ms)", "SER (ms)", "TH (task/s)", "TPT (s)"
     );
     let points = [
         run_point("exp1_mcpp_4k", &[ProviderId::Jetstream2], PartitionModel::Mcpp { max_cpp: 16 }),
@@ -153,13 +217,28 @@ fn main() {
     ];
     for p in &points {
         println!(
-            "{:<16} {:>8} {:>8.2} ±{:>5.2} {:>14.0} {:>10.1}",
-            p.name, p.pods, p.ovh_ms.mean, p.ovh_ms.std, p.th_tps.mean, p.tpt_s.mean
+            "{:<16} {:>8} {:>8.2} ±{:>5.2} {:>10.2} {:>14.0} {:>10.1}",
+            p.name,
+            p.pods,
+            p.ovh_ms.mean,
+            p.ovh_ms.std,
+            p.serialize_ms.mean,
+            p.th_tps.mean,
+            p.tpt_s.mean
         );
     }
 
+    println!("\n--- serialize microbench ({POINT_TASKS} tasks, SCPP, best of 5) ---");
+    let ser = run_serialize_micro();
     println!(
-        "\n--- scheduling microbench ({MICRO_PODS} pods, {MICRO_NODES} nodes x {MICRO_VCPUS} vCPUs, seed {MICRO_SEED}) ---"
+        "threads=1: {:.2}ms | threads={}: {:.2}ms | speedup {:.2}x | framed {} bytes \
+         (byte-identical)",
+        ser.serial_ms, ser.threads, ser.parallel_ms, ser.speedup, ser.bulk_bytes
+    );
+
+    println!(
+        "\n--- scheduling microbench ({MICRO_PODS} pods, {MICRO_NODES} nodes x \
+         {MICRO_VCPUS} vCPUs, seed {MICRO_SEED}) ---"
     );
     let (linear, linear_records) = run_micro(SchedulerKind::LinearScan);
     let (indexed, indexed_records) = run_micro(SchedulerKind::Indexed);
@@ -191,6 +270,18 @@ fn main() {
         .set("schema", "hydra-bench-quick/v1")
         .set("seeds", Json::Arr(SEEDS.iter().map(|&s| Json::Num(s as f64)).collect()))
         .set("points", Json::Arr(points.iter().map(point_json).collect()))
+        .set(
+            "serialize_microbench",
+            Json::obj()
+                .set("tasks", POINT_TASKS)
+                .set("model", "SCPP")
+                .set("threads", ser.threads)
+                .set("serialize_ms_serial", ser.serial_ms)
+                .set("serialize_ms_parallel", ser.parallel_ms)
+                .set("speedup", ser.speedup)
+                .set("bulk_bytes", ser.bulk_bytes)
+                .set("bulk_identical", true),
+        )
         .set(
             "sched_microbench",
             Json::obj()

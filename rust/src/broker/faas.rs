@@ -8,12 +8,16 @@
 
 use crate::api::task::{Payload, TaskDescription, TaskId, TaskState};
 use crate::api::ProviderConfig;
+use crate::broker::data::{
+    frame_bulk, serialize_sharded, submit_bulk, ManifestShard, SerializeOptions,
+};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
 use crate::sim::faas::{FaasReport, FaasSim, FaasSpec, Invocation};
 use crate::sim::provider::PlatformKind;
 use crate::util::json::Json;
 use crate::util::Stopwatch;
+use std::borrow::Borrow;
 
 #[derive(Debug)]
 pub enum FaasError {
@@ -47,15 +51,38 @@ pub struct FaasRunReport {
     pub bytes_serialized: usize,
 }
 
+/// Serialize the bulk invoke request as contiguous task shards on scoped
+/// threads (§Perf: the serialize phase is embarrassingly parallel across
+/// invocations; `opts.threads == 1` is the serial reference path and the
+/// framed bytes are identical for every thread count).
+pub fn bulk_invoke_document<T: Borrow<TaskDescription> + Sync>(
+    tasks: &[(TaskId, T)],
+    opts: SerializeOptions,
+) -> Vec<ManifestShard> {
+    serialize_sharded(tasks, opts, 96, |out, (id, t), _| {
+        Json::obj()
+            .set("function", t.borrow().name.as_str())
+            .set("qualifier", "$LATEST")
+            .set("payload", Json::obj().set("hydra_task_id", id.0))
+            .write_into(out)
+    })
+}
+
 /// FaaS manager bound to one cloud provider connection.
 pub struct FaasManager {
     pub config: ProviderConfig,
     pub spec: FaasSpec,
     pub seed: u64,
+    /// Serialize-phase fan-out; defaults to available parallelism.
+    pub serialize: SerializeOptions,
 }
 
 impl FaasManager {
-    pub fn new(config: ProviderConfig, spec: FaasSpec, seed: u64) -> Result<FaasManager, FaasError> {
+    pub fn new(
+        config: ProviderConfig,
+        spec: FaasSpec,
+        seed: u64,
+    ) -> Result<FaasManager, FaasError> {
         config.credentials.validate().map_err(FaasError::InvalidResource)?;
         if config.profile().kind != PlatformKind::Cloud {
             return Err(FaasError::InvalidResource(format!(
@@ -66,15 +93,21 @@ impl FaasManager {
         if spec.concurrency == 0 {
             return Err(FaasError::InvalidResource("concurrency must be >= 1".into()));
         }
-        Ok(FaasManager { config, spec, seed })
+        Ok(FaasManager { config, spec, seed, serialize: SerializeOptions::default() })
+    }
+
+    pub fn with_serialize(mut self, serialize: SerializeOptions) -> Self {
+        self.serialize = serialize;
+        self
     }
 
     /// Execute a workload as function invocations.
     ///
     /// Generic over `Borrow<TaskDescription>` like the CaaS/HPC managers:
     /// descriptions arrive as registry-shared `Arc` handles on the broker
-    /// path (§Perf).
-    pub fn execute<T: std::borrow::Borrow<TaskDescription>>(
+    /// path (§Perf). `Sync` because the serialize phase fans the batch
+    /// out over scoped threads.
+    pub fn execute<T: Borrow<TaskDescription> + Sync>(
         &self,
         tasks: &[(TaskId, T)],
         registry: &TaskRegistry,
@@ -109,27 +142,19 @@ impl FaasManager {
         let partition_s = sw.elapsed_secs();
         registry.transition_all(&ids, TaskState::Partitioned)?;
 
-        // -- OVH: serialize the bulk invoke request ------------------------
+        // -- OVH: serialize the bulk invoke request (sharded, §Perf) -------
         let sw = Stopwatch::start();
-        let mut buf = String::with_capacity(tasks.len() * 96);
-        buf.push('[');
-        for (i, (id, t)) in tasks.iter().enumerate() {
-            if i > 0 {
-                buf.push(',');
-            }
-            Json::obj()
-                .set("function", t.borrow().name.as_str())
-                .set("qualifier", "$LATEST")
-                .set("payload", Json::obj().set("hydra_task_id", id.0))
-                .write_into(&mut buf);
-        }
-        buf.push(']');
-        let bytes_serialized = buf.len();
-        std::hint::black_box(&buf);
+        let shards = bulk_invoke_document(tasks, self.serialize);
         let serialize_s = sw.elapsed_secs();
 
-        // -- submit + simulate ---------------------------------------------
+        // -- OVH: frame + submit -------------------------------------------
+        // The bulk payload is framed directly from the shard buffers (one
+        // copy per shard) and shipped through the shared provider-API sink.
         let sw = Stopwatch::start();
+        let expected_bulk = crate::broker::data::expected_framed_len(&shards);
+        let bulk = frame_bulk(&shards, self.serialize);
+        let bytes_serialized = submit_bulk(&bulk);
+        assert_eq!(bytes_serialized, expected_bulk, "bulk framing lost bytes");
         let mut sim = FaasSim::new(self.config.profile(), self.spec, self.seed);
         sim.submit(invocations);
         let submit_s = sw.elapsed_secs();
@@ -137,10 +162,16 @@ impl FaasManager {
 
         let report = sim.run();
         for rec in &report.invocations {
-            registry.transition_virtual(TaskId(rec.task_id), TaskState::Running,
-                                        Some(rec.started_s))?;
-            registry.transition_virtual(TaskId(rec.task_id), TaskState::Done,
-                                        Some(rec.finished_s))?;
+            registry.transition_virtual(
+                TaskId(rec.task_id),
+                TaskState::Running,
+                Some(rec.started_s),
+            )?;
+            registry.transition_virtual(
+                TaskId(rec.task_id),
+                TaskState::Done,
+                Some(rec.finished_s),
+            )?;
         }
 
         let metrics = RunMetrics {
@@ -198,6 +229,21 @@ mod tests {
         let d = TaskDescription::container("g", "img").with_gpus(1);
         let id = reg.register(d.clone());
         assert!(manager().execute(&[(id, d)], &reg).is_err());
+    }
+
+    #[test]
+    fn bulk_invoke_document_is_thread_count_invariant() {
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 300);
+        let serial_opts = SerializeOptions::serial();
+        let serial = frame_bulk(&bulk_invoke_document(&tasks, serial_opts), serial_opts);
+        assert_eq!(serial[0], b'[');
+        assert!(serial.windows(13).any(|w| w == b"hydra_task_id".as_slice()));
+        for threads in [2, 8] {
+            let opts = SerializeOptions::with_threads(threads);
+            let bulk = frame_bulk(&bulk_invoke_document(&tasks, opts), opts);
+            assert_eq!(bulk, serial, "threads={threads}");
+        }
     }
 
     #[test]

@@ -10,11 +10,16 @@
 use crate::api::resource::ResourceRequest;
 use crate::api::task::{Payload, TaskDescription, TaskId, TaskState};
 use crate::api::ProviderConfig;
+use crate::broker::data::{
+    expected_framed_len, frame_bulk, serialize_sharded, submit_bulk, ManifestShard,
+    SerializeOptions,
+};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
 use crate::sim::hpc::{HpcReport, HpcSim, HpcTaskSpec, PilotSpec};
 use crate::util::json::Json;
 use crate::util::Stopwatch;
+use std::borrow::Borrow;
 
 #[derive(Debug)]
 pub enum HpcError {
@@ -48,6 +53,40 @@ pub struct HpcRunReport {
     pub bytes_serialized: usize,
 }
 
+/// Translate tasks into pilot task specs (the HPC path's "partition"
+/// phase: translation to connector task dicts).
+pub fn pilot_specs<T: Borrow<TaskDescription>>(tasks: &[(TaskId, T)]) -> Vec<HpcTaskSpec> {
+    tasks
+        .iter()
+        .map(|(id, t)| {
+            let t = t.borrow();
+            let (work_s, sleep_s) = match t.payload {
+                Payload::Noop => (0.0, 0.0),
+                Payload::Sleep(s) => (0.0, s),
+                Payload::Work(w) => (w, 0.0),
+                Payload::Compute(_) => (0.0, 0.0),
+            };
+            HpcTaskSpec { task_id: id.0, cores: t.cpus, work_s, sleep_s }
+        })
+        .collect()
+}
+
+/// Serialize the bulk RADICAL-Pilot-style submission document as
+/// contiguous task shards on scoped threads (§Perf; `opts.threads == 1`
+/// is the serial reference path and the framed bytes are identical for
+/// every thread count). `specs` must be index-aligned with `tasks`
+/// (see [`pilot_specs`]).
+pub fn bulk_task_document<T: Borrow<TaskDescription> + Sync>(
+    tasks: &[(TaskId, T)],
+    specs: &[HpcTaskSpec],
+    opts: SerializeOptions,
+) -> Vec<ManifestShard> {
+    assert_eq!(tasks.len(), specs.len(), "specs must align with tasks");
+    serialize_sharded(tasks, opts, 128, |out, (id, t), i| {
+        task_dict(*id, t.borrow(), &specs[i]).write_into(out)
+    })
+}
+
 pub struct HpcManager {
     pub config: ProviderConfig,
     pub resource: ResourceRequest,
@@ -56,6 +95,8 @@ pub struct HpcManager {
     pub failure_rate: f64,
     /// Cancel not-yet-started tasks after the first failure.
     pub cancel_on_failure: bool,
+    /// Serialize-phase fan-out; defaults to available parallelism.
+    pub serialize: SerializeOptions,
 }
 
 impl HpcManager {
@@ -72,7 +113,14 @@ impl HpcManager {
                 resource.provider, config.id
             )));
         }
-        Ok(HpcManager { config, resource, seed, failure_rate: 0.0, cancel_on_failure: false })
+        Ok(HpcManager {
+            config,
+            resource,
+            seed,
+            failure_rate: 0.0,
+            cancel_on_failure: false,
+            serialize: SerializeOptions::default(),
+        })
     }
 
     pub fn with_failure_handling(mut self, failure_rate: f64, cancel_on_failure: bool) -> Self {
@@ -81,13 +129,19 @@ impl HpcManager {
         self
     }
 
+    pub fn with_serialize(mut self, serialize: SerializeOptions) -> Self {
+        self.serialize = serialize;
+        self
+    }
+
     /// Execute a workload: validate → serialize bulk task descriptions →
     /// submit onto the pilot → trace to completion.
     ///
     /// Generic over `Borrow<TaskDescription>`: the service proxy passes
     /// `Arc<TaskDescription>` handles shared with the registry (§Perf: no
-    /// description clone per manager hop).
-    pub fn execute<T: std::borrow::Borrow<TaskDescription>>(
+    /// description clone per manager hop). `Sync` because the serialize
+    /// phase fans the batch out over scoped threads.
+    pub fn execute<T: Borrow<TaskDescription> + Sync>(
         &self,
         tasks: &[(TaskId, T)],
         registry: &TaskRegistry,
@@ -101,44 +155,32 @@ impl HpcManager {
         // -- OVH: build pilot task descriptions ("partitioning" on the
         // HPC path is the translation to connector task dicts) ----------
         let sw = Stopwatch::start();
-        let specs: Vec<HpcTaskSpec> = tasks
-            .iter()
-            .map(|(id, t)| {
-                let t = t.borrow();
-                let (work_s, sleep_s) = match t.payload {
-                    Payload::Noop => (0.0, 0.0),
-                    Payload::Sleep(s) => (0.0, s),
-                    Payload::Work(w) => (w, 0.0),
-                    Payload::Compute(_) => (0.0, 0.0),
-                };
-                HpcTaskSpec { task_id: id.0, cores: t.cpus, work_s, sleep_s }
-            })
-            .collect();
+        let specs = pilot_specs(tasks);
         let partition_s = sw.elapsed_secs();
         registry.transition_all(&ids, TaskState::Partitioned)?;
 
         // -- OVH: serialize the bulk submission (RADICAL-Pilot-style task
-        // description dicts in one JSON document) — written straight into
-        // the bulk buffer, no per-task scratch String (§Perf).
+        // description dicts in one JSON document), sharded across scoped
+        // threads (§Perf).
         let sw = Stopwatch::start();
-        let mut buf = String::with_capacity(tasks.len() * 128);
-        buf.push('[');
-        for (i, ((id, t), spec)) in tasks.iter().zip(&specs).enumerate() {
-            if i > 0 {
-                buf.push(',');
-            }
-            task_dict(*id, t.borrow(), spec).write_into(&mut buf);
-        }
-        buf.push(']');
-        let bytes_serialized = buf.len();
-        std::hint::black_box(&buf);
+        let shards = bulk_task_document(tasks, &specs, self.serialize);
         let serialize_s = sw.elapsed_secs();
 
-        // -- OVH: submit -------------------------------------------------
+        // -- OVH: frame + submit -----------------------------------------
+        // The bulk document is framed directly from the shard buffers
+        // (one copy per shard) and shipped through the shared
+        // provider-API sink before the pilot takes the specs.
         let sw = Stopwatch::start();
-        let mut sim = HpcSim::new(self.config.profile(), PilotSpec { nodes: self.resource.nodes },
-                                  self.seed)
-            .with_failure_rate(self.failure_rate);
+        let expected_bulk = expected_framed_len(&shards);
+        let bulk = frame_bulk(&shards, self.serialize);
+        let bytes_serialized = submit_bulk(&bulk);
+        assert_eq!(bytes_serialized, expected_bulk, "bulk framing lost bytes");
+        let mut sim = HpcSim::new(
+            self.config.profile(),
+            PilotSpec { nodes: self.resource.nodes },
+            self.seed,
+        )
+        .with_failure_rate(self.failure_rate);
         sim.submit(specs);
         let submit_s = sw.elapsed_secs();
         registry.transition_all(&ids, TaskState::Submitted)?;
@@ -153,18 +195,33 @@ impl HpcManager {
             .fold(f64::INFINITY, f64::min);
         for rec in &report.tasks {
             if rec.failed {
-                registry.transition_virtual(TaskId(rec.task_id), TaskState::Running,
-                                            Some(rec.launched_s))?;
-                registry.transition_virtual(TaskId(rec.task_id), TaskState::Failed,
-                                            Some(rec.finished_s))?;
+                registry.transition_virtual(
+                    TaskId(rec.task_id),
+                    TaskState::Running,
+                    Some(rec.launched_s),
+                )?;
+                registry.transition_virtual(
+                    TaskId(rec.task_id),
+                    TaskState::Failed,
+                    Some(rec.finished_s),
+                )?;
             } else if self.cancel_on_failure && rec.launched_s > first_fail {
-                registry.transition_virtual(TaskId(rec.task_id), TaskState::Canceled,
-                                            Some(first_fail))?;
+                registry.transition_virtual(
+                    TaskId(rec.task_id),
+                    TaskState::Canceled,
+                    Some(first_fail),
+                )?;
             } else {
-                registry.transition_virtual(TaskId(rec.task_id), TaskState::Running,
-                                            Some(rec.launched_s))?;
-                registry.transition_virtual(TaskId(rec.task_id), TaskState::Done,
-                                            Some(rec.finished_s))?;
+                registry.transition_virtual(
+                    TaskId(rec.task_id),
+                    TaskState::Running,
+                    Some(rec.launched_s),
+                )?;
+                registry.transition_virtual(
+                    TaskId(rec.task_id),
+                    TaskState::Done,
+                    Some(rec.finished_s),
+                )?;
             }
         }
 
@@ -241,6 +298,21 @@ mod tests {
         let r = manager(1).execute(&tasks, &reg).unwrap();
         let t = &r.sim.tasks[0];
         assert!(((t.finished_s - t.launched_s) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bulk_task_document_is_thread_count_invariant() {
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 300, 2.5);
+        let specs = pilot_specs(&tasks);
+        let serial_opts = SerializeOptions::serial();
+        let serial = frame_bulk(&bulk_task_document(&tasks, &specs, serial_opts), serial_opts);
+        assert_eq!(serial[0], b'[');
+        for threads in [2, 8] {
+            let opts = SerializeOptions::with_threads(threads);
+            let bulk = frame_bulk(&bulk_task_document(&tasks, &specs, opts), opts);
+            assert_eq!(bulk, serial, "threads={threads}");
+        }
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! * [`caas`] — CaaS Manager (Kubernetes clusters, pod workloads).
 //! * [`hpc`] — HPC Manager (pilot connector, bulk task submission).
 //! * [`faas`] — FaaS Manager (the §3.1 extensibility example, implemented).
-//! * [`data`] — Data Manager (copy/move/link/delete/list, staging).
+//! * [`data`] — Data Manager (copy/move/link/delete/list, staging) and
+//!   the bulk serialization data path (shards, framing, submit sink).
 //! * [`partitioner`] — MCPP/SCPP pod partitioning + manifest building.
 //! * [`policy`] — task→provider binding policies.
 //! * [`state`] — task registry, state machine, tracing.
@@ -26,6 +27,7 @@ use crate::api::resource::ResourceRequest;
 use crate::api::task::TaskDescription;
 use crate::api::ProviderConfig;
 use crate::sim::provider::ProviderId;
+pub use data::SerializeOptions;
 pub use partitioner::{PartitionModel, PodBuildMode};
 pub use policy::BrokerPolicy;
 pub use service_proxy::{BrokerError, BrokerRun, ServiceProxy};
@@ -60,6 +62,7 @@ pub struct HydraBuilder {
     resources: Vec<ResourceRequest>,
     partition_model: Option<PartitionModel>,
     build_mode: Option<PodBuildMode>,
+    serialize: Option<SerializeOptions>,
     seed: Option<u64>,
 }
 
@@ -89,6 +92,14 @@ impl HydraBuilder {
         self
     }
 
+    /// Serialize-phase fan-out for every manager: `1` = serial reference
+    /// path, `0` = available parallelism (the default). The bulk payload
+    /// bytes are identical for any value (ISSUE 3 tentpole guarantee).
+    pub fn serialize_threads(mut self, threads: usize) -> Self {
+        self.serialize = Some(SerializeOptions::with_threads(threads));
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = Some(seed);
         self
@@ -103,6 +114,9 @@ impl HydraBuilder {
         }
         if let Some(b) = self.build_mode {
             proxy.build_mode = b;
+        }
+        if let Some(s) = self.serialize {
+            proxy.serialize = s;
         }
         if let Some(s) = self.seed {
             proxy.seed = s;

@@ -23,14 +23,20 @@
 //! `partition` builds the `Vec<PodSpec>` once, `build_manifests` takes it
 //! *by value* and returns it inside [`PreparedWorkload`] (no `to_vec`),
 //! and the manager moves the same vector into the simulator's `submit`.
-//! Memory-mode manifests are written into **one shared buffer per batch**
-//! (`manifest_blob` + byte spans) instead of one `String` per pod, so
-//! serializing a 16K-pod workload costs O(log) buffer growths, not 16K
-//! allocations. Task descriptions arrive behind `Borrow<TaskDescription>`
-//! so callers can pass `Arc<TaskDescription>` handles shared with the
-//! registry instead of cloned descriptions.
+//! Memory-mode manifests are serialized into **contiguous shards**
+//! ([`ManifestShard`]: one buffer + span table per shard) on scoped
+//! threads — [`SerializeOptions`] picks the fan-out, `threads == 1` being
+//! the serial reference path — and the bulk submission payload is framed
+//! directly from the shard buffers with one copy per shard, never per
+//! manifest. The framed bytes are identical for every thread count. Task
+//! descriptions arrive behind `Borrow<TaskDescription>` so callers can
+//! pass `Arc<TaskDescription>` handles shared with the registry instead
+//! of cloned descriptions.
 
-use crate::api::task::{TaskDescription, TaskId, TaskKind, Payload};
+use crate::api::task::{Payload, TaskDescription, TaskId, TaskKind};
+use crate::broker::data::{
+    frame_bulk, framed_len, serialize_sharded, sharded_map, ManifestShard, SerializeOptions,
+};
 use crate::sim::kubernetes::{ClusterSpec, ContainerSpec, PodSpec};
 use crate::util::json::{push_json_str, push_u64, push_u64_padded, Json};
 use std::borrow::Borrow;
@@ -63,18 +69,17 @@ pub enum PodBuildMode {
 }
 
 /// A prepared workload: simulator-ready pods plus their serialized
-/// manifests. Memory mode concatenates every manifest into one
-/// `manifest_blob` addressed by byte spans (one buffer per batch, §Perf);
-/// Disk mode records the staging file paths instead.
+/// manifests. Memory mode serializes the manifests into contiguous
+/// [`ManifestShard`]s (one buffer + span table per shard, `,` separators
+/// between manifests already in place, §Perf); Disk mode records the
+/// staging file paths instead.
 #[derive(Debug)]
 pub struct PreparedWorkload {
     pub pods: Vec<PodSpec>,
-    /// All Memory-mode manifests back to back; empty in Disk mode.
-    pub manifest_blob: String,
-    /// `(start, end)` byte ranges of each pod's manifest in
-    /// `manifest_blob`, index-aligned with `pods` (Memory mode only).
-    pub manifest_spans: Vec<(usize, usize)>,
+    /// Memory-mode manifest shards, in pod order; empty in Disk mode.
+    pub shards: Vec<ManifestShard>,
     pub manifest_paths: Vec<PathBuf>,
+    /// Total manifest bytes (bulk-envelope separators excluded).
     pub bytes_serialized: usize,
 }
 
@@ -84,19 +89,35 @@ impl PreparedWorkload {
     /// `manifest_count()` is 0 there and any index panics — check the
     /// build mode or `manifest_count()` first.
     pub fn manifest(&self, i: usize) -> &str {
-        let (s, e) = self.manifest_spans[i];
-        &self.manifest_blob[s..e]
+        let k = self.shards.partition_point(|s| s.first <= i) - 1;
+        let shard = &self.shards[k];
+        let (s, e) = shard.spans[i - shard.first];
+        &shard.buf[s..e]
     }
 
     /// Iterate Memory-mode manifests in pod order (empty in Disk mode).
     pub fn manifests(&self) -> impl Iterator<Item = &str> + '_ {
-        self.manifest_spans.iter().map(|&(s, e)| &self.manifest_blob[s..e])
+        self.shards
+            .iter()
+            .flat_map(|shard| shard.spans.iter().map(move |&(s, e)| &shard.buf[s..e]))
     }
 
     /// Number of in-memory manifests: `pods.len()` in Memory mode, 0 in
     /// Disk mode (where `manifest_paths.len()` counts instead).
     pub fn manifest_count(&self) -> usize {
-        self.manifest_spans.len()
+        self.shards.iter().map(|s| s.spans.len()).sum()
+    }
+
+    /// Frame the bulk submission payload `[m0,m1,...]` directly from the
+    /// shard buffers — one copy per shard, never per manifest (§Perf;
+    /// Memory mode only, `[]` in Disk mode).
+    pub fn frame_bulk(&self, opts: SerializeOptions) -> Vec<u8> {
+        frame_bulk(&self.shards, opts)
+    }
+
+    /// Exact byte length [`Self::frame_bulk`] will produce.
+    pub fn framed_len(&self) -> usize {
+        framed_len(&self.shards)
     }
 }
 
@@ -124,11 +145,18 @@ impl std::error::Error for PartitionError {}
 pub struct Partitioner {
     pub model: PartitionModel,
     pub build_mode: PodBuildMode,
+    /// Serialize-phase fan-out; defaults to available parallelism.
+    pub serialize: SerializeOptions,
 }
 
 impl Partitioner {
     pub fn new(model: PartitionModel, build_mode: PodBuildMode) -> Partitioner {
-        Partitioner { model, build_mode }
+        Partitioner { model, build_mode, serialize: SerializeOptions::default() }
+    }
+
+    pub fn with_serialize(mut self, serialize: SerializeOptions) -> Partitioner {
+        self.serialize = serialize;
+        self
     }
 
     /// Partition `tasks` into pods that individually fit an empty node of
@@ -203,7 +231,11 @@ impl Partitioner {
 
     /// Build (and in Disk mode persist) the Kubernetes manifests for a
     /// set of pods. The serialization cost measured here is the dominant
-    /// OVH component of the paper's Experiment 1.
+    /// OVH component of the paper's Experiment 1 — and it is
+    /// embarrassingly parallel across pods, so both modes shard the batch
+    /// into contiguous chunks and serialize each shard on its own scoped
+    /// thread (`self.serialize` picks the fan-out; `threads == 1` is the
+    /// serial reference path with byte-identical output).
     ///
     /// Takes `pods` by value and hands the same vector back inside the
     /// [`PreparedWorkload`] — the caller moves it onward to the simulator
@@ -217,51 +249,53 @@ impl Partitioner {
         let by_id: std::collections::HashMap<u64, &TaskDescription> =
             tasks.iter().map(|(id, t)| (id.0, t.borrow())).collect();
 
-        let mut blob = String::new();
-        let mut spans = Vec::new();
+        let mut shards = Vec::new();
         let mut paths = Vec::new();
-        let mut bytes = 0usize;
+        let bytes;
 
         match &self.build_mode {
             PodBuildMode::Memory => {
-                // One buffer for the whole batch: spans index into it, and
-                // growth is amortized-doubling instead of per-pod Strings.
-                blob.reserve(pods.len() * 384);
-                spans.reserve(pods.len());
-                for pod in &pods {
-                    let start = blob.len();
-                    write_pod_manifest(&mut blob, pod, &by_id);
-                    spans.push((start, blob.len()));
-                }
-                bytes = blob.len();
+                shards = serialize_sharded(&pods, self.serialize, 384, |out, pod, _| {
+                    write_pod_manifest(out, pod, &by_id)
+                });
+                bytes = shards.iter().map(ManifestShard::item_bytes).sum();
             }
             PodBuildMode::Disk { staging_dir } => {
                 std::fs::create_dir_all(staging_dir)
                     .map_err(|e| PartitionError::Io(e.to_string()))?;
-                let mut buf = String::with_capacity(1024);
+                let write_range =
+                    |lo: usize, hi: usize| -> Result<(Vec<PathBuf>, usize), PartitionError> {
+                        let mut buf = String::with_capacity(1024);
+                        let mut paths = Vec::with_capacity(hi - lo);
+                        let mut bytes = 0usize;
+                        for pod in &pods[lo..hi] {
+                            buf.clear();
+                            write_pod_manifest(&mut buf, pod, &by_id);
+                            bytes += buf.len();
+                            let path = staging_dir.join(format!("pod-{:08}.json", pod.id));
+                            let f = std::fs::File::create(&path)
+                                .map_err(|e| PartitionError::Io(e.to_string()))?;
+                            let mut w = std::io::BufWriter::new(f);
+                            w.write_all(buf.as_bytes())
+                                .map_err(|e| PartitionError::Io(e.to_string()))?;
+                            w.flush().map_err(|e| PartitionError::Io(e.to_string()))?;
+                            paths.push(path);
+                        }
+                        Ok((paths, bytes))
+                    };
+                let results =
+                    sharded_map(pods.len(), self.serialize.shards_for(pods.len()), write_range);
+                let mut total = 0usize;
                 paths.reserve(pods.len());
-                for pod in &pods {
-                    buf.clear();
-                    write_pod_manifest(&mut buf, pod, &by_id);
-                    bytes += buf.len();
-                    let path = staging_dir.join(format!("pod-{:08}.json", pod.id));
-                    let f = std::fs::File::create(&path)
-                        .map_err(|e| PartitionError::Io(e.to_string()))?;
-                    let mut w = std::io::BufWriter::new(f);
-                    w.write_all(buf.as_bytes())
-                        .map_err(|e| PartitionError::Io(e.to_string()))?;
-                    w.flush().map_err(|e| PartitionError::Io(e.to_string()))?;
-                    paths.push(path);
+                for r in results {
+                    let (shard_paths, shard_bytes) = r?;
+                    paths.extend(shard_paths);
+                    total += shard_bytes;
                 }
+                bytes = total;
             }
         }
-        Ok(PreparedWorkload {
-            pods,
-            manifest_blob: blob,
-            manifest_spans: spans,
-            manifest_paths: paths,
-            bytes_serialized: bytes,
-        })
+        Ok(PreparedWorkload { pods, shards, manifest_paths: paths, bytes_serialized: bytes })
     }
 }
 
@@ -464,7 +498,8 @@ mod tests {
         assert_eq!(a.len(), b.len());
         let wa = p.build_manifests(a, &owned).unwrap();
         let wb = p.build_manifests(b, &shared).unwrap();
-        assert_eq!(wa.manifest_blob, wb.manifest_blob);
+        assert_eq!(wa.shards, wb.shards);
+        assert_eq!(wa.frame_bulk(p.serialize), wb.frame_bulk(p.serialize));
     }
 
     #[test]
@@ -526,7 +561,7 @@ mod tests {
         assert_eq!(w.manifest_count(), n_pods);
         assert_eq!(w.pods.len(), n_pods);
         assert!(w.bytes_serialized > 0);
-        assert_eq!(w.bytes_serialized, w.manifest_blob.len());
+        assert_eq!(w.bytes_serialized, w.manifests().map(str::len).sum::<usize>());
         for m in w.manifests() {
             let doc = json::parse(m).unwrap();
             assert_eq!(doc.get("kind").unwrap().as_str(), Some("Pod"));
@@ -536,22 +571,109 @@ mod tests {
     }
 
     #[test]
-    fn manifest_spans_tile_the_blob_exactly() {
-        // One buffer per batch: spans must cover the blob back to back
-        // with no gaps or overlaps.
-        let p = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory);
-        let ts = tasks(9);
+    fn manifest_spans_tile_each_shard_exactly() {
+        // Shard buffers hold manifests back to back with one `,` between
+        // spans; spans must cover each buffer with no other gaps, and the
+        // shards' `first` indices must cover the batch contiguously.
+        let p = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory)
+            .with_serialize(SerializeOptions::with_threads(3));
+        let ts = tasks(200);
         let pods = p.partition(&ts, &cluster(), 0).unwrap();
         let w = p.build_manifests(pods, &ts).unwrap();
-        let mut cursor = 0usize;
-        for i in 0..w.manifest_count() {
-            let (s, e) = w.manifest_spans[i];
-            assert_eq!(s, cursor);
-            assert!(e > s);
-            cursor = e;
+        let mut seen = 0usize;
+        for shard in &w.shards {
+            assert_eq!(shard.first, seen);
+            let mut cursor = 0usize;
+            for (i, &(s, e)) in shard.spans.iter().enumerate() {
+                assert_eq!(s, if i == 0 { 0 } else { cursor + 1 });
+                assert!(e > s);
+                cursor = e;
+            }
+            assert_eq!(cursor, shard.buf.len());
+            seen += shard.spans.len();
         }
-        assert_eq!(cursor, w.manifest_blob.len());
+        assert_eq!(seen, w.manifest_count());
         assert_eq!(w.manifest(0), w.manifests().next().unwrap());
+    }
+
+    #[test]
+    fn manifest_lookup_crosses_shard_boundaries() {
+        let serial = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory)
+            .with_serialize(SerializeOptions::serial());
+        let sharded = Partitioner::new(PartitionModel::Scpp, PodBuildMode::Memory)
+            .with_serialize(SerializeOptions::with_threads(8));
+        let ts = tasks(300);
+        let ws = serial
+            .build_manifests(serial.partition(&ts, &cluster(), 0).unwrap(), &ts)
+            .unwrap();
+        let wp = sharded
+            .build_manifests(sharded.partition(&ts, &cluster(), 0).unwrap(), &ts)
+            .unwrap();
+        assert!(ws.shards.len() == 1 && wp.shards.len() > 1);
+        for i in 0..300 {
+            assert_eq!(ws.manifest(i), wp.manifest(i), "manifest {i}");
+        }
+        let all: Vec<&str> = wp.manifests().collect();
+        assert_eq!(all.len(), 300);
+        assert_eq!(all[299], ws.manifest(299));
+    }
+
+    #[test]
+    fn framed_bulk_is_byte_identical_across_thread_counts() {
+        // 1500 tasks / 7-container pods ≈ 215 pods: enough for several
+        // 64-pod shards, so the parallel paths really are multi-shard.
+        let ts = tasks(1500);
+        let frame = |threads: usize| {
+            let p = Partitioner::new(PartitionModel::Mcpp { max_cpp: 7 }, PodBuildMode::Memory)
+                .with_serialize(SerializeOptions::with_threads(threads));
+            let w = p.build_manifests(p.partition(&ts, &cluster(), 0).unwrap(), &ts).unwrap();
+            if threads > 1 {
+                assert!(w.shards.len() > 1, "expected multi-shard at threads={threads}");
+            }
+            let bulk = w.frame_bulk(p.serialize);
+            assert_eq!(bulk.len(), w.framed_len());
+            (bulk, w.bytes_serialized)
+        };
+        let (serial, serial_bytes) = frame(1);
+        // Serial reference: '[' + manifests joined by ',' + ']'.
+        assert_eq!(serial[0], b'[');
+        assert_eq!(*serial.last().unwrap(), b']');
+        for threads in [2, 8] {
+            let (bulk, bytes) = frame(threads);
+            assert_eq!(bulk, serial, "threads={threads}");
+            assert_eq!(bytes, serial_bytes);
+        }
+    }
+
+    #[test]
+    fn disk_mode_sharding_preserves_path_order_and_content() {
+        let ts = tasks(130);
+        let run = |threads: usize, tag: &str| {
+            let dir = std::env::temp_dir()
+                .join(format!("hydra-disk-shard-{tag}-{}", std::process::id()));
+            let p = Partitioner::new(
+                PartitionModel::Scpp,
+                PodBuildMode::Disk { staging_dir: dir.clone() },
+            )
+            .with_serialize(SerializeOptions::with_threads(threads));
+            let w = p.build_manifests(p.partition(&ts, &cluster(), 0).unwrap(), &ts).unwrap();
+            let contents: Vec<String> = w
+                .manifest_paths
+                .iter()
+                .map(|p| std::fs::read_to_string(p).unwrap())
+                .collect();
+            std::fs::remove_dir_all(&dir).ok();
+            (w.manifest_paths.clone(), contents, w.bytes_serialized)
+        };
+        let (paths1, contents1, bytes1) = run(1, "serial");
+        let (paths8, contents8, bytes8) = run(8, "par");
+        assert_eq!(contents1, contents8);
+        assert_eq!(bytes1, bytes8);
+        assert_eq!(paths1.len(), 130);
+        let names = |ps: &[PathBuf]| -> Vec<String> {
+            ps.iter().map(|p| p.file_name().unwrap().to_string_lossy().into_owned()).collect()
+        };
+        assert_eq!(names(&paths1), names(&paths8));
     }
 
     #[test]

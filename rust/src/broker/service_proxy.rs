@@ -15,6 +15,7 @@
 use crate::api::resource::{ResourceRequest, ServiceKind};
 use crate::api::task::{TaskDescription, TaskId};
 use crate::broker::caas::{CaasManager, CaasRunReport};
+use crate::broker::data::SerializeOptions;
 use crate::broker::hpc::{HpcManager, HpcRunReport};
 use crate::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
 use crate::broker::policy::{assign, Assignment, BrokerPolicy};
@@ -91,6 +92,9 @@ pub struct ServiceProxy {
     pub resources: BTreeMap<ProviderId, ResourceRequest>,
     pub partition_model: PartitionModel,
     pub build_mode: PodBuildMode,
+    /// Serialize-phase fan-out for every manager (ISSUE 3 tentpole);
+    /// defaults to available parallelism, `1` = serial reference path.
+    pub serialize: SerializeOptions,
     pub registry: TaskRegistry,
     pub seed: u64,
 }
@@ -102,6 +106,7 @@ impl ServiceProxy {
             resources: BTreeMap::new(),
             partition_model: PartitionModel::Mcpp { max_cpp: 16 },
             build_mode: PodBuildMode::Memory,
+            serialize: SerializeOptions::default(),
             registry: TaskRegistry::new(),
             seed: 0x48_59_44_52, // "HYDR"
         }
@@ -127,6 +132,11 @@ impl ServiceProxy {
 
     pub fn with_build_mode(mut self, b: PodBuildMode) -> Self {
         self.build_mode = b;
+        self
+    }
+
+    pub fn with_serialize(mut self, serialize: SerializeOptions) -> Self {
+        self.serialize = serialize;
         self
     }
 
@@ -168,6 +178,19 @@ impl ServiceProxy {
         let by_id: BTreeMap<u64, Arc<TaskDescription>> =
             tasks.iter().map(|(id, t)| (id.0, Arc::clone(t))).collect();
 
+        // §Perf: each per-provider manager thread fans its serialize
+        // phase out; dividing the *auto* default across the concurrent
+        // managers keeps the total near available parallelism instead of
+        // providers × cores (an explicit thread count is respected as
+        // given — `threads == 1` stays the serial reference path).
+        let active = assignment.values().filter(|ids| !ids.is_empty()).count().max(1);
+        let serialize = if self.serialize.threads == 0 {
+            // 0 = auto: resolve to available parallelism, then split it.
+            SerializeOptions::with_threads((self.serialize.effective_threads() / active).max(1))
+        } else {
+            self.serialize
+        };
+
         let (tx, rx) = mpsc::channel::<(ProviderId, Result<ManagerReport, String>)>();
         let mut threads = Vec::new();
         let mut expected = 0usize;
@@ -184,8 +207,8 @@ impl ServiceProxy {
             let req = self.resources.get(&provider).unwrap().clone();
             let cfg = self.providers.handle(provider).unwrap().config.clone();
             let registry = self.registry.clone();
-            let partitioner =
-                Partitioner::new(self.partition_model, self.build_mode_for(provider));
+            let partitioner = Partitioner::new(self.partition_model, self.build_mode_for(provider))
+                .with_serialize(serialize);
             let seed = self.seed ^ (provider as u64).wrapping_mul(0x9E3779B97F4A7C15);
             let tx = tx.clone();
             threads.push(std::thread::spawn(move || {
@@ -195,6 +218,7 @@ impl ServiceProxy {
                         .map(ManagerReport::Caas)
                         .map_err(|e| e.to_string()),
                     ServiceKind::Batch => HpcManager::new(cfg, req, seed)
+                        .map(|m| m.with_serialize(serialize))
                         .and_then(|m| m.execute(&slice, &registry))
                         .map(ManagerReport::Hpc)
                         .map_err(|e| e.to_string()),
@@ -322,6 +346,23 @@ mod tests {
         assert!(matches!(run.reports[&ProviderId::Aws], ManagerReport::Caas(_)));
         assert!(matches!(run.reports[&ProviderId::Bridges2], ManagerReport::Hpc(_)));
         assert_eq!(run.aggregate.tasks, 120);
+    }
+
+    #[test]
+    fn serialize_knob_does_not_change_payload_bytes() {
+        let run_with = |threads: usize| {
+            let mut sp = ServiceProxy::new(ProviderProxy::simulated(&[ProviderId::Aws]))
+                .with_serialize(SerializeOptions::with_threads(threads));
+            sp.acquire(ResourceRequest::kubernetes(ProviderId::Aws, 1, 16)).unwrap();
+            let run = sp.run(containers(500), &BrokerPolicy::RoundRobin).unwrap();
+            match &run.reports[&ProviderId::Aws] {
+                ManagerReport::Caas(r) => (r.bytes_serialized, r.bulk_bytes),
+                ManagerReport::Hpc(_) => unreachable!("kubernetes resource runs CaaS"),
+            }
+        };
+        let serial = run_with(1);
+        assert!(serial.1 > serial.0);
+        assert_eq!(serial, run_with(8));
     }
 
     #[test]

@@ -28,7 +28,11 @@ fn app() -> App {
                 .opt("nodes", "1", "nodes per cluster / pilot")
                 .opt("sleep", "0", "per-task sleep seconds (0 = noop)")
                 .opt("seed", "42", "simulation seed")
-                .opt("report", "-", "write a JSON run report (metrics + trace) to this path ('-' = off)")
+                .opt(
+                    "report",
+                    "-",
+                    "write a JSON run report (metrics + trace) to this path ('-' = off)",
+                )
                 .flag("scpp", "single-container-per-pod (default MCPP)")
                 .flag("disk", "build pod manifests on disk (paper's measured mode)"),
         )

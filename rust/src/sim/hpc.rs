@@ -288,7 +288,8 @@ mod tests {
     fn oversized_task_clamps_to_pilot_width() {
         // A 256-core task on a 128-core pilot runs clamped instead of
         // deadlocking the FIFO head.
-        let r = run_tasks(vec![HpcTaskSpec { task_id: 0, cores: 256, work_s: 10.0, sleep_s: 0.0 }], 1, 9);
+        let spec = HpcTaskSpec { task_id: 0, cores: 256, work_s: 10.0, sleep_s: 0.0 };
+        let r = run_tasks(vec![spec], 1, 9);
         assert_eq!(r.tasks.len(), 1);
     }
 
@@ -306,7 +307,8 @@ mod tests {
     fn bare_metal_speed_beats_cloud_reference() {
         // 110 s of AWS-reference work on one core should take ~10 s on
         // Bridges2 (cpu_speed 11).
-        let r = run_tasks(vec![HpcTaskSpec { task_id: 0, cores: 1, work_s: 110.0, sleep_s: 0.0 }], 1, 5);
+        let spec = HpcTaskSpec { task_id: 0, cores: 1, work_s: 110.0, sleep_s: 0.0 };
+        let r = run_tasks(vec![spec], 1, 5);
         let t = &r.tasks[0];
         assert!(((t.finished_s - t.launched_s) - 10.0).abs() < 1e-6);
     }

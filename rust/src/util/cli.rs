@@ -58,7 +58,8 @@ impl Command {
     }
 
     fn usage(&self, program: &str) -> String {
-        let mut s = format!("{} — {}\n\nUSAGE:\n  {program} {}", self.name, self.about, self.name);
+        let mut s =
+            format!("{} — {}\n\nUSAGE:\n  {program} {}", self.name, self.about, self.name);
         for (p, _) in &self.positionals {
             s.push_str(&format!(" <{p}>"));
         }

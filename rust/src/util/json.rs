@@ -247,6 +247,24 @@ pub fn push_u64_padded(out: &mut String, mut v: u64, width: usize) {
     out.push_str(std::str::from_utf8(&digits[i..]).unwrap());
 }
 
+/// Copy `src` into the front of `dst`, returning the byte count written.
+///
+/// The bulk-framing path (`broker::data::frame_bulk`) sizes its output
+/// buffer exactly from the shard span tables, then writes each shard into
+/// its own disjoint window of that buffer — one bulk copy per shard
+/// instead of the old per-manifest `push_str` re-copy (§Perf). Panics if
+/// `dst` is shorter than `src`; callers compute the frame size first.
+pub fn write_str_into(dst: &mut [u8], src: &str) -> usize {
+    write_bytes_into(dst, src.as_bytes())
+}
+
+/// Byte-slice twin of [`write_str_into`], for callers assembling framed
+/// payloads from raw (already-validated) JSON fragments.
+pub fn write_bytes_into(dst: &mut [u8], src: &[u8]) -> usize {
+    dst[..src.len()].copy_from_slice(src);
+    src.len()
+}
+
 /// Append `s` as a JSON string literal (quoted + escaped). This is the
 /// single escaping implementation shared by the tree serializer and the
 /// partitioner's direct-write manifest path — keeping the two
@@ -658,6 +676,24 @@ mod tests {
             push_json_str(&mut direct, s);
             assert_eq!(direct, Json::Str(s.to_string()).to_string_compact());
         }
+    }
+
+    #[test]
+    fn write_into_slice_helpers() {
+        let mut buf = vec![0u8; 16];
+        let n = write_str_into(&mut buf, "hello");
+        assert_eq!(n, 5);
+        let m = write_bytes_into(&mut buf[n..], b", world");
+        assert_eq!(&buf[..n + m], b"hello, world");
+        // Zero-length writes are fine anywhere, including at the very end.
+        assert_eq!(write_str_into(&mut buf[16..], ""), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn write_into_slice_rejects_short_destination() {
+        let mut buf = vec![0u8; 2];
+        write_str_into(&mut buf, "too long");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::api::resource::{ResourceRequest, ServiceKind};
 use crate::api::task::{TaskDescription, TaskId};
 use crate::api::ProviderConfig;
 use crate::broker::caas::CaasManager;
+use crate::broker::data::SerializeOptions;
 use crate::broker::hpc::HpcManager;
 use crate::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
 use crate::broker::service_proxy::BrokerError;
@@ -45,6 +46,9 @@ pub struct WorkflowEngine {
     pub resource: ResourceRequest,
     pub partition_model: PartitionModel,
     pub build_mode: PodBuildMode,
+    /// Serialize-phase fan-out for each wave's manager; defaults to
+    /// available parallelism (same knob as `ServiceProxy::serialize`).
+    pub serialize: SerializeOptions,
     pub seed: u64,
 }
 
@@ -55,6 +59,7 @@ impl WorkflowEngine {
             resource,
             partition_model: PartitionModel::Scpp,
             build_mode: PodBuildMode::Memory,
+            serialize: SerializeOptions::default(),
             seed: 0xFAC7,
         }
     }
@@ -96,7 +101,9 @@ impl WorkflowEngine {
             let seed = self.seed ^ (wave_idx as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
             match self.resource.service {
                 ServiceKind::Caas => {
-                    let partitioner = Partitioner::new(self.partition_model, self.build_mode.clone());
+                    let partitioner =
+                        Partitioner::new(self.partition_model, self.build_mode.clone())
+                            .with_serialize(self.serialize);
                     let mgr = CaasManager::new(
                         self.config.clone(),
                         self.resource.clone(),
@@ -118,6 +125,7 @@ impl WorkflowEngine {
                 }
                 ServiceKind::Batch => {
                     let mgr = HpcManager::new(self.config.clone(), self.resource.clone(), seed)
+                        .map(|m| m.with_serialize(self.serialize))
                         .map_err(|e| BrokerError::Manager {
                             provider: self.config.id,
                             message: e.to_string(),

@@ -1,0 +1,139 @@
+//! ISSUE 3 acceptance: the framed bulk payload is **byte-identical** for
+//! thread counts {1, 2, 8} across all three managers (CaaS, FaaS, HPC)
+//! at batch sizes {0, 1, 4096} — including the empty-batch and
+//! single-shard edge cases. The serial `threads == 1` path is the
+//! reference; the parallel paths must reproduce its bytes exactly.
+
+use hydra::api::task::{Payload, TaskDescription, TaskId};
+use hydra::broker::data::{frame_bulk, SerializeOptions};
+use hydra::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
+use hydra::broker::{faas, hpc};
+use hydra::sim::kubernetes::ClusterSpec;
+use hydra::util::json;
+
+const PARALLEL_THREADS: [usize; 2] = [2, 8];
+const COUNTS: [usize; 3] = [0, 1, 4096];
+
+/// Heterogeneous workload: varied cpu/mem, payloads, and names that need
+/// JSON escaping, so equivalence covers the full serializer surface.
+fn tasks(n: usize) -> Vec<(TaskId, TaskDescription)> {
+    (0..n)
+        .map(|i| {
+            let mut d = if i % 5 == 0 {
+                TaskDescription::executable(format!("exe \"{i}\"\n"), "/bin/step --x")
+            } else {
+                TaskDescription::container(format!("ctr-{i}"), "hydra/noop:latest")
+            };
+            d.cpus = 1 + (i as u32) % 3;
+            d.mem_mb = 128 + (i as u64 % 4) * 64;
+            d.payload = match i % 3 {
+                0 => Payload::Noop,
+                1 => Payload::Sleep(0.5 + i as f64 * 0.25),
+                _ => Payload::Work(1.75),
+            };
+            (TaskId(i as u64), d)
+        })
+        .collect()
+}
+
+fn caas_bulk(ts: &[(TaskId, TaskDescription)], model: PartitionModel, threads: usize) -> Vec<u8> {
+    let opts = SerializeOptions::with_threads(threads);
+    let p = Partitioner::new(model, PodBuildMode::Memory).with_serialize(opts);
+    let cluster = ClusterSpec::uniform(4, 16);
+    let pods = p.partition(ts, &cluster, 0).expect("workload fits");
+    let w = p.build_manifests(pods, ts).expect("memory mode");
+    assert_eq!(w.framed_len(), frame_bulk(&w.shards, opts).len());
+    w.frame_bulk(opts)
+}
+
+fn faas_bulk(ts: &[(TaskId, TaskDescription)], threads: usize) -> Vec<u8> {
+    let opts = SerializeOptions::with_threads(threads);
+    frame_bulk(&faas::bulk_invoke_document(ts, opts), opts)
+}
+
+fn hpc_bulk(ts: &[(TaskId, TaskDescription)], threads: usize) -> Vec<u8> {
+    let opts = SerializeOptions::with_threads(threads);
+    let specs = hpc::pilot_specs(ts);
+    frame_bulk(&hpc::bulk_task_document(ts, &specs, opts), opts)
+}
+
+#[test]
+fn caas_bulk_bytes_identical_across_threads() {
+    for model in [PartitionModel::Scpp, PartitionModel::Mcpp { max_cpp: 16 }] {
+        for &n in &COUNTS {
+            let ts = tasks(n);
+            let serial = caas_bulk(&ts, model, 1);
+            assert_eq!(serial.first(), Some(&b'['), "n={n}");
+            assert_eq!(serial.last(), Some(&b']'), "n={n}");
+            for &t in &PARALLEL_THREADS {
+                assert_eq!(caas_bulk(&ts, model, t), serial, "model={model:?} n={n} threads={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn faas_bulk_bytes_identical_across_threads() {
+    for &n in &COUNTS {
+        let ts = tasks(n);
+        let serial = faas_bulk(&ts, 1);
+        for &t in &PARALLEL_THREADS {
+            assert_eq!(faas_bulk(&ts, t), serial, "n={n} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn hpc_bulk_bytes_identical_across_threads() {
+    for &n in &COUNTS {
+        let ts = tasks(n);
+        let serial = hpc_bulk(&ts, 1);
+        for &t in &PARALLEL_THREADS {
+            assert_eq!(hpc_bulk(&ts, t), serial, "n={n} threads={t}");
+        }
+    }
+}
+
+#[test]
+fn empty_batch_frames_as_empty_array_everywhere() {
+    let ts = tasks(0);
+    for bulk in [
+        caas_bulk(&ts, PartitionModel::Scpp, 8),
+        faas_bulk(&ts, 8),
+        hpc_bulk(&ts, 8),
+    ] {
+        assert_eq!(bulk, b"[]");
+    }
+}
+
+#[test]
+fn single_item_batch_stays_on_one_shard() {
+    // 1 item, 8 threads: the shard floor keeps this serial — the
+    // single-shard edge case must still frame as `[manifest]`.
+    let ts = tasks(1);
+    let opts = SerializeOptions::with_threads(8);
+    assert_eq!(opts.shards_for(1), 1);
+    let bulk = caas_bulk(&ts, PartitionModel::Scpp, 8);
+    assert_eq!(bulk, caas_bulk(&ts, PartitionModel::Scpp, 1));
+    let text = std::str::from_utf8(&bulk).unwrap();
+    let doc = json::parse(text).expect("framed payload is valid JSON");
+    assert_eq!(doc.as_arr().unwrap().len(), 1);
+}
+
+#[test]
+fn framed_payload_is_valid_json_with_one_entry_per_item() {
+    let ts = tasks(128);
+    // CaaS SCPP: one manifest per task.
+    let caas = caas_bulk(&ts, PartitionModel::Scpp, 8);
+    let doc = json::parse(std::str::from_utf8(&caas).unwrap()).unwrap();
+    assert_eq!(doc.as_arr().unwrap().len(), 128);
+    // FaaS: one invocation per task.
+    let faas_doc = json::parse(std::str::from_utf8(&faas_bulk(&ts, 8)).unwrap()).unwrap();
+    assert_eq!(faas_doc.as_arr().unwrap().len(), 128);
+    // HPC: one task dict per task, carrying the pilot spec fields.
+    let hpc_doc = json::parse(std::str::from_utf8(&hpc_bulk(&ts, 8)).unwrap()).unwrap();
+    let arr = hpc_doc.as_arr().unwrap();
+    assert_eq!(arr.len(), 128);
+    assert!(arr[0].get("uid").is_some());
+    assert!(arr[0].get("executable").is_some());
+}
