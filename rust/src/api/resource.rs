@@ -8,6 +8,11 @@ use crate::sim::kubernetes::ClusterSpec;
 use crate::sim::provider::{PlatformKind, PlatformProfile, ProviderId};
 
 /// The service level the resources are acquired through.
+///
+/// `#[non_exhaustive]`: the manager layer is an open interface (see
+/// `broker::manager`) — the next service kind lands as a new variant plus
+/// one `ManagerFactory::create` arm, without breaking downstream code.
+#[non_exhaustive]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ServiceKind {
     /// Container-as-a-Service: a (multi-node) Kubernetes cluster
@@ -15,6 +20,10 @@ pub enum ServiceKind {
     Caas,
     /// HPC batch system driven through a pilot (RADICAL-Pilot connector).
     Batch,
+    /// Function-as-a-Service: a Lambda/Cloud-Functions-style service with
+    /// an account-level concurrency limit (the paper's §3.1 extensibility
+    /// example, wired end to end).
+    Faas,
 }
 
 /// A resource request against one provider.
@@ -28,6 +37,8 @@ pub struct ResourceRequest {
     pub vcpus_per_node: u32,
     pub gpus_per_node: u32,
     pub mem_mb_per_node: u64,
+    /// Maximum concurrent function executions (FaaS only; 0 elsewhere).
+    pub concurrency: u32,
 }
 
 impl ResourceRequest {
@@ -40,6 +51,7 @@ impl ResourceRequest {
             vcpus_per_node,
             gpus_per_node: 0,
             mem_mb_per_node: 4096 * vcpus_per_node as u64,
+            concurrency: 0,
         }
     }
 
@@ -53,6 +65,24 @@ impl ResourceRequest {
             vcpus_per_node: profile.cores_per_node,
             gpus_per_node: 0,
             mem_mb_per_node: 2048 * profile.cores_per_node as u64,
+            concurrency: 0,
+        }
+    }
+
+    /// A function service on a cloud provider: the service manages the
+    /// instances, the user picks only the concurrency limit (account-level
+    /// concurrent executions).
+    pub fn faas(provider: ProviderId, concurrency: u32) -> ResourceRequest {
+        ResourceRequest {
+            provider,
+            service: ServiceKind::Faas,
+            // The service owns the nodes; one logical "node" keeps the
+            // generic `nodes >= 1` invariant satisfied.
+            nodes: 1,
+            vcpus_per_node: 1,
+            gpus_per_node: 0,
+            mem_mb_per_node: 2048,
+            concurrency,
         }
     }
 
@@ -84,6 +114,9 @@ impl ResourceRequest {
             (ServiceKind::Batch, PlatformKind::Cloud) => {
                 return Err(format!("{}: batch service is not offered on clouds", self.provider));
             }
+            (ServiceKind::Faas, PlatformKind::Hpc) => {
+                return Err(format!("{}: FaaS service is not offered on HPC", self.provider));
+            }
             _ => {}
         }
         if self.service == ServiceKind::Caas {
@@ -96,6 +129,9 @@ impl ResourceRequest {
                     self.provider, profile.cores_per_node, self.vcpus_per_node
                 ));
             }
+        }
+        if self.service == ServiceKind::Faas && self.concurrency == 0 {
+            return Err(format!("{}: FaaS concurrency must be >= 1", self.provider));
         }
         Ok(())
     }
@@ -131,6 +167,16 @@ mod tests {
         assert_eq!(r.vcpus_per_node, 128);
         assert_eq!(r.total_vcpus(), 256);
         assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn faas_request_validates_clouds_and_concurrency() {
+        let r = ResourceRequest::faas(ProviderId::Aws, 64);
+        assert_eq!(r.service, ServiceKind::Faas);
+        assert_eq!(r.concurrency, 64);
+        assert!(r.validate().is_ok());
+        assert!(ResourceRequest::faas(ProviderId::Bridges2, 64).validate().is_err());
+        assert!(ResourceRequest::faas(ProviderId::Aws, 0).validate().is_err());
     }
 
     #[test]

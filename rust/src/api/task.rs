@@ -19,13 +19,21 @@ impl fmt::Display for TaskId {
 }
 
 /// How the task is realized on the platform (paper: "executables or
-/// containers", chosen by brokering policy).
+/// containers", chosen by brokering policy — plus serverless functions
+/// through the open manager interface).
+///
+/// `#[non_exhaustive]`: task kinds grow with the manager layer (see
+/// `broker::manager`); downstream matches need a wildcard arm.
+#[non_exhaustive]
 #[derive(Debug, Clone, PartialEq)]
 pub enum TaskKind {
     /// Plain executable (HPC path; Experiment 3B's `sleep`, FACTS steps).
     Executable { command: String },
     /// Container image (CaaS path; Experiments 1–3 `noop` containers).
     Container { image: String },
+    /// Serverless function (FaaS path): a named handler invoked once per
+    /// task, e.g. `pkg.module:handler`.
+    Function { handler: String },
 }
 
 impl TaskKind {
@@ -98,6 +106,20 @@ impl TaskDescription {
         }
     }
 
+    /// A serverless function task: single vCPU-equivalent slice, small
+    /// memory footprint (the FaaS service owns the sizing).
+    pub fn function(name: impl Into<String>, handler: impl Into<String>) -> TaskDescription {
+        TaskDescription {
+            name: name.into(),
+            kind: TaskKind::Function { handler: handler.into() },
+            cpus: 1,
+            gpus: 0,
+            mem_mb: 128,
+            payload: Payload::Noop,
+            provider: None,
+        }
+    }
+
     pub fn with_cpus(mut self, cpus: u32) -> Self {
         self.cpus = cpus;
         self
@@ -141,6 +163,9 @@ impl TaskDescription {
             }
             TaskKind::Executable { command } if command.is_empty() => {
                 Err(format!("task '{}': executable command must not be empty", self.name))
+            }
+            TaskKind::Function { handler } if handler.is_empty() => {
+                Err(format!("task '{}': function handler must not be empty", self.name))
             }
             _ => Ok(()),
         }
@@ -237,10 +262,20 @@ mod tests {
     }
 
     #[test]
+    fn function_builder_and_kind() {
+        let t = TaskDescription::function("warm", "pkg.module:handler");
+        assert!(matches!(t.kind, TaskKind::Function { .. }));
+        assert!(!t.kind.is_container());
+        assert_eq!(t.cpus, 1);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
     fn validation_rejects_degenerate_tasks() {
         assert!(TaskDescription::container("", "img").validate().is_err());
         assert!(TaskDescription::container("t", "").validate().is_err());
         assert!(TaskDescription::executable("t", "").validate().is_err());
+        assert!(TaskDescription::function("t", "").validate().is_err());
         assert!(TaskDescription::container("t", "img").with_cpus(0).validate().is_err());
         assert!(TaskDescription::container("t", "img").with_mem_mb(0).validate().is_err());
     }

@@ -10,7 +10,9 @@
 //! Reported quantities:
 //! * **OVH** (ms), **SER** (ms, the serialize phase alone) and **TH**
 //!   (task/s) — broker-side cost/throughput for the 4K-task points (the
-//!   paper's Fig 2/3 metrics).
+//!   paper's Fig 2/3 metrics). `exp_faas_4k` brokers a mixed
+//!   CaaS+HPC+FaaS workload under `ByTaskKind` — all three service
+//!   managers concurrently through the `ManagerFactory` (ISSUE 4).
 //! * **serialize microbench** — threads=1 vs threads=N manifest
 //!   serialization + bulk framing on the 4K-task SCPP point (ISSUE 3
 //!   tentpole), with a byte-identity cross-check on the framed payload.
@@ -53,23 +55,22 @@ fn noop_containers(n: usize) -> Vec<TaskDescription> {
         .collect()
 }
 
-fn run_point(name: &'static str, providers: &[ProviderId], model: PartitionModel) -> Point {
+/// Per-seed measurement shared by every broker point: build, submit,
+/// fold the aggregate into the point summaries.
+fn measure_point(
+    name: &'static str,
+    build: impl Fn(u64) -> Hydra,
+    tasks: impl Fn() -> Vec<TaskDescription>,
+    policy: &BrokerPolicy,
+) -> Point {
     let mut ovh = Vec::new();
     let mut ser = Vec::new();
     let mut th = Vec::new();
     let mut tpt = Vec::new();
     let mut pods = 0usize;
     for &seed in &SEEDS {
-        let mut b = Hydra::builder().partition_model(model).seed(seed);
-        for &p in providers {
-            b = b
-                .simulated_provider(p)
-                .resource(ResourceRequest::kubernetes(p, 1, 16));
-        }
-        let hydra = b.build().expect("simulated providers must build");
-        let run = hydra
-            .submit(noop_containers(POINT_TASKS), &BrokerPolicy::RoundRobin)
-            .expect("noop workload must broker");
+        let hydra = build(seed);
+        let run = hydra.submit(tasks(), policy).expect("bench workload must broker");
         ovh.push(run.aggregate.ovh_s * 1e3);
         let serialize_window = run
             .reports
@@ -89,6 +90,55 @@ fn run_point(name: &'static str, providers: &[ProviderId], model: PartitionModel
         tpt_s: Summary::of(&tpt),
         pods,
     }
+}
+
+fn run_point(name: &'static str, providers: &[ProviderId], model: PartitionModel) -> Point {
+    measure_point(
+        name,
+        |seed| {
+            let mut b = Hydra::builder().partition_model(model).seed(seed);
+            for &p in providers {
+                b = b
+                    .simulated_provider(p)
+                    .resource(ResourceRequest::kubernetes(p, 1, 16));
+            }
+            b.build().expect("simulated providers must build")
+        },
+        || noop_containers(POINT_TASKS),
+        &BrokerPolicy::RoundRobin,
+    )
+}
+
+/// ISSUE 4 point: a mixed CaaS+HPC+FaaS workload — one provider per
+/// service kind, all three managers concurrently through the factory,
+/// tasks routed by kind.
+fn run_mixed_point(name: &'static str) -> Point {
+    measure_point(
+        name,
+        |seed| {
+            Hydra::builder()
+                .partition_model(PartitionModel::Mcpp { max_cpp: 16 })
+                .seed(seed)
+                .simulated_provider(ProviderId::Jetstream2)
+                .resource(ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 16))
+                .simulated_provider(ProviderId::Bridges2)
+                .resource(ResourceRequest::pilot(ProviderId::Bridges2, 1))
+                .simulated_provider(ProviderId::Aws)
+                .resource(ResourceRequest::faas(ProviderId::Aws, 64))
+                .build()
+                .expect("simulated providers must build")
+        },
+        || {
+            (0..POINT_TASKS)
+                .map(|i| match i % 3 {
+                    0 => TaskDescription::container(format!("con-{i}"), "hydra/noop:latest"),
+                    1 => TaskDescription::executable(format!("exe-{i}"), "noop"),
+                    _ => TaskDescription::function(format!("fn-{i}"), "hydra.noop:handler"),
+                })
+                .collect()
+        },
+        &BrokerPolicy::ByTaskKind,
+    )
 }
 
 /// ISSUE 3 tentpole row: threads=1 vs threads=N manifest serialization +
@@ -214,6 +264,7 @@ fn main() {
         run_point("exp1_mcpp_4k", &[ProviderId::Jetstream2], PartitionModel::Mcpp { max_cpp: 16 }),
         run_point("exp1_scpp_4k", &[ProviderId::Jetstream2], PartitionModel::Scpp),
         run_point("exp2_clouds_4k", &ProviderId::CLOUDS, PartitionModel::Mcpp { max_cpp: 16 }),
+        run_mixed_point("exp_faas_4k"),
     ];
     for p in &points {
         println!(

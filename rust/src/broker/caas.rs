@@ -12,68 +12,25 @@
 //! **real wall-clock time** and reported as OVH; everything the platform
 //! does happens in **virtual time** on the simulator and is reported as
 //! TPT/TTX.
+//!
+//! Implements the open manager interface (`broker::manager`): the broker
+//! builds this manager through `ManagerFactory` and consumes the unified
+//! `ManagerRun` report — the Kubernetes sim report and the cluster
+//! provision report ride in `RunDetail::Caas`.
 
 use crate::api::resource::ResourceRequest;
 use crate::api::task::{TaskDescription, TaskId, TaskState};
 use crate::api::ProviderConfig;
 use crate::broker::data::submit_bulk;
+use crate::broker::manager::{ManagerError, ManagerRun, RunDetail};
 use crate::broker::partitioner::{PartitionError, Partitioner, PodBuildMode, PreparedWorkload};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
-use crate::sim::kubernetes::{KubernetesSim, SimReport};
+use crate::sim::kubernetes::KubernetesSim;
 use crate::sim::vm::{provision_cluster, ProvisionReport};
 use crate::util::prng::Prng;
 use crate::util::Stopwatch;
 use std::borrow::Borrow;
-
-/// Errors surfaced by the CaaS path.
-#[derive(Debug)]
-pub enum CaasError {
-    InvalidTask(String),
-    InvalidResource(String),
-    Partition(PartitionError),
-    State(crate::broker::state::StateError),
-}
-
-impl std::fmt::Display for CaasError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            CaasError::InvalidTask(m) => write!(f, "invalid task: {m}"),
-            CaasError::InvalidResource(m) => write!(f, "invalid resource: {m}"),
-            CaasError::Partition(e) => write!(f, "partitioning failed: {e}"),
-            CaasError::State(e) => write!(f, "state error: {e}"),
-        }
-    }
-}
-
-impl std::error::Error for CaasError {}
-
-impl From<PartitionError> for CaasError {
-    fn from(e: PartitionError) -> Self {
-        CaasError::Partition(e)
-    }
-}
-
-impl From<crate::broker::state::StateError> for CaasError {
-    fn from(e: crate::broker::state::StateError) -> Self {
-        CaasError::State(e)
-    }
-}
-
-/// Report of one CaaS workload execution.
-#[derive(Debug)]
-pub struct CaasRunReport {
-    pub metrics: RunMetrics,
-    pub sim: SimReport,
-    /// Cluster readiness (virtual seconds before the workload could start);
-    /// reported separately from TPT, as in the paper.
-    pub provision: ProvisionReport,
-    pub bytes_serialized: usize,
-    /// Bytes of the framed bulk submission accepted by the provider-API
-    /// sink: `bytes_serialized` + separators + brackets, asserted in
-    /// `execute` (the submit phase must actually ship the payload).
-    pub bulk_bytes: usize,
-}
 
 /// One CaaS manager instance per cloud provider connection.
 pub struct CaasManager {
@@ -95,18 +52,8 @@ impl CaasManager {
         resource: ResourceRequest,
         partitioner: Partitioner,
         seed: u64,
-    ) -> Result<CaasManager, CaasError> {
-        config
-            .credentials
-            .validate()
-            .map_err(CaasError::InvalidResource)?;
-        resource.validate().map_err(CaasError::InvalidResource)?;
-        if resource.provider != config.id {
-            return Err(CaasError::InvalidResource(format!(
-                "resource targets {} but manager is connected to {}",
-                resource.provider, config.id
-            )));
-        }
+    ) -> Result<CaasManager, ManagerError> {
+        crate::broker::manager::validate_binding(&config, &resource)?;
         Ok(CaasManager {
             config,
             resource,
@@ -139,12 +86,12 @@ impl CaasManager {
         &self,
         tasks: &[(TaskId, T)],
         registry: &TaskRegistry,
-    ) -> Result<CaasRunReport, CaasError> {
+    ) -> Result<ManagerRun, ManagerError> {
         let ids: Vec<TaskId> = tasks.iter().map(|(id, _)| *id).collect();
 
         // -- validate (gate to Validated) --------------------------------
         for (_, t) in tasks {
-            t.borrow().validate().map_err(CaasError::InvalidTask)?;
+            t.borrow().validate().map_err(ManagerError::InvalidTask)?;
         }
         registry.transition_all(&ids, TaskState::Validated)?;
 
@@ -185,7 +132,7 @@ impl CaasManager {
                         bulk.push(b',');
                     }
                     let content = std::fs::read(path)
-                        .map_err(|e| CaasError::Partition(PartitionError::Io(e.to_string())))?;
+                        .map_err(|e| ManagerError::Partition(PartitionError::Io(e.to_string())))?;
                     bulk.extend_from_slice(&content);
                 }
                 bulk.push(b']');
@@ -259,12 +206,11 @@ impl CaasManager {
             tpt_s: report.makespan_s,
             ttx_s: report.makespan_s,
         };
-        Ok(CaasRunReport {
+        Ok(ManagerRun {
             metrics,
-            sim: report,
-            provision: self.provision(),
             bytes_serialized,
             bulk_bytes: bulk_len,
+            detail: RunDetail::Caas { sim: report, provision: self.provision() },
         })
     }
 }
@@ -372,11 +318,12 @@ mod tests {
         let tasks = workload(&reg, 200);
         let m = manager(PartitionModel::Scpp).with_failure_handling(0.2, false);
         let r = m.execute(&tasks, &reg).unwrap();
-        assert!(r.sim.failed_tasks > 10, "expected ~40 failures, got {}", r.sim.failed_tasks);
+        let sim = r.detail.caas_sim().unwrap();
+        assert!(sim.failed_tasks > 10, "expected ~40 failures, got {}", sim.failed_tasks);
         let counts = reg.counts();
-        assert_eq!(counts.get(&TaskState::Failed), Some(&r.sim.failed_tasks));
+        assert_eq!(counts.get(&TaskState::Failed), Some(&sim.failed_tasks));
         assert_eq!(
-            counts.get(&TaskState::Done).copied().unwrap_or(0) + r.sim.failed_tasks,
+            counts.get(&TaskState::Done).copied().unwrap_or(0) + sim.failed_tasks,
             200
         );
         assert!(reg.all_final());
@@ -399,7 +346,7 @@ mod tests {
         let reg = TaskRegistry::new();
         let tasks = workload(&reg, 100);
         let r = manager(PartitionModel::Scpp).execute(&tasks, &reg).unwrap();
-        assert_eq!(r.sim.failed_tasks, 0);
+        assert_eq!(r.detail.caas_sim().unwrap().failed_tasks, 0);
         assert_eq!(reg.counts().get(&TaskState::Done), Some(&100));
     }
 

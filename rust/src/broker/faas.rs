@@ -2,73 +2,52 @@
 //!
 //! §3.1: the Service Proxy "exposes a private interface to add new
 //! managers like, for example, a Function as a Service manager". This
-//! manager implements that interface shape — validate → translate →
-//! bulk-submit → trace — against the FaaS simulator, demonstrating that a
-//! new service type integrates without touching the existing managers.
+//! manager implements that interface — now the public `ServiceManager`
+//! trait (`broker::manager`) — validate → translate → bulk-submit →
+//! trace, against the FaaS simulator. It is built from a
+//! `ResourceRequest::faas` acquisition by `ManagerFactory` like every
+//! other manager, and reports the unified `ManagerRun` with the FaaS sim
+//! report in `RunDetail::Faas`.
 
-use crate::api::task::{Payload, TaskDescription, TaskId, TaskState};
+use crate::api::resource::ResourceRequest;
+use crate::api::task::{Payload, TaskDescription, TaskId, TaskKind, TaskState};
 use crate::api::ProviderConfig;
 use crate::broker::data::{
-    frame_bulk, serialize_sharded, submit_bulk, ManifestShard, SerializeOptions,
+    expected_framed_len, frame_bulk, serialize_sharded, submit_bulk, ManifestShard,
+    SerializeOptions,
 };
+use crate::broker::manager::{ManagerError, ManagerRun, RunDetail};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
-use crate::sim::faas::{FaasReport, FaasSim, FaasSpec, Invocation};
-use crate::sim::provider::PlatformKind;
+use crate::sim::faas::{FaasSim, FaasSpec, Invocation};
 use crate::util::json::Json;
 use crate::util::Stopwatch;
 use std::borrow::Borrow;
 
-#[derive(Debug)]
-pub enum FaasError {
-    InvalidTask(String),
-    InvalidResource(String),
-    State(crate::broker::state::StateError),
-}
-
-impl std::fmt::Display for FaasError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            FaasError::InvalidTask(m) => write!(f, "invalid task: {m}"),
-            FaasError::InvalidResource(m) => write!(f, "invalid resource: {m}"),
-            FaasError::State(e) => write!(f, "state error: {e}"),
-        }
-    }
-}
-
-impl std::error::Error for FaasError {}
-
-impl From<crate::broker::state::StateError> for FaasError {
-    fn from(e: crate::broker::state::StateError) -> Self {
-        FaasError::State(e)
-    }
-}
-
-#[derive(Debug)]
-pub struct FaasRunReport {
-    pub metrics: RunMetrics,
-    pub sim: FaasReport,
-    pub bytes_serialized: usize,
-}
-
 /// Serialize the bulk invoke request as contiguous task shards on scoped
 /// threads (§Perf: the serialize phase is embarrassingly parallel across
 /// invocations; `opts.threads == 1` is the serial reference path and the
-/// framed bytes are identical for every thread count).
+/// framed bytes are identical for every thread count). Function tasks
+/// carry their handler; other kinds invoke by task name alone.
 pub fn bulk_invoke_document<T: Borrow<TaskDescription> + Sync>(
     tasks: &[(TaskId, T)],
     opts: SerializeOptions,
 ) -> Vec<ManifestShard> {
     serialize_sharded(tasks, opts, 96, |out, (id, t), _| {
-        Json::obj()
-            .set("function", t.borrow().name.as_str())
-            .set("qualifier", "$LATEST")
+        let t = t.borrow();
+        let mut doc = Json::obj().set("function", t.name.as_str());
+        if let TaskKind::Function { handler } = &t.kind {
+            doc = doc.set("handler", handler.as_str());
+        }
+        doc.set("qualifier", "$LATEST")
             .set("payload", Json::obj().set("hydra_task_id", id.0))
             .write_into(out)
     })
 }
 
-/// FaaS manager bound to one cloud provider connection.
+/// FaaS manager bound to one cloud provider connection. The acquired
+/// resource is consumed at construction (its `concurrency` becomes the
+/// service spec); only the derived [`FaasSpec`] is kept.
 pub struct FaasManager {
     pub config: ProviderConfig,
     pub spec: FaasSpec,
@@ -80,19 +59,11 @@ pub struct FaasManager {
 impl FaasManager {
     pub fn new(
         config: ProviderConfig,
-        spec: FaasSpec,
+        resource: ResourceRequest,
         seed: u64,
-    ) -> Result<FaasManager, FaasError> {
-        config.credentials.validate().map_err(FaasError::InvalidResource)?;
-        if config.profile().kind != PlatformKind::Cloud {
-            return Err(FaasError::InvalidResource(format!(
-                "{}: FaaS is a cloud service",
-                config.id
-            )));
-        }
-        if spec.concurrency == 0 {
-            return Err(FaasError::InvalidResource("concurrency must be >= 1".into()));
-        }
+    ) -> Result<FaasManager, ManagerError> {
+        crate::broker::manager::validate_binding(&config, &resource)?;
+        let spec = FaasSpec { concurrency: resource.concurrency, ..FaasSpec::default() };
         Ok(FaasManager { config, spec, seed, serialize: SerializeOptions::default() })
     }
 
@@ -111,13 +82,13 @@ impl FaasManager {
         &self,
         tasks: &[(TaskId, T)],
         registry: &TaskRegistry,
-    ) -> Result<FaasRunReport, FaasError> {
+    ) -> Result<ManagerRun, ManagerError> {
         let ids: Vec<TaskId> = tasks.iter().map(|(id, _)| *id).collect();
         for (_, t) in tasks {
             let t = t.borrow();
-            t.validate().map_err(FaasError::InvalidTask)?;
+            t.validate().map_err(ManagerError::InvalidTask)?;
             if t.gpus > 0 {
-                return Err(FaasError::InvalidTask(format!(
+                return Err(ManagerError::InvalidTask(format!(
                     "task '{}': functions cannot request GPUs",
                     t.name
                 )));
@@ -146,15 +117,16 @@ impl FaasManager {
         let sw = Stopwatch::start();
         let shards = bulk_invoke_document(tasks, self.serialize);
         let serialize_s = sw.elapsed_secs();
+        let bytes_serialized: usize = shards.iter().map(ManifestShard::item_bytes).sum();
 
         // -- OVH: frame + submit -------------------------------------------
         // The bulk payload is framed directly from the shard buffers (one
         // copy per shard) and shipped through the shared provider-API sink.
         let sw = Stopwatch::start();
-        let expected_bulk = crate::broker::data::expected_framed_len(&shards);
+        let expected_bulk = expected_framed_len(&shards);
         let bulk = frame_bulk(&shards, self.serialize);
-        let bytes_serialized = submit_bulk(&bulk);
-        assert_eq!(bytes_serialized, expected_bulk, "bulk framing lost bytes");
+        let bulk_bytes = submit_bulk(&bulk);
+        assert_eq!(bulk_bytes, expected_bulk, "bulk framing lost bytes");
         let mut sim = FaasSim::new(self.config.profile(), self.spec, self.seed);
         sim.submit(invocations);
         let submit_s = sw.elapsed_secs();
@@ -182,7 +154,12 @@ impl FaasManager {
             tpt_s: report.makespan_s,
             ttx_s: report.makespan_s,
         };
-        Ok(FaasRunReport { metrics, sim: report, bytes_serialized })
+        Ok(ManagerRun {
+            metrics,
+            bytes_serialized,
+            bulk_bytes,
+            detail: RunDetail::Faas { sim: report },
+        })
     }
 }
 
@@ -192,14 +169,18 @@ mod tests {
     use crate::sim::provider::ProviderId;
 
     fn manager() -> FaasManager {
-        FaasManager::new(ProviderConfig::simulated(ProviderId::Aws), FaasSpec::default(), 3)
-            .unwrap()
+        FaasManager::new(
+            ProviderConfig::simulated(ProviderId::Aws),
+            ResourceRequest::faas(ProviderId::Aws, 64),
+            3,
+        )
+        .unwrap()
     }
 
     fn workload(reg: &TaskRegistry, n: usize) -> Vec<(TaskId, TaskDescription)> {
         (0..n)
             .map(|i| {
-                let d = TaskDescription::container(format!("fn-{i}"), "image")
+                let d = TaskDescription::function(format!("fn-{i}"), "pkg.module:handler")
                     .with_payload(Payload::Work(1.0));
                 (reg.register(d.clone()), d)
             })
@@ -212,8 +193,9 @@ mod tests {
         let tasks = workload(&reg, 150);
         let r = manager().execute(&tasks, &reg).unwrap();
         assert_eq!(r.metrics.tasks, 150);
-        assert!(r.sim.cold_starts >= 1);
+        assert!(r.detail.faas_sim().unwrap().cold_starts >= 1);
         assert!(r.metrics.tpt_s > 0.0);
+        assert!(r.bulk_bytes > r.bytes_serialized);
         assert!(reg.all_final());
     }
 
@@ -221,7 +203,7 @@ mod tests {
     fn rejects_hpc_provider_and_gpu_tasks() {
         assert!(FaasManager::new(
             ProviderConfig::simulated(ProviderId::Bridges2),
-            FaasSpec::default(),
+            ResourceRequest::faas(ProviderId::Bridges2, 64),
             0
         )
         .is_err());
@@ -239,6 +221,7 @@ mod tests {
         let serial = frame_bulk(&bulk_invoke_document(&tasks, serial_opts), serial_opts);
         assert_eq!(serial[0], b'[');
         assert!(serial.windows(13).any(|w| w == b"hydra_task_id".as_slice()));
+        assert!(serial.windows(7).any(|w| w == b"handler".as_slice()));
         for threads in [2, 8] {
             let opts = SerializeOptions::with_threads(threads);
             let bulk = frame_bulk(&bulk_invoke_document(&tasks, opts), opts);
@@ -248,8 +231,22 @@ mod tests {
 
     #[test]
     fn zero_concurrency_rejected() {
-        let spec = FaasSpec { concurrency: 0, ..FaasSpec::default() };
-        assert!(FaasManager::new(ProviderConfig::simulated(ProviderId::Aws), spec, 0).is_err());
+        assert!(FaasManager::new(
+            ProviderConfig::simulated(ProviderId::Aws),
+            ResourceRequest::faas(ProviderId::Aws, 0),
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mismatched_provider_rejected() {
+        assert!(FaasManager::new(
+            ProviderConfig::simulated(ProviderId::Aws),
+            ResourceRequest::faas(ProviderId::Azure, 64),
+            0
+        )
+        .is_err());
     }
 
     #[test]
@@ -270,7 +267,7 @@ mod tests {
             .collect();
         let caas = crate::broker::caas::CaasManager::new(
             ProviderConfig::simulated(ProviderId::Aws),
-            crate::api::ResourceRequest::kubernetes(ProviderId::Aws, 1, 16),
+            ResourceRequest::kubernetes(ProviderId::Aws, 1, 16),
             crate::broker::partitioner::Partitioner::new(
                 crate::broker::partitioner::PartitionModel::Scpp,
                 crate::broker::partitioner::PodBuildMode::Memory,

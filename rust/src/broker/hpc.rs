@@ -6,6 +6,10 @@
 //! connector here targets the pilot simulator (`sim::hpc`); its request
 //! format is a bulk JSON document of task descriptions, serialized by the
 //! broker (a real, measured OVH cost, symmetric with the CaaS manifests).
+//!
+//! Implements the open manager interface (`broker::manager`): built
+//! through `ManagerFactory`, reporting the unified `ManagerRun` with the
+//! pilot sim report in `RunDetail::Hpc`.
 
 use crate::api::resource::ResourceRequest;
 use crate::api::task::{Payload, TaskDescription, TaskId, TaskState};
@@ -14,44 +18,13 @@ use crate::broker::data::{
     expected_framed_len, frame_bulk, serialize_sharded, submit_bulk, ManifestShard,
     SerializeOptions,
 };
+use crate::broker::manager::{ManagerError, ManagerRun, RunDetail};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
-use crate::sim::hpc::{HpcReport, HpcSim, HpcTaskSpec, PilotSpec};
+use crate::sim::hpc::{HpcSim, HpcTaskSpec, PilotSpec};
 use crate::util::json::Json;
 use crate::util::Stopwatch;
 use std::borrow::Borrow;
-
-#[derive(Debug)]
-pub enum HpcError {
-    InvalidTask(String),
-    InvalidResource(String),
-    State(crate::broker::state::StateError),
-}
-
-impl std::fmt::Display for HpcError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            HpcError::InvalidTask(m) => write!(f, "invalid task: {m}"),
-            HpcError::InvalidResource(m) => write!(f, "invalid resource: {m}"),
-            HpcError::State(e) => write!(f, "state error: {e}"),
-        }
-    }
-}
-
-impl std::error::Error for HpcError {}
-
-impl From<crate::broker::state::StateError> for HpcError {
-    fn from(e: crate::broker::state::StateError) -> Self {
-        HpcError::State(e)
-    }
-}
-
-#[derive(Debug)]
-pub struct HpcRunReport {
-    pub metrics: RunMetrics,
-    pub sim: HpcReport,
-    pub bytes_serialized: usize,
-}
 
 /// Translate tasks into pilot task specs (the HPC path's "partition"
 /// phase: translation to connector task dicts).
@@ -104,15 +77,8 @@ impl HpcManager {
         config: ProviderConfig,
         resource: ResourceRequest,
         seed: u64,
-    ) -> Result<HpcManager, HpcError> {
-        config.credentials.validate().map_err(HpcError::InvalidResource)?;
-        resource.validate().map_err(HpcError::InvalidResource)?;
-        if resource.provider != config.id {
-            return Err(HpcError::InvalidResource(format!(
-                "resource targets {} but manager is connected to {}",
-                resource.provider, config.id
-            )));
-        }
+    ) -> Result<HpcManager, ManagerError> {
+        crate::broker::manager::validate_binding(&config, &resource)?;
         Ok(HpcManager {
             config,
             resource,
@@ -145,10 +111,10 @@ impl HpcManager {
         &self,
         tasks: &[(TaskId, T)],
         registry: &TaskRegistry,
-    ) -> Result<HpcRunReport, HpcError> {
+    ) -> Result<ManagerRun, ManagerError> {
         let ids: Vec<TaskId> = tasks.iter().map(|(id, _)| *id).collect();
         for (_, t) in tasks {
-            t.borrow().validate().map_err(HpcError::InvalidTask)?;
+            t.borrow().validate().map_err(ManagerError::InvalidTask)?;
         }
         registry.transition_all(&ids, TaskState::Validated)?;
 
@@ -170,11 +136,12 @@ impl HpcManager {
         // The bulk document is framed directly from the shard buffers
         // (one copy per shard) and shipped through the shared
         // provider-API sink before the pilot takes the specs.
+        let bytes_serialized: usize = shards.iter().map(ManifestShard::item_bytes).sum();
         let sw = Stopwatch::start();
         let expected_bulk = expected_framed_len(&shards);
         let bulk = frame_bulk(&shards, self.serialize);
-        let bytes_serialized = submit_bulk(&bulk);
-        assert_eq!(bytes_serialized, expected_bulk, "bulk framing lost bytes");
+        let bulk_bytes = submit_bulk(&bulk);
+        assert_eq!(bulk_bytes, expected_bulk, "bulk framing lost bytes");
         let mut sim = HpcSim::new(
             self.config.profile(),
             PilotSpec { nodes: self.resource.nodes },
@@ -234,7 +201,12 @@ impl HpcManager {
             tpt_s: report.makespan_s,
             ttx_s: report.makespan_s,
         };
-        Ok(HpcRunReport { metrics, sim: report, bytes_serialized })
+        Ok(ManagerRun {
+            metrics,
+            bytes_serialized,
+            bulk_bytes,
+            detail: RunDetail::Hpc { sim: report },
+        })
     }
 }
 
@@ -243,6 +215,8 @@ fn task_dict(id: TaskId, t: &TaskDescription, spec: &HpcTaskSpec) -> Json {
     let exe = match &t.kind {
         crate::api::task::TaskKind::Executable { command } => command.clone(),
         crate::api::task::TaskKind::Container { image } => format!("singularity run {image}"),
+        // A function routed to a pilot runs through a handler shim.
+        crate::api::task::TaskKind::Function { handler } => format!("faas-shim {handler}"),
     };
     Json::obj()
         .set("uid", format!("{id}"))
@@ -286,8 +260,9 @@ mod tests {
         let tasks = workload(&reg, 200, 0.0);
         let r = manager(1).execute(&tasks, &reg).unwrap();
         assert_eq!(r.metrics.tasks, 200);
-        assert!(r.metrics.tpt_s > r.sim.agent_ready_s);
+        assert!(r.metrics.tpt_s > r.detail.hpc_sim().unwrap().agent_ready_s);
         assert!(r.bytes_serialized > 200 * 50);
+        assert!(r.bulk_bytes > r.bytes_serialized, "framed envelope bytes missing");
         assert!(reg.all_final());
     }
 
@@ -296,7 +271,7 @@ mod tests {
         let reg = TaskRegistry::new();
         let tasks = workload(&reg, 1, 5.0);
         let r = manager(1).execute(&tasks, &reg).unwrap();
-        let t = &r.sim.tasks[0];
+        let t = &r.detail.hpc_sim().unwrap().tasks[0];
         assert!(((t.finished_s - t.launched_s) - 5.0).abs() < 1e-6);
     }
 

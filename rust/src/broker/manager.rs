@@ -1,0 +1,449 @@
+//! The open service-manager interface of the Service Proxy (paper §3.1).
+//!
+//! The paper's headline design claim is that the Service Proxy "exposes a
+//! private interface to add new managers like, for example, a Function as
+//! a Service manager". This module makes that interface a public Rust
+//! trait: every workload manager — CaaS, HPC batch, FaaS, and whatever
+//! comes next — implements [`ServiceManager`] and returns the same
+//! unified [`ManagerRun`] report, and [`ManagerFactory`] holds the one
+//! and only `ServiceKind` → manager dispatch in the codebase. Both the
+//! [`ServiceProxy`](crate::broker::service_proxy::ServiceProxy) and the
+//! [`WorkflowEngine`](crate::workflow::engine::WorkflowEngine) consume
+//! managers exclusively through this factory, so adding a manager means
+//! adding one `ServiceKind` variant, a [`RunDetail`]/[`ManagerReport`]
+//! variant for its report, one `impl ServiceManager`, and one factory
+//! arm — the proxy, the workflow engine, and every report consumer stay
+//! untouched.
+//!
+//! Report unification: the managers' previously divergent report structs
+//! collapse into `ManagerRun { metrics, bytes_serialized, bulk_bytes,
+//! detail }`, with the provider-specific simulator reports preserved
+//! inside [`RunDetail`]. [`ManagerReport`] wraps a run per service kind
+//! for ergonomic matching on the brokered-run surface
+//! ([`BrokerRun::reports`](crate::broker::service_proxy::BrokerRun)).
+
+use crate::api::resource::{ResourceRequest, ServiceKind};
+use crate::api::task::{TaskDescription, TaskId};
+use crate::api::ProviderConfig;
+use crate::broker::caas::CaasManager;
+use crate::broker::data::SerializeOptions;
+use crate::broker::faas::FaasManager;
+use crate::broker::hpc::HpcManager;
+use crate::broker::partitioner::{PartitionError, PartitionModel, Partitioner, PodBuildMode};
+use crate::broker::state::{StateError, TaskRegistry};
+use crate::metrics::RunMetrics;
+use crate::sim::faas::FaasReport;
+use crate::sim::hpc::HpcReport;
+use crate::sim::kubernetes::SimReport;
+use crate::sim::provider::ProviderId;
+use crate::sim::vm::ProvisionReport;
+use std::sync::Arc;
+
+/// Errors surfaced by any service manager (validation, partitioning, or
+/// task-state bookkeeping). One error type for every manager: the broker
+/// and workflow layers handle manager failure uniformly.
+#[non_exhaustive]
+#[derive(Debug)]
+pub enum ManagerError {
+    InvalidTask(String),
+    InvalidResource(String),
+    Partition(PartitionError),
+    State(StateError),
+}
+
+impl std::fmt::Display for ManagerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManagerError::InvalidTask(m) => write!(f, "invalid task: {m}"),
+            ManagerError::InvalidResource(m) => write!(f, "invalid resource: {m}"),
+            ManagerError::Partition(e) => write!(f, "partitioning failed: {e}"),
+            ManagerError::State(e) => write!(f, "state error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ManagerError {}
+
+impl From<PartitionError> for ManagerError {
+    fn from(e: PartitionError) -> Self {
+        ManagerError::Partition(e)
+    }
+}
+
+impl From<StateError> for ManagerError {
+    fn from(e: StateError) -> Self {
+        ManagerError::State(e)
+    }
+}
+
+/// Shared constructor gate for every manager: validated credentials, a
+/// valid resource request, and a resource bound to this provider
+/// connection. Managers call this from `new` so the checks hold on both
+/// the factory path and direct construction.
+pub(crate) fn validate_binding(
+    config: &ProviderConfig,
+    resource: &ResourceRequest,
+) -> Result<(), ManagerError> {
+    config.credentials.validate().map_err(ManagerError::InvalidResource)?;
+    resource.validate().map_err(ManagerError::InvalidResource)?;
+    if resource.provider != config.id {
+        return Err(ManagerError::InvalidResource(format!(
+            "resource targets {} but manager is connected to {}",
+            resource.provider, config.id
+        )));
+    }
+    Ok(())
+}
+
+/// Provider-specific outcome of a manager run: the simulator report (and,
+/// for CaaS, the cluster-provision report) behind the unified metrics.
+/// `#[non_exhaustive]`: the next manager adds a variant here without a
+/// breaking change.
+#[non_exhaustive]
+#[derive(Debug)]
+pub enum RunDetail {
+    Caas {
+        sim: SimReport,
+        /// Cluster readiness (virtual seconds before the workload could
+        /// start); reported separately from TPT, as in the paper.
+        provision: ProvisionReport,
+    },
+    Hpc {
+        sim: HpcReport,
+    },
+    Faas {
+        sim: FaasReport,
+    },
+}
+
+impl RunDetail {
+    /// The service kind that produced this detail.
+    pub fn service(&self) -> ServiceKind {
+        match self {
+            RunDetail::Caas { .. } => ServiceKind::Caas,
+            RunDetail::Hpc { .. } => ServiceKind::Batch,
+            RunDetail::Faas { .. } => ServiceKind::Faas,
+        }
+    }
+
+    pub fn caas_sim(&self) -> Option<&SimReport> {
+        match self {
+            RunDetail::Caas { sim, .. } => Some(sim),
+            _ => None,
+        }
+    }
+
+    pub fn provision(&self) -> Option<&ProvisionReport> {
+        match self {
+            RunDetail::Caas { provision, .. } => Some(provision),
+            _ => None,
+        }
+    }
+
+    pub fn hpc_sim(&self) -> Option<&HpcReport> {
+        match self {
+            RunDetail::Hpc { sim } => Some(sim),
+            _ => None,
+        }
+    }
+
+    pub fn faas_sim(&self) -> Option<&FaasReport> {
+        match self {
+            RunDetail::Faas { sim } => Some(sim),
+            _ => None,
+        }
+    }
+}
+
+/// Unified report of one manager execution — the same shape for every
+/// service kind, replacing the three divergent per-manager report
+/// structs. Byte accounting is uniform: `bytes_serialized` counts the
+/// serialized item bytes (manifests / task dicts / invocations, bulk
+/// envelope excluded), `bulk_bytes` the framed `[i0,i1,...]` payload the
+/// provider-API sink accepted.
+#[derive(Debug)]
+pub struct ManagerRun {
+    pub metrics: RunMetrics,
+    /// Serialized item bytes (separators and brackets excluded).
+    pub bytes_serialized: usize,
+    /// Framed bulk payload bytes accepted by the provider-API sink.
+    pub bulk_bytes: usize,
+    pub detail: RunDetail,
+}
+
+/// Per-provider report carried by a brokered run, keyed by service kind
+/// for ergonomic matching. `#[non_exhaustive]`: grows with [`RunDetail`].
+#[non_exhaustive]
+#[derive(Debug)]
+pub enum ManagerReport {
+    Caas(ManagerRun),
+    Hpc(ManagerRun),
+    Faas(ManagerRun),
+}
+
+impl ManagerReport {
+    /// The unified run behind the per-kind wrapper.
+    pub fn run(&self) -> &ManagerRun {
+        match self {
+            ManagerReport::Caas(r) | ManagerReport::Hpc(r) | ManagerReport::Faas(r) => r,
+        }
+    }
+
+    pub fn metrics(&self) -> &RunMetrics {
+        &self.run().metrics
+    }
+}
+
+impl From<ManagerRun> for ManagerReport {
+    /// Wrap a run under the variant matching its detail — the two can
+    /// never disagree because this is the only constructor on the broker
+    /// path.
+    fn from(run: ManagerRun) -> ManagerReport {
+        match run.detail.service() {
+            ServiceKind::Caas => ManagerReport::Caas(run),
+            ServiceKind::Batch => ManagerReport::Hpc(run),
+            ServiceKind::Faas => ManagerReport::Faas(run),
+        }
+    }
+}
+
+/// A workload manager for one service on one provider connection: the
+/// paper's §3.1 manager interface, opened as a public trait.
+///
+/// Implementations execute their slice of the workload end to end
+/// (validate → translate/partition → serialize → bulk-submit → trace to
+/// final states) and report the unified [`ManagerRun`]. Descriptions
+/// arrive as registry-shared `Arc` handles (§Perf: no description clone
+/// per manager hop). `Send` because the Service Proxy runs one manager
+/// per provider thread.
+pub trait ServiceManager: Send {
+    /// The service kind this manager drives.
+    fn service(&self) -> ServiceKind;
+
+    /// Execute the workload slice end to end against this manager's
+    /// provider, recording every task transition in `registry`.
+    fn execute(
+        &self,
+        tasks: &[(TaskId, Arc<TaskDescription>)],
+        registry: &TaskRegistry,
+    ) -> Result<ManagerRun, ManagerError>;
+}
+
+impl ServiceManager for CaasManager {
+    fn service(&self) -> ServiceKind {
+        ServiceKind::Caas
+    }
+
+    fn execute(
+        &self,
+        tasks: &[(TaskId, Arc<TaskDescription>)],
+        registry: &TaskRegistry,
+    ) -> Result<ManagerRun, ManagerError> {
+        CaasManager::execute(self, tasks, registry)
+    }
+}
+
+impl ServiceManager for HpcManager {
+    fn service(&self) -> ServiceKind {
+        ServiceKind::Batch
+    }
+
+    fn execute(
+        &self,
+        tasks: &[(TaskId, Arc<TaskDescription>)],
+        registry: &TaskRegistry,
+    ) -> Result<ManagerRun, ManagerError> {
+        HpcManager::execute(self, tasks, registry)
+    }
+}
+
+impl ServiceManager for FaasManager {
+    fn service(&self) -> ServiceKind {
+        ServiceKind::Faas
+    }
+
+    fn execute(
+        &self,
+        tasks: &[(TaskId, Arc<TaskDescription>)],
+        registry: &TaskRegistry,
+    ) -> Result<ManagerRun, ManagerError> {
+        FaasManager::execute(self, tasks, registry)
+    }
+}
+
+/// The one place `ServiceKind` is dispatched to a manager implementation.
+///
+/// Holds the broker knobs a manager needs at construction time
+/// (partitioning model, manifest build mode, serialize-phase fan-out) and
+/// instantiates the right [`ServiceManager`] for a validated resource
+/// request. Both `ServiceProxy::run` and the workflow engine build their
+/// managers through here — adding a manager means adding one arm to
+/// [`ManagerFactory::create`].
+#[derive(Debug, Clone)]
+pub struct ManagerFactory {
+    pub partition_model: PartitionModel,
+    pub build_mode: PodBuildMode,
+    /// Serialize-phase fan-out handed to every manager (`1` = serial
+    /// reference path; bulk payload bytes are identical for any value).
+    pub serialize: SerializeOptions,
+}
+
+impl Default for ManagerFactory {
+    fn default() -> ManagerFactory {
+        ManagerFactory {
+            partition_model: PartitionModel::Mcpp { max_cpp: 16 },
+            build_mode: PodBuildMode::Memory,
+            serialize: SerializeOptions::default(),
+        }
+    }
+}
+
+impl ManagerFactory {
+    pub fn new(
+        partition_model: PartitionModel,
+        build_mode: PodBuildMode,
+        serialize: SerializeOptions,
+    ) -> ManagerFactory {
+        ManagerFactory { partition_model, build_mode, serialize }
+    }
+
+    /// Disk staging is namespaced per provider, as the real Hydra keeps
+    /// per-provider sandboxes.
+    fn build_mode_for(&self, provider: ProviderId) -> PodBuildMode {
+        match &self.build_mode {
+            PodBuildMode::Memory => PodBuildMode::Memory,
+            PodBuildMode::Disk { staging_dir } => PodBuildMode::Disk {
+                staging_dir: staging_dir.join(provider.short_name()),
+            },
+        }
+    }
+
+    /// Instantiate the manager serving `resource.service` on the given
+    /// provider connection — the single `ServiceKind` dispatch site.
+    pub fn create(
+        &self,
+        config: ProviderConfig,
+        resource: ResourceRequest,
+        seed: u64,
+    ) -> Result<Box<dyn ServiceManager>, ManagerError> {
+        match resource.service {
+            ServiceKind::Caas => {
+                let partitioner =
+                    Partitioner::new(self.partition_model, self.build_mode_for(resource.provider))
+                        .with_serialize(self.serialize);
+                Ok(Box::new(CaasManager::new(config, resource, partitioner, seed)?))
+            }
+            ServiceKind::Batch => {
+                let mgr = HpcManager::new(config, resource, seed)?;
+                Ok(Box::new(mgr.with_serialize(self.serialize)))
+            }
+            ServiceKind::Faas => {
+                let mgr = FaasManager::new(config, resource, seed)?;
+                Ok(Box::new(mgr.with_serialize(self.serialize)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::task::Payload;
+
+    fn arc_tasks(
+        reg: &TaskRegistry,
+        descs: Vec<TaskDescription>,
+    ) -> Vec<(TaskId, Arc<TaskDescription>)> {
+        reg.register_all_shared(descs)
+    }
+
+    #[test]
+    fn factory_creates_each_manager_kind() {
+        let f = ManagerFactory::default();
+        let cases = [
+            (ResourceRequest::kubernetes(ProviderId::Aws, 1, 8), ServiceKind::Caas),
+            (ResourceRequest::pilot(ProviderId::Bridges2, 1), ServiceKind::Batch),
+            (ResourceRequest::faas(ProviderId::Aws, 16), ServiceKind::Faas),
+        ];
+        for (req, kind) in cases {
+            let cfg = ProviderConfig::simulated(req.provider);
+            let m = f.create(cfg, req, 1).unwrap();
+            assert_eq!(m.service(), kind);
+        }
+    }
+
+    #[test]
+    fn factory_rejects_invalid_requests() {
+        let f = ManagerFactory::default();
+        // CaaS on an HPC platform, FaaS on an HPC platform, zero pilots.
+        for req in [
+            ResourceRequest::kubernetes(ProviderId::Bridges2, 1, 8),
+            ResourceRequest::faas(ProviderId::Bridges2, 16),
+            ResourceRequest::pilot(ProviderId::Bridges2, 0),
+        ] {
+            let cfg = ProviderConfig::simulated(req.provider);
+            assert!(f.create(cfg, req, 1).is_err());
+        }
+    }
+
+    #[test]
+    fn trait_objects_execute_like_concrete_managers() {
+        // The same workload through a Box<dyn ServiceManager> produces a
+        // unified run whose detail carries the kind-specific report.
+        let f = ManagerFactory::default();
+        let reg = TaskRegistry::new();
+        let tasks = arc_tasks(
+            &reg,
+            (0..96)
+                .map(|i| {
+                    TaskDescription::function(format!("fn-{i}"), "pkg.handler")
+                        .with_payload(Payload::Work(0.5))
+                })
+                .collect(),
+        );
+        let m = f
+            .create(
+                ProviderConfig::simulated(ProviderId::Aws),
+                ResourceRequest::faas(ProviderId::Aws, 32),
+                5,
+            )
+            .unwrap();
+        let run = m.execute(&tasks, &reg).unwrap();
+        assert_eq!(run.metrics.tasks, 96);
+        assert_eq!(run.detail.service(), ServiceKind::Faas);
+        assert!(run.detail.faas_sim().unwrap().cold_starts >= 1);
+        assert!(run.bulk_bytes > run.bytes_serialized);
+        assert!(reg.all_final());
+        let report = ManagerReport::from(run);
+        assert!(matches!(report, ManagerReport::Faas(_)));
+        assert_eq!(report.metrics().tasks, 96);
+    }
+
+    #[test]
+    fn report_wrapper_matches_detail_for_all_kinds() {
+        let f = ManagerFactory::default();
+        let cases = [
+            (
+                ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 16),
+                TaskDescription::container("c", "img"),
+            ),
+            (
+                ResourceRequest::pilot(ProviderId::Bridges2, 1),
+                TaskDescription::executable("e", "noop"),
+            ),
+            (
+                ResourceRequest::faas(ProviderId::Azure, 8),
+                TaskDescription::function("f", "pkg.handler"),
+            ),
+        ];
+        for (req, desc) in cases {
+            let reg = TaskRegistry::new();
+            let tasks = arc_tasks(&reg, (0..8).map(|_| desc.clone()).collect());
+            let cfg = ProviderConfig::simulated(req.provider);
+            let kind = req.service;
+            let run = f.create(cfg, req, 3).unwrap().execute(&tasks, &reg).unwrap();
+            let report = ManagerReport::from(run);
+            assert_eq!(report.run().detail.service(), kind);
+        }
+    }
+}

@@ -1,14 +1,29 @@
 //! The Hydra broker — the paper's system contribution (§3).
 //!
+//! The broker is organized around an **open manager interface**: every
+//! workload manager implements the [`ServiceManager`] trait and reports
+//! the same unified [`ManagerRun`] shape, and the [`ManagerFactory`]
+//! holds the codebase's one and only `ServiceKind` → manager dispatch.
+//! Both brokered runs ([`ServiceProxy::run`]) and workflow waves
+//! (`workflow::engine`) build their managers through that factory, so a
+//! new service kind — the paper's §3.1 "for example, a Function as a
+//! Service manager", shipped here as the [`faas`] module — lands as one
+//! enum variant, one trait impl, and one factory arm.
+//!
 //! * [`provider_proxy`] — credential validation and provider bring-up.
-//! * [`service_proxy`] — concurrent service managers + workload mapping.
+//! * [`service_proxy`] — workload mapping + one manager thread per
+//!   provider, aggregation of the unified reports.
+//! * [`manager`] — the [`ServiceManager`] trait, unified
+//!   [`ManagerRun`]/[`RunDetail`] reports, and the [`ManagerFactory`].
 //! * [`caas`] — CaaS Manager (Kubernetes clusters, pod workloads).
 //! * [`hpc`] — HPC Manager (pilot connector, bulk task submission).
-//! * [`faas`] — FaaS Manager (the §3.1 extensibility example, implemented).
+//! * [`faas`] — FaaS Manager (functions with cold starts + concurrency
+//!   limits).
 //! * [`data`] — Data Manager (copy/move/link/delete/list, staging) and
 //!   the bulk serialization data path (shards, framing, submit sink).
 //! * [`partitioner`] — MCPP/SCPP pod partitioning + manifest building.
-//! * [`policy`] — task→provider binding policies.
+//! * [`policy`] — task→provider binding policies (kind-aware routing
+//!   across CaaS/Batch/FaaS services).
 //! * [`state`] — task registry, state machine, tracing.
 //!
 //! [`Hydra`] is the user-facing facade combining all of the above.
@@ -17,6 +32,7 @@ pub mod caas;
 pub mod data;
 pub mod faas;
 pub mod hpc;
+pub mod manager;
 pub mod partitioner;
 pub mod policy;
 pub mod provider_proxy;
@@ -28,6 +44,9 @@ use crate::api::task::TaskDescription;
 use crate::api::ProviderConfig;
 use crate::sim::provider::ProviderId;
 pub use data::SerializeOptions;
+pub use manager::{
+    ManagerError, ManagerFactory, ManagerReport, ManagerRun, RunDetail, ServiceManager,
+};
 pub use partitioner::{PartitionModel, PodBuildMode};
 pub use policy::BrokerPolicy;
 pub use service_proxy::{BrokerError, BrokerRun, ServiceProxy};
@@ -35,21 +54,32 @@ pub use service_proxy::{BrokerError, BrokerRun, ServiceProxy};
 /// User-facing facade: configure providers + resources, then submit
 /// workloads.
 ///
+/// Each acquired resource names a service kind (CaaS cluster, HPC pilot,
+/// FaaS function service); at submit time the broker binds tasks to
+/// providers by policy and drives one [`ServiceManager`] per provider,
+/// instantiated through the [`ManagerFactory`]. All managers report the
+/// unified [`ManagerRun`] shape.
+///
 /// ```no_run
 /// use hydra::broker::{Hydra, BrokerPolicy};
 /// use hydra::api::{ResourceRequest, TaskDescription};
 /// use hydra::sim::provider::ProviderId;
 ///
+/// // A Kubernetes cluster and a function service, one per provider.
 /// let hydra = Hydra::builder()
 ///     .simulated_provider(ProviderId::Aws)
 ///     .resource(ResourceRequest::kubernetes(ProviderId::Aws, 1, 8))
+///     .simulated_provider(ProviderId::Azure)
+///     .resource(ResourceRequest::faas(ProviderId::Azure, 64))
 ///     .build()
 ///     .unwrap();
-/// let tasks = (0..32)
+/// // Containers route to the CaaS manager, functions to FaaS.
+/// let mut tasks: Vec<TaskDescription> = (0..32)
 ///     .map(|i| TaskDescription::container(format!("t{i}"), "noop:latest"))
 ///     .collect();
-/// let run = hydra.submit(tasks, &BrokerPolicy::RoundRobin).unwrap();
-/// assert_eq!(run.aggregate.tasks, 32);
+/// tasks.extend((0..32).map(|i| TaskDescription::function(format!("f{i}"), "pkg.handler")));
+/// let run = hydra.submit(tasks, &BrokerPolicy::ByTaskKind).unwrap();
+/// assert_eq!(run.aggregate.tasks, 64);
 /// ```
 pub struct Hydra {
     proxy: ServiceProxy,
@@ -106,8 +136,7 @@ impl HydraBuilder {
     }
 
     pub fn build(self) -> Result<Hydra, BrokerError> {
-        let providers = provider_proxy::ProviderProxy::connect(self.configs)
-            .map_err(|e| BrokerError::Resource(e.to_string()))?;
+        let providers = provider_proxy::ProviderProxy::connect(self.configs)?;
         let mut proxy = ServiceProxy::new(providers);
         if let Some(m) = self.partition_model {
             proxy.partition_model = m;
@@ -157,11 +186,15 @@ mod tests {
 
     #[test]
     fn facade_end_to_end() {
+        // One provider per service kind: the facade drives all three
+        // managers through the factory in a single brokered run.
         let hydra = Hydra::builder()
             .simulated_provider(ProviderId::Jetstream2)
             .simulated_provider(ProviderId::Bridges2)
+            .simulated_provider(ProviderId::Aws)
             .resource(ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 16))
             .resource(ResourceRequest::pilot(ProviderId::Bridges2, 1))
+            .resource(ResourceRequest::faas(ProviderId::Aws, 32))
             .partition_model(PartitionModel::Scpp)
             .seed(99)
             .build()
@@ -170,14 +203,19 @@ mod tests {
             .map(|i| TaskDescription::container(format!("c{i}"), "noop:latest"))
             .collect();
         tasks.extend((0..40).map(|i| TaskDescription::executable(format!("e{i}"), "noop")));
+        tasks.extend((0..40).map(|i| TaskDescription::function(format!("f{i}"), "pkg.handler")));
         let run = hydra.submit(tasks, &BrokerPolicy::ByTaskKind).unwrap();
-        assert_eq!(run.aggregate.tasks, 80);
+        assert_eq!(run.aggregate.tasks, 120);
+        assert_eq!(run.reports.len(), 3);
+        assert!(matches!(run.reports[&ProviderId::Jetstream2], ManagerReport::Caas(_)));
+        assert!(matches!(run.reports[&ProviderId::Bridges2], ManagerReport::Hpc(_)));
+        assert!(matches!(run.reports[&ProviderId::Aws], ManagerReport::Faas(_)));
         assert!(hydra.registry().all_final());
-        assert!(hydra.registry().trace_len() >= 80 * 6);
+        assert!(hydra.registry().trace_len() >= 120 * 6);
     }
 
     #[test]
     fn build_fails_without_valid_providers() {
-        assert!(Hydra::builder().build().is_err());
+        assert!(matches!(Hydra::builder().build(), Err(BrokerError::Provider(_))));
     }
 }

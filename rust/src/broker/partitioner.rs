@@ -349,6 +349,9 @@ fn write_pod_manifest(
                     TaskKind::Executable { command } => {
                         push_json_str(out, &format!("exec://{command}"))
                     }
+                    TaskKind::Function { handler } => {
+                        push_json_str(out, &format!("faas://{handler}"))
+                    }
                 }
             }
             None => {
@@ -389,6 +392,7 @@ fn pod_manifest(
                     let img = match &t.kind {
                         TaskKind::Container { image } => image.clone(),
                         TaskKind::Executable { command } => format!("exec://{command}"),
+                        TaskKind::Function { handler } => format!("faas://{handler}"),
                     };
                     (t.name.clone(), img)
                 }

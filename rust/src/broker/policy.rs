@@ -5,8 +5,9 @@
 //! resources" (paper §1). A policy maps a validated workload onto the set
 //! of acquired providers; explicit per-task bindings always win.
 
-use crate::api::task::{TaskDescription, TaskId};
-use crate::sim::provider::{PlatformKind, PlatformProfile, ProviderId};
+use crate::api::resource::ServiceKind;
+use crate::api::task::{TaskDescription, TaskId, TaskKind};
+use crate::sim::provider::{PlatformProfile, ProviderId};
 use std::collections::BTreeMap;
 
 /// Placement policy across the acquired providers.
@@ -15,8 +16,9 @@ pub enum BrokerPolicy {
     /// Cycle tasks across providers in order (the paper's equal split in
     /// Experiment 2).
     RoundRobin,
-    /// Containers to cloud providers, executables to HPC platforms
-    /// (Experiment 3B's CON/EXEC split).
+    /// Route by task kind onto the matching acquired service: containers
+    /// to CaaS, executables to HPC batch, functions to FaaS (Experiment
+    /// 3B's CON/EXEC split, extended to the open manager set).
     ByTaskKind,
     /// Weighted split proportional to the given weights.
     Weighted(Vec<(ProviderId, f64)>),
@@ -30,7 +32,7 @@ pub enum PolicyError {
     UnboundTask(TaskId),
     UnknownProvider { task: TaskId, provider: ProviderId },
     BadWeights(String),
-    /// ByTaskKind had a task kind with no matching platform.
+    /// ByTaskKind had a task kind with no acquired service to run it.
     NoMatchingPlatform { task: TaskId, needed: &'static str },
 }
 
@@ -44,7 +46,7 @@ impl std::fmt::Display for PolicyError {
             }
             PolicyError::BadWeights(m) => write!(f, "bad weights: {m}"),
             PolicyError::NoMatchingPlatform { task, needed } => {
-                write!(f, "{task} needs a {needed} platform but none was acquired")
+                write!(f, "{task} needs a {needed} service but none was acquired")
             }
         }
     }
@@ -75,6 +77,10 @@ pub fn perf_weighted(providers_with_cores: &[(ProviderId, u32)]) -> BrokerPolicy
 
 /// Bind every task to exactly one acquired provider.
 ///
+/// `providers` carries the service kind acquired on each provider so
+/// kind-aware policies (`ByTaskKind`) can route onto the matching
+/// manager; kind-blind policies ignore it.
+///
 /// Generic over `Borrow<TaskDescription>` so the broker can pass
 /// `Arc<TaskDescription>` handles shared with the registry (§Perf: no
 /// description clones on the brokering path) while tests pass owned
@@ -87,12 +93,12 @@ pub fn perf_weighted(providers_with_cores: &[(ProviderId, u32)]) -> BrokerPolicy
 pub fn assign<T: std::borrow::Borrow<TaskDescription>>(
     policy: &BrokerPolicy,
     tasks: &[(TaskId, T)],
-    providers: &[ProviderId],
+    providers: &[(ProviderId, ServiceKind)],
 ) -> Result<Assignment, PolicyError> {
     if providers.is_empty() {
         return Err(PolicyError::NoProviders);
     }
-    let mut out: Assignment = providers.iter().map(|p| (*p, Vec::new())).collect();
+    let mut out: Assignment = providers.iter().map(|(p, _)| (*p, Vec::new())).collect();
 
     // Pass 1: explicit bindings.
     let mut unbound: Vec<(TaskId, &TaskDescription)> = Vec::new();
@@ -117,36 +123,29 @@ pub fn assign<T: std::borrow::Borrow<TaskDescription>>(
         }
         BrokerPolicy::RoundRobin => {
             for (i, (id, _)) in unbound.iter().enumerate() {
-                let p = providers[i % providers.len()];
+                let (p, _) = providers[i % providers.len()];
                 out.get_mut(&p).unwrap().push(*id);
             }
         }
         BrokerPolicy::ByTaskKind => {
-            let clouds: Vec<ProviderId> = providers
-                .iter()
-                .copied()
-                .filter(|p| PlatformProfile::of(*p).kind == PlatformKind::Cloud)
-                .collect();
-            let hpcs: Vec<ProviderId> = providers
-                .iter()
-                .copied()
-                .filter(|p| PlatformProfile::of(*p).kind == PlatformKind::Hpc)
-                .collect();
-            let (mut ci, mut hi) = (0usize, 0usize);
+            let of_service = |kind: ServiceKind| -> Vec<ProviderId> {
+                providers.iter().filter(|(_, s)| *s == kind).map(|(p, _)| *p).collect()
+            };
+            let caas = of_service(ServiceKind::Caas);
+            let batch = of_service(ServiceKind::Batch);
+            let faas = of_service(ServiceKind::Faas);
+            let (mut ci, mut bi, mut fi) = (0usize, 0usize, 0usize);
             for (id, t) in &unbound {
-                if t.kind.is_container() {
-                    if clouds.is_empty() {
-                        return Err(PolicyError::NoMatchingPlatform { task: *id, needed: "cloud" });
-                    }
-                    out.get_mut(&clouds[ci % clouds.len()]).unwrap().push(*id);
-                    ci += 1;
-                } else {
-                    if hpcs.is_empty() {
-                        return Err(PolicyError::NoMatchingPlatform { task: *id, needed: "HPC" });
-                    }
-                    out.get_mut(&hpcs[hi % hpcs.len()]).unwrap().push(*id);
-                    hi += 1;
+                let (pool, cursor, needed) = match &t.kind {
+                    TaskKind::Container { .. } => (&caas, &mut ci, "CaaS"),
+                    TaskKind::Executable { .. } => (&batch, &mut bi, "HPC"),
+                    TaskKind::Function { .. } => (&faas, &mut fi, "FaaS"),
+                };
+                if pool.is_empty() {
+                    return Err(PolicyError::NoMatchingPlatform { task: *id, needed });
                 }
+                out.get_mut(&pool[*cursor % pool.len()]).unwrap().push(*id);
+                *cursor += 1;
             }
         }
         BrokerPolicy::Weighted(weights) => {
@@ -155,7 +154,7 @@ pub fn assign<T: std::borrow::Borrow<TaskDescription>>(
                 return Err(PolicyError::BadWeights("weights must sum to > 0".into()));
             }
             for (p, w) in weights {
-                if !providers.contains(p) {
+                if !providers.iter().any(|(q, _)| q == p) {
                     return Err(PolicyError::BadWeights(format!("{p} not acquired")));
                 }
                 if *w < 0.0 {
@@ -208,6 +207,15 @@ mod tests {
         (TaskId(i), TaskDescription::executable(format!("e{i}"), "sleep"))
     }
 
+    fn fun(i: u64) -> (TaskId, TaskDescription) {
+        (TaskId(i), TaskDescription::function(format!("f{i}"), "pkg.handler"))
+    }
+
+    /// Acquired providers with a CaaS service each (the common test case).
+    fn caas(ps: &[ProviderId]) -> Vec<(ProviderId, ServiceKind)> {
+        ps.iter().map(|&p| (p, ServiceKind::Caas)).collect()
+    }
+
     fn total_assigned(a: &Assignment) -> usize {
         a.values().map(|v| v.len()).sum()
     }
@@ -217,7 +225,7 @@ mod tests {
         let tasks: Vec<_> = (0..16).map(con).collect();
         let provs = [ProviderId::Aws, ProviderId::Azure, ProviderId::Jetstream2,
                      ProviderId::Chameleon];
-        let a = assign(&BrokerPolicy::RoundRobin, &tasks, &provs).unwrap();
+        let a = assign(&BrokerPolicy::RoundRobin, &tasks, &caas(&provs)).unwrap();
         assert_eq!(total_assigned(&a), 16);
         for p in provs {
             assert_eq!(a[&p].len(), 4, "{p}");
@@ -228,32 +236,39 @@ mod tests {
     fn explicit_bindings_honored_under_any_policy() {
         let mut tasks: Vec<_> = (0..6).map(con).collect();
         tasks[3].1 = tasks[3].1.clone().on(ProviderId::Azure);
-        let provs = [ProviderId::Aws, ProviderId::Azure];
+        let provs = caas(&[ProviderId::Aws, ProviderId::Azure]);
         let a = assign(&BrokerPolicy::RoundRobin, &tasks, &provs).unwrap();
         assert!(a[&ProviderId::Azure].contains(&TaskId(3)));
         assert_eq!(total_assigned(&a), 6);
     }
 
     #[test]
-    fn by_task_kind_routes_con_to_cloud_exec_to_hpc() {
-        let tasks: Vec<_> = vec![con(0), exe(1), con(2), exe(3)];
-        let provs = [ProviderId::Aws, ProviderId::Bridges2];
+    fn by_task_kind_routes_each_kind_to_its_service() {
+        let tasks: Vec<_> = vec![con(0), exe(1), con(2), exe(3), fun(4), fun(5)];
+        let provs = [
+            (ProviderId::Aws, ServiceKind::Caas),
+            (ProviderId::Azure, ServiceKind::Faas),
+            (ProviderId::Bridges2, ServiceKind::Batch),
+        ];
         let a = assign(&BrokerPolicy::ByTaskKind, &tasks, &provs).unwrap();
         assert_eq!(a[&ProviderId::Aws], vec![TaskId(0), TaskId(2)]);
         assert_eq!(a[&ProviderId::Bridges2], vec![TaskId(1), TaskId(3)]);
+        assert_eq!(a[&ProviderId::Azure], vec![TaskId(4), TaskId(5)]);
     }
 
     #[test]
-    fn by_task_kind_errors_without_matching_platform() {
-        let tasks = vec![exe(0)];
-        let e = assign(&BrokerPolicy::ByTaskKind, &tasks, &[ProviderId::Aws]).unwrap_err();
+    fn by_task_kind_errors_without_matching_service() {
+        let provs = caas(&[ProviderId::Aws]);
+        let e = assign(&BrokerPolicy::ByTaskKind, &[exe(0)], &provs).unwrap_err();
         assert!(matches!(e, PolicyError::NoMatchingPlatform { needed: "HPC", .. }));
+        let e = assign(&BrokerPolicy::ByTaskKind, &[fun(0)], &provs).unwrap_err();
+        assert!(matches!(e, PolicyError::NoMatchingPlatform { needed: "FaaS", .. }));
     }
 
     #[test]
     fn weighted_respects_proportions() {
         let tasks: Vec<_> = (0..100).map(con).collect();
-        let provs = [ProviderId::Aws, ProviderId::Azure];
+        let provs = caas(&[ProviderId::Aws, ProviderId::Azure]);
         let a = assign(
             &BrokerPolicy::Weighted(vec![(ProviderId::Aws, 3.0), (ProviderId::Azure, 1.0)]),
             &tasks,
@@ -267,7 +282,7 @@ mod tests {
     #[test]
     fn weighted_largest_remainder_assigns_all() {
         let tasks: Vec<_> = (0..10).map(con).collect();
-        let provs = [ProviderId::Aws, ProviderId::Azure, ProviderId::Jetstream2];
+        let provs = caas(&[ProviderId::Aws, ProviderId::Azure, ProviderId::Jetstream2]);
         let a = assign(
             &BrokerPolicy::Weighted(vec![
                 (ProviderId::Aws, 1.0),
@@ -284,7 +299,7 @@ mod tests {
     #[test]
     fn weighted_rejects_bad_configs() {
         let tasks = vec![con(0)];
-        let provs = [ProviderId::Aws];
+        let provs = caas(&[ProviderId::Aws]);
         assert!(assign(&BrokerPolicy::Weighted(vec![]), &tasks, &provs).is_err());
         assert!(assign(
             &BrokerPolicy::Weighted(vec![(ProviderId::Azure, 1.0)]),
@@ -303,23 +318,27 @@ mod tests {
     #[test]
     fn explicit_only_requires_bindings() {
         let tasks = vec![con(0)];
-        let e = assign(&BrokerPolicy::ExplicitOnly, &tasks, &[ProviderId::Aws]).unwrap_err();
+        let provs = caas(&[ProviderId::Aws]);
+        let e = assign(&BrokerPolicy::ExplicitOnly, &tasks, &provs).unwrap_err();
         assert_eq!(e, PolicyError::UnboundTask(TaskId(0)));
         let bound = vec![(TaskId(0), TaskDescription::container("t", "i").on(ProviderId::Aws))];
-        assert!(assign(&BrokerPolicy::ExplicitOnly, &bound, &[ProviderId::Aws]).is_ok());
+        assert!(assign(&BrokerPolicy::ExplicitOnly, &bound, &provs).is_ok());
     }
 
     #[test]
     fn binding_to_unacquired_provider_errors() {
         let tasks = vec![(TaskId(0), TaskDescription::container("t", "i").on(ProviderId::Azure))];
-        let e = assign(&BrokerPolicy::RoundRobin, &tasks, &[ProviderId::Aws]).unwrap_err();
+        let e = assign(&BrokerPolicy::RoundRobin, &tasks, &caas(&[ProviderId::Aws])).unwrap_err();
         assert!(matches!(e, PolicyError::UnknownProvider { .. }));
     }
 
     #[test]
     fn perf_weighted_prefers_faster_platforms() {
         let tasks: Vec<_> = (0..130).map(con).collect();
-        let provs = [ProviderId::Aws, ProviderId::Bridges2];
+        let provs = [
+            (ProviderId::Aws, ServiceKind::Caas),
+            (ProviderId::Bridges2, ServiceKind::Batch),
+        ];
         let policy = perf_weighted(&[(ProviderId::Aws, 16), (ProviderId::Bridges2, 128)]);
         let a = assign(&policy, &tasks, &provs).unwrap();
         // Bridges2 rate = 11*128 = 1408 vs AWS 16: ~99% of tasks.
@@ -342,7 +361,7 @@ mod tests {
                 (id, Arc::new(t))
             })
             .collect();
-        let provs = [ProviderId::Aws, ProviderId::Azure];
+        let provs = caas(&[ProviderId::Aws, ProviderId::Azure]);
         let a = assign(&BrokerPolicy::RoundRobin, &tasks, &provs).unwrap();
         assert_eq!(total_assigned(&a), 8);
         assert_eq!(a[&ProviderId::Aws].len(), 4);

@@ -7,41 +7,26 @@
 //! workload at runtime."
 //!
 //! Concurrency model: one OS thread per acquired provider; each thread
-//! owns that provider's service manager (CaaS or HPC) and executes its
-//! share of the workload independently. Reports flow back over a channel;
-//! the proxy aggregates them into the paper's per-provider and aggregate
-//! metrics.
+//! owns that provider's service manager — instantiated through the
+//! [`ManagerFactory`], the codebase's single `ServiceKind` dispatch — and
+//! executes its share of the workload independently. Reports flow back
+//! over a channel; the proxy aggregates them into the paper's
+//! per-provider and aggregate metrics. The proxy itself is
+//! manager-agnostic: it never matches on the service kind.
 
 use crate::api::resource::{ResourceRequest, ServiceKind};
 use crate::api::task::{TaskDescription, TaskId};
-use crate::broker::caas::{CaasManager, CaasRunReport};
 use crate::broker::data::SerializeOptions;
-use crate::broker::hpc::{HpcManager, HpcRunReport};
-use crate::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
+use crate::broker::manager::{ManagerFactory, ManagerReport};
+use crate::broker::partitioner::{PartitionModel, PodBuildMode};
 use crate::broker::policy::{assign, Assignment, BrokerPolicy};
-use crate::broker::provider_proxy::ProviderProxy;
+use crate::broker::provider_proxy::{ProviderProxy, ProxyError};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{aggregate, AggregateMetrics, RunMetrics};
 use crate::sim::provider::ProviderId;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
-
-/// Per-provider execution detail.
-#[derive(Debug)]
-pub enum ManagerReport {
-    Caas(CaasRunReport),
-    Hpc(HpcRunReport),
-}
-
-impl ManagerReport {
-    pub fn metrics(&self) -> &RunMetrics {
-        match self {
-            ManagerReport::Caas(r) => &r.metrics,
-            ManagerReport::Hpc(r) => &r.metrics,
-        }
-    }
-}
 
 /// Outcome of one brokered workload execution.
 #[derive(Debug)]
@@ -57,9 +42,14 @@ impl BrokerRun {
     }
 }
 
+/// Broker-level failures. `#[non_exhaustive]`: new managers and proxies
+/// may surface new failure classes without a breaking change.
+#[non_exhaustive]
 #[derive(Debug)]
 pub enum BrokerError {
     Policy(crate::broker::policy::PolicyError),
+    /// Provider bring-up failed (credentials, duplicate/disabled config).
+    Provider(ProxyError),
     Resource(String),
     Manager { provider: ProviderId, message: String },
     Thread(String),
@@ -69,6 +59,7 @@ impl std::fmt::Display for BrokerError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             BrokerError::Policy(e) => write!(f, "policy error: {e}"),
+            BrokerError::Provider(e) => write!(f, "provider error: {e}"),
             BrokerError::Resource(m) => write!(f, "resource error: {m}"),
             BrokerError::Manager { provider, message } => {
                 write!(f, "{provider} manager failed: {message}")
@@ -83,6 +74,12 @@ impl std::error::Error for BrokerError {}
 impl From<crate::broker::policy::PolicyError> for BrokerError {
     fn from(e: crate::broker::policy::PolicyError) -> Self {
         BrokerError::Policy(e)
+    }
+}
+
+impl From<ProxyError> for BrokerError {
+    fn from(e: ProxyError) -> Self {
+        BrokerError::Provider(e)
     }
 }
 
@@ -145,19 +142,11 @@ impl ServiceProxy {
         self
     }
 
-    fn build_mode_for(&self, provider: ProviderId) -> PodBuildMode {
-        match &self.build_mode {
-            PodBuildMode::Memory => PodBuildMode::Memory,
-            PodBuildMode::Disk { staging_dir } => PodBuildMode::Disk {
-                // Separate staging namespaces per provider, as the real
-                // Hydra keeps per-provider sandboxes.
-                staging_dir: staging_dir.join(provider.short_name()),
-            },
-        }
-    }
-
     /// Broker a workload: register, bind by policy, execute concurrently
     /// on every assigned provider, aggregate.
+    ///
+    /// Manager instantiation goes through the [`ManagerFactory`] — the
+    /// proxy has no per-service code path of its own.
     ///
     /// §Perf data path: descriptions are moved into the registry once and
     /// shared from there as `Arc` handles — binding, slicing, and every
@@ -171,7 +160,8 @@ impl ServiceProxy {
         let tasks: Vec<(TaskId, Arc<TaskDescription>)> =
             self.registry.register_all_shared(descs);
 
-        let acquired: Vec<ProviderId> = self.resources.keys().copied().collect();
+        let acquired: Vec<(ProviderId, ServiceKind)> =
+            self.resources.iter().map(|(p, r)| (*p, r.service)).collect();
         let assignment = assign(policy, &tasks, &acquired)?;
 
         // Index description handles for per-provider slices.
@@ -191,6 +181,11 @@ impl ServiceProxy {
             self.serialize
         };
 
+        // The single dispatch: every manager is built through the factory,
+        // regardless of service kind.
+        let factory =
+            ManagerFactory::new(self.partition_model, self.build_mode.clone(), serialize);
+
         let (tx, rx) = mpsc::channel::<(ProviderId, Result<ManagerReport, String>)>();
         let mut threads = Vec::new();
         let mut expected = 0usize;
@@ -207,22 +202,15 @@ impl ServiceProxy {
             let req = self.resources.get(&provider).unwrap().clone();
             let cfg = self.providers.handle(provider).unwrap().config.clone();
             let registry = self.registry.clone();
-            let partitioner = Partitioner::new(self.partition_model, self.build_mode_for(provider))
-                .with_serialize(serialize);
+            let factory = factory.clone();
             let seed = self.seed ^ (provider as u64).wrapping_mul(0x9E3779B97F4A7C15);
             let tx = tx.clone();
             threads.push(std::thread::spawn(move || {
-                let result = match req.service {
-                    ServiceKind::Caas => CaasManager::new(cfg, req, partitioner, seed)
-                        .and_then(|m| m.execute(&slice, &registry))
-                        .map(ManagerReport::Caas)
-                        .map_err(|e| e.to_string()),
-                    ServiceKind::Batch => HpcManager::new(cfg, req, seed)
-                        .map(|m| m.with_serialize(serialize))
-                        .and_then(|m| m.execute(&slice, &registry))
-                        .map(ManagerReport::Hpc)
-                        .map_err(|e| e.to_string()),
-                };
+                let result = factory
+                    .create(cfg, req, seed)
+                    .and_then(|m| m.execute(&slice, &registry))
+                    .map(ManagerReport::from)
+                    .map_err(|e| e.to_string());
                 let _ = tx.send((provider, result));
             }));
         }
@@ -357,12 +345,38 @@ mod tests {
             let run = sp.run(containers(500), &BrokerPolicy::RoundRobin).unwrap();
             match &run.reports[&ProviderId::Aws] {
                 ManagerReport::Caas(r) => (r.bytes_serialized, r.bulk_bytes),
-                ManagerReport::Hpc(_) => unreachable!("kubernetes resource runs CaaS"),
+                _ => unreachable!("kubernetes resource runs CaaS"),
             }
         };
         let serial = run_with(1);
         assert!(serial.1 > serial.0);
         assert_eq!(serial, run_with(8));
+    }
+
+    #[test]
+    fn faas_resource_runs_through_the_open_dispatch() {
+        // A FaaS workload submitted through the proxy completes with
+        // byte-identical bulk payloads for any serialize_threads value
+        // (the ISSUE 4 acceptance guarantee).
+        let run_with = |threads: usize| {
+            let mut sp = ServiceProxy::new(ProviderProxy::simulated(&[ProviderId::Aws]))
+                .with_serialize(SerializeOptions::with_threads(threads));
+            sp.acquire(ResourceRequest::faas(ProviderId::Aws, 64)).unwrap();
+            let descs: Vec<TaskDescription> = (0..500)
+                .map(|i| TaskDescription::function(format!("f{i}"), "pkg.handler"))
+                .collect();
+            let run = sp.run(descs, &BrokerPolicy::RoundRobin).unwrap();
+            assert!(sp.registry.all_final());
+            match &run.reports[&ProviderId::Aws] {
+                ManagerReport::Faas(r) => (r.bytes_serialized, r.bulk_bytes),
+                _ => unreachable!("faas resource runs FaaS"),
+            }
+        };
+        let serial = run_with(1);
+        assert!(serial.1 > serial.0);
+        for threads in [2, 8] {
+            assert_eq!(serial, run_with(threads), "threads={threads}");
+        }
     }
 
     #[test]

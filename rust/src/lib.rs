@@ -5,11 +5,12 @@
 //! Scale"* (Alsaadi, Turilli, Jha, 2024) as a three-layer
 //! Rust + JAX + Pallas system:
 //!
-//! * **Layer 3 (this crate)** — the broker: provider/service proxies, CaaS
-//!   and HPC managers, MCPP/SCPP workload partitioning, bulk submission,
-//!   monitoring/tracing, plus every platform substrate (Kubernetes sim,
-//!   batch-queue/pilot sim, Argo-like workflow engine) and a PJRT runtime
-//!   that executes the FACTS science compute.
+//! * **Layer 3 (this crate)** — the broker: provider/service proxies, the
+//!   open `ServiceManager` trait with CaaS/HPC/FaaS managers behind a
+//!   single factory dispatch, MCPP/SCPP workload partitioning, bulk
+//!   submission, monitoring/tracing, plus every platform substrate
+//!   (Kubernetes sim, batch-queue/pilot sim, FaaS sim, Argo-like workflow
+//!   engine) and a PJRT runtime that executes the FACTS science compute.
 //! * **Layer 2 (python/compile/model.py)** — the FACTS sea-level steps as
 //!   JAX functions, AOT-lowered to `artifacts/*.hlo.txt` at build time.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the

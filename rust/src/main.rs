@@ -34,7 +34,8 @@ fn app() -> App {
                     "write a JSON run report (metrics + trace) to this path ('-' = off)",
                 )
                 .flag("scpp", "single-container-per-pod (default MCPP)")
-                .flag("disk", "build pod manifests on disk (paper's measured mode)"),
+                .flag("disk", "build pod manifests on disk (paper's measured mode)")
+                .flag("faas", "broker function tasks through FaaS on cloud providers"),
         )
         .command(
             Command::new("facts", "run FACTS workflow instances (Experiment 4)")
@@ -128,12 +129,17 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
             staging_dir: std::env::temp_dir().join("hydra-staging"),
         });
     }
+    let use_faas = m.flag("faas");
     for &p in &providers {
         b = b.simulated_provider(p);
         let req = if hydra::sim::provider::PlatformProfile::of(p).kind
             == hydra::sim::provider::PlatformKind::Hpc
         {
             ResourceRequest::pilot(p, nodes)
+        } else if use_faas {
+            // Clouds serve functions; the vcpus knob doubles as the
+            // account-level concurrency limit.
+            ResourceRequest::faas(p, vcpus.max(1) * 4)
         } else {
             ResourceRequest::kubernetes(p, nodes, vcpus)
         };
@@ -144,13 +150,20 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
     let payload = if sleep > 0.0 { Payload::Sleep(sleep) } else { Payload::Noop };
     let tasks: Vec<TaskDescription> = (0..n_tasks)
         .map(|i| {
-            TaskDescription::container(format!("task-{i}"), "hydra/noop:latest")
-                .with_payload(payload.clone())
+            let t = if use_faas {
+                TaskDescription::function(format!("task-{i}"), "hydra.noop:handler")
+            } else {
+                TaskDescription::container(format!("task-{i}"), "hydra/noop:latest")
+            };
+            t.with_payload(payload.clone())
         })
         .collect();
 
+    // Functions must land on FaaS providers; kind-aware routing does
+    // that (and degrades to the RoundRobin split when kinds are uniform).
+    let policy = if use_faas { BrokerPolicy::ByTaskKind } else { BrokerPolicy::RoundRobin };
     let sw = Stopwatch::start();
-    let run = hydra.submit(tasks, &BrokerPolicy::RoundRobin)?;
+    let run = hydra.submit(tasks, &policy)?;
     let wall = sw.elapsed_secs();
 
     println!("{:<10} {:>8} {:>8} {:>12} {:>12} {:>12}", "PROVIDER", "TASKS", "PODS", "OVH",

@@ -35,6 +35,14 @@ impl Overhead {
     pub fn total_s(&self) -> f64 {
         self.partition_s + self.serialize_s + self.submit_s
     }
+
+    /// Fold another overhead window into this one, phase by phase (the
+    /// workflow engine accumulates per-wave manager overheads this way).
+    pub fn accumulate(&mut self, other: &Overhead) {
+        self.partition_s += other.partition_s;
+        self.serialize_s += other.serialize_s;
+        self.submit_s += other.submit_s;
+    }
 }
 
 /// The paper's metric set for one (provider, workload) run.

@@ -5,14 +5,18 @@
 //! (EnTK-style stage barriers; see module docs in `workflow`). Broker-side
 //! OVH accumulates over waves in real time; platform-side TTX accumulates
 //! the virtual makespans.
+//!
+//! Wave managers are instantiated through the broker's `ManagerFactory` —
+//! the engine is service-agnostic and consumes the unified `ManagerRun`
+//! report, so any manager the factory knows (CaaS, HPC batch, FaaS, ...)
+//! can execute workflow waves without engine changes.
 
-use crate::api::resource::{ResourceRequest, ServiceKind};
+use crate::api::resource::ResourceRequest;
 use crate::api::task::{TaskDescription, TaskId};
 use crate::api::ProviderConfig;
-use crate::broker::caas::CaasManager;
 use crate::broker::data::SerializeOptions;
-use crate::broker::hpc::HpcManager;
-use crate::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
+use crate::broker::manager::ManagerFactory;
+use crate::broker::partitioner::{PartitionModel, PodBuildMode};
 use crate::broker::service_proxy::BrokerError;
 use crate::broker::state::TaskRegistry;
 use crate::metrics::Overhead;
@@ -79,6 +83,15 @@ impl WorkflowEngine {
             .map_err(|e| BrokerError::Resource(format!("invalid workflow: {e}")))?;
         let levels = spec.levels().unwrap();
 
+        // One factory for the whole run: the engine never dispatches on
+        // the service kind itself.
+        let factory =
+            ManagerFactory::new(self.partition_model, self.build_mode.clone(), self.serialize);
+        let manager_err = |e: &dyn std::fmt::Display| BrokerError::Manager {
+            provider: self.config.id,
+            message: e.to_string(),
+        };
+
         let mut ovh = Overhead::default();
         let mut wave_ttx = Vec::with_capacity(levels.len());
         let mut total_tasks = 0usize;
@@ -99,55 +112,18 @@ impl WorkflowEngine {
                 registry.register_all_shared(descs);
 
             let seed = self.seed ^ (wave_idx as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
-            match self.resource.service {
-                ServiceKind::Caas => {
-                    let partitioner =
-                        Partitioner::new(self.partition_model, self.build_mode.clone())
-                            .with_serialize(self.serialize);
-                    let mgr = CaasManager::new(
-                        self.config.clone(),
-                        self.resource.clone(),
-                        partitioner,
-                        seed,
-                    )
-                    .map_err(|e| BrokerError::Manager {
-                        provider: self.config.id,
-                        message: e.to_string(),
-                    })?;
-                    let r = mgr.execute(&tasks, registry).map_err(|e| BrokerError::Manager {
-                        provider: self.config.id,
-                        message: e.to_string(),
-                    })?;
-                    ovh.partition_s += r.metrics.ovh.partition_s;
-                    ovh.serialize_s += r.metrics.ovh.serialize_s;
-                    ovh.submit_s += r.metrics.ovh.submit_s;
-                    wave_ttx.push(r.metrics.ttx_s);
-                }
-                ServiceKind::Batch => {
-                    let mgr = HpcManager::new(self.config.clone(), self.resource.clone(), seed)
-                        .map(|m| m.with_serialize(self.serialize))
-                        .map_err(|e| BrokerError::Manager {
-                            provider: self.config.id,
-                            message: e.to_string(),
-                        })?;
-                    let r = mgr.execute(&tasks, registry).map_err(|e| BrokerError::Manager {
-                        provider: self.config.id,
-                        message: e.to_string(),
-                    })?;
-                    ovh.partition_s += r.metrics.ovh.partition_s;
-                    ovh.serialize_s += r.metrics.ovh.serialize_s;
-                    ovh.submit_s += r.metrics.ovh.submit_s;
-                    // The pilot is acquired once for the whole workflow
-                    // run: charge queue wait + agent boot only on the
-                    // first wave.
-                    let adjusted = if wave_idx == 0 {
-                        r.metrics.ttx_s
-                    } else {
-                        (r.metrics.ttx_s - r.sim.agent_ready_s).max(0.0)
-                    };
-                    wave_ttx.push(adjusted);
-                }
-            }
+            let mgr = factory
+                .create(self.config.clone(), self.resource.clone(), seed)
+                .map_err(|e| manager_err(&e))?;
+            let r = mgr.execute(&tasks, registry).map_err(|e| manager_err(&e))?;
+            ovh.accumulate(&r.metrics.ovh);
+            // The pilot is acquired once for the whole workflow run:
+            // charge queue wait + agent boot only on the first wave.
+            let adjusted = match r.detail.hpc_sim() {
+                Some(sim) if wave_idx > 0 => (r.metrics.ttx_s - sim.agent_ready_s).max(0.0),
+                _ => r.metrics.ttx_s,
+            };
+            wave_ttx.push(adjusted);
         }
 
         Ok(WorkflowRunReport {
@@ -210,6 +186,22 @@ mod tests {
         for w in &r.wave_ttx_s[1..] {
             assert!(*w < 40.0, "later wave re-charged the queue: {w}");
         }
+    }
+
+    #[test]
+    fn runs_chain_on_faas_through_the_factory() {
+        // The engine is service-agnostic: a FaaS resource executes
+        // workflow waves through the same factory path as CaaS/HPC.
+        let eng = WorkflowEngine::new(
+            ProviderConfig::simulated(ProviderId::Aws),
+            ResourceRequest::faas(ProviderId::Aws, 32),
+        );
+        let reg = TaskRegistry::new();
+        let r = eng.execute_many(&spec(), 8, &reg, |_, _, t| t).unwrap();
+        assert_eq!(r.waves, 4);
+        assert_eq!(r.tasks, 32);
+        assert!(r.ttx_s > 0.0);
+        assert!(reg.all_final());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use hydra::api::task::{Payload, TaskDescription, TaskState};
 use hydra::api::ResourceRequest;
-use hydra::broker::{BrokerPolicy, Hydra, PartitionModel, PodBuildMode};
+use hydra::broker::{BrokerPolicy, Hydra, ManagerReport, PartitionModel, PodBuildMode};
 use hydra::sim::provider::ProviderId;
 
 fn containers(n: usize) -> Vec<TaskDescription> {
@@ -137,6 +137,44 @@ fn experiment3b_shape_heterogeneous_tasks() {
         run.assignment[&ProviderId::Jetstream2].len() + run.assignment[&ProviderId::Azure].len(),
         256
     );
+}
+
+#[test]
+fn mixed_caas_hpc_faas_run_by_task_kind() {
+    // ISSUE 4: all three service managers — CaaS, HPC batch, FaaS — in
+    // one brokered run through the `Hydra` facade. Containers,
+    // executables, and functions route to their matching service; every
+    // report kind is present and every task traces to a final state.
+    let hydra = Hydra::builder()
+        .simulated_provider(ProviderId::Jetstream2)
+        .resource(ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 16))
+        .simulated_provider(ProviderId::Bridges2)
+        .resource(ResourceRequest::pilot(ProviderId::Bridges2, 1))
+        .simulated_provider(ProviderId::Aws)
+        .resource(ResourceRequest::faas(ProviderId::Aws, 32))
+        .seed(11)
+        .build()
+        .unwrap();
+    let mut tasks = containers(90);
+    tasks.extend((0..90).map(|i| TaskDescription::executable(format!("exe-{i}"), "noop")));
+    tasks.extend((0..90).map(|i| {
+        TaskDescription::function(format!("fn-{i}"), "pkg.module:handler")
+            .with_payload(Payload::Work(0.5))
+    }));
+    let run = hydra.submit(tasks, &BrokerPolicy::ByTaskKind).unwrap();
+    assert_eq!(run.aggregate.tasks, 270);
+    assert_eq!(run.reports.len(), 3);
+    assert!(matches!(run.reports[&ProviderId::Jetstream2], ManagerReport::Caas(_)));
+    assert!(matches!(run.reports[&ProviderId::Bridges2], ManagerReport::Hpc(_)));
+    assert!(matches!(run.reports[&ProviderId::Aws], ManagerReport::Faas(_)));
+    for report in run.reports.values() {
+        let r = report.run();
+        assert_eq!(r.metrics.tasks, 90);
+        assert!(r.bulk_bytes > r.bytes_serialized, "{}", r.metrics.provider);
+    }
+    assert!(hydra.registry().all_final());
+    let counts = hydra.registry().counts();
+    assert_eq!(counts.get(&TaskState::Done), Some(&270));
 }
 
 #[test]

@@ -126,7 +126,13 @@ fn prop_policy_assignment_is_a_partition_of_tasks() {
             ),
             _ => BrokerPolicy::RoundRobin,
         };
-        let a = assign(&policy, &tasks, &providers).unwrap();
+        // Kind-blind policies ignore the acquired service; CaaS everywhere
+        // keeps the generator simple.
+        let acquired: Vec<(ProviderId, hydra::api::resource::ServiceKind)> = providers
+            .iter()
+            .map(|&p| (p, hydra::api::resource::ServiceKind::Caas))
+            .collect();
+        let a = assign(&policy, &tasks, &acquired).unwrap();
 
         let mut all: Vec<u64> = a.values().flatten().map(|id| id.0).collect();
         all.sort();

@@ -124,9 +124,10 @@ fn arc_shared_descriptions_match_owned_through_caas() {
 
     assert_eq!(ra.metrics.pods, rb.metrics.pods);
     assert_eq!(ra.bytes_serialized, rb.bytes_serialized);
-    assert_eq!(ra.sim.tasks.len(), rb.sim.tasks.len());
+    let (sim_a, sim_b) = (ra.detail.caas_sim().unwrap(), rb.detail.caas_sim().unwrap());
+    assert_eq!(sim_a.tasks.len(), sim_b.tasks.len());
     // Same seed + same pods => identical virtual timelines.
-    assert_eq!(ra.sim.makespan_s, rb.sim.makespan_s);
-    assert_eq!(ra.sim.events_processed, rb.sim.events_processed);
+    assert_eq!(sim_a.makespan_s, sim_b.makespan_s);
+    assert_eq!(sim_a.events_processed, sim_b.events_processed);
     assert!(reg_a.all_final() && reg_b.all_final());
 }

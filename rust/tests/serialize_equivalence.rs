@@ -5,22 +5,28 @@
 //! reference; the parallel paths must reproduce its bytes exactly.
 
 use hydra::api::task::{Payload, TaskDescription, TaskId};
+use hydra::api::{ProviderConfig, ResourceRequest};
 use hydra::broker::data::{frame_bulk, SerializeOptions};
 use hydra::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
+use hydra::broker::state::TaskRegistry;
 use hydra::broker::{faas, hpc};
 use hydra::sim::kubernetes::ClusterSpec;
+use hydra::sim::provider::ProviderId;
 use hydra::util::json;
 
 const PARALLEL_THREADS: [usize; 2] = [2, 8];
 const COUNTS: [usize; 3] = [0, 1, 4096];
 
-/// Heterogeneous workload: varied cpu/mem, payloads, and names that need
-/// JSON escaping, so equivalence covers the full serializer surface.
+/// Heterogeneous workload: varied cpu/mem, payloads, all three task
+/// kinds, and names that need JSON escaping, so equivalence covers the
+/// full serializer surface.
 fn tasks(n: usize) -> Vec<(TaskId, TaskDescription)> {
     (0..n)
         .map(|i| {
             let mut d = if i % 5 == 0 {
                 TaskDescription::executable(format!("exe \"{i}\"\n"), "/bin/step --x")
+            } else if i % 5 == 2 {
+                TaskDescription::function(format!("fn \"{i}\""), "pkg.module:handler")
             } else {
                 TaskDescription::container(format!("ctr-{i}"), "hydra/noop:latest")
             };
@@ -91,6 +97,35 @@ fn hpc_bulk_bytes_identical_across_threads() {
         for &t in &PARALLEL_THREADS {
             assert_eq!(hpc_bulk(&ts, t), serial, "n={n} threads={t}");
         }
+    }
+}
+
+#[test]
+fn faas_manager_end_to_end_is_thread_count_invariant() {
+    // ISSUE 4 satellite: the serialize-threads knob honored by the FaaS
+    // *manager* path (not just the document builder) — identical item and
+    // framed byte counts for threads {1, 2, 8}.
+    let run_with = |threads: usize| {
+        let reg = TaskRegistry::new();
+        let ts: Vec<(TaskId, TaskDescription)> = tasks(600)
+            .into_iter()
+            .map(|(_, d)| (reg.register(d.clone()), d))
+            .collect();
+        let m = faas::FaasManager::new(
+            ProviderConfig::simulated(ProviderId::Aws),
+            ResourceRequest::faas(ProviderId::Aws, 64),
+            9,
+        )
+        .unwrap()
+        .with_serialize(SerializeOptions::with_threads(threads));
+        let r = m.execute(&ts, &reg).unwrap();
+        assert!(reg.all_final(), "threads={threads}");
+        (r.bytes_serialized, r.bulk_bytes)
+    };
+    let serial = run_with(1);
+    assert!(serial.1 > serial.0, "framed envelope must add bytes");
+    for &t in &PARALLEL_THREADS {
+        assert_eq!(run_with(t), serial, "threads={t}");
     }
 }
 
