@@ -39,6 +39,11 @@ pub struct ResourceRequest {
     pub mem_mb_per_node: u64,
     /// Maximum concurrent function executions (FaaS only; 0 elsewhere).
     pub concurrency: u32,
+    /// Number of concurrent pilot jobs to stage (Batch only, validated
+    /// >= 1; always 1 for other services). The HPC Manager schedules the
+    /// workload across all of them on the shared capacity index, so
+    /// `nodes` is the size of *each* pilot, not of the fleet.
+    pub pilots: u32,
 }
 
 impl ResourceRequest {
@@ -52,11 +57,19 @@ impl ResourceRequest {
             gpus_per_node: 0,
             mem_mb_per_node: 4096 * vcpus_per_node as u64,
             concurrency: 0,
+            pilots: 1,
         }
     }
 
     /// A pilot on an HPC platform (whole nodes).
     pub fn pilot(provider: ProviderId, nodes: u32) -> ResourceRequest {
+        ResourceRequest::hpc(provider, nodes, 1)
+    }
+
+    /// `pilots` concurrent pilot jobs of `nodes` whole nodes each on an
+    /// HPC platform — the paper's strong/weak-scaling shape (§5.3–5.4);
+    /// `pilots == 1` is [`ResourceRequest::pilot`].
+    pub fn hpc(provider: ProviderId, nodes: u32, pilots: u32) -> ResourceRequest {
         let profile = PlatformProfile::of(provider);
         ResourceRequest {
             provider,
@@ -66,6 +79,7 @@ impl ResourceRequest {
             gpus_per_node: 0,
             mem_mb_per_node: 2048 * profile.cores_per_node as u64,
             concurrency: 0,
+            pilots,
         }
     }
 
@@ -83,11 +97,19 @@ impl ResourceRequest {
             gpus_per_node: 0,
             mem_mb_per_node: 2048,
             concurrency,
+            pilots: 1,
         }
     }
 
     pub fn with_gpus_per_node(mut self, gpus: u32) -> Self {
         self.gpus_per_node = gpus;
+        self
+    }
+
+    /// Stage `pilots` concurrent pilot jobs (Batch requests; validated
+    /// >= 1, and rejected on other service kinds unless it stays 1).
+    pub fn with_pilots(mut self, pilots: u32) -> Self {
+        self.pilots = pilots;
         self
     }
 
@@ -133,6 +155,13 @@ impl ResourceRequest {
         if self.service == ServiceKind::Faas && self.concurrency == 0 {
             return Err(format!("{}: FaaS concurrency must be >= 1", self.provider));
         }
+        if self.service == ServiceKind::Batch {
+            if self.pilots == 0 {
+                return Err(format!("{}: pilots must be >= 1", self.provider));
+            }
+        } else if self.pilots != 1 {
+            return Err(format!("{}: pilots apply to batch resources only", self.provider));
+        }
         Ok(())
     }
 
@@ -166,7 +195,23 @@ mod tests {
         assert_eq!(r.service, ServiceKind::Batch);
         assert_eq!(r.vcpus_per_node, 128);
         assert_eq!(r.total_vcpus(), 256);
+        assert_eq!(r.pilots, 1, "single pilot by default");
         assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn multi_pilot_requests_validate() {
+        let r = ResourceRequest::hpc(ProviderId::Bridges2, 2, 4);
+        assert_eq!(r.pilots, 4);
+        assert_eq!(r.nodes, 2, "nodes are per pilot");
+        assert!(r.validate().is_ok());
+        assert_eq!(ResourceRequest::pilot(ProviderId::Bridges2, 2).with_pilots(4), r);
+        // pilots = 0 rejected; pilots on non-batch services rejected.
+        assert!(ResourceRequest::hpc(ProviderId::Bridges2, 1, 0).validate().is_err());
+        let k = ResourceRequest::kubernetes(ProviderId::Aws, 1, 8).with_pilots(2);
+        assert!(k.validate().is_err());
+        let f = ResourceRequest::faas(ProviderId::Aws, 16).with_pilots(3);
+        assert!(f.validate().is_err());
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //!   paper's Fig 2/3 metrics). `exp_faas_4k` brokers a mixed
 //!   CaaS+HPC+FaaS workload under `ByTaskKind` — all three service
 //!   managers concurrently through the `ManagerFactory` (ISSUE 4).
+//!   `exp_hpc_multipilot_4k` brokers 4K executables onto **4 concurrent
+//!   Bridges2 pilots** (ISSUE 5: per-pilot sharded bulk submission +
+//!   capacity-index placement), with a cross-check that the 4-pilot run
+//!   completes exactly the task set the single-pilot reference completes.
 //! * **serialize microbench** — threads=1 vs threads=N manifest
 //!   serialization + bulk framing on the 4K-task SCPP point (ISSUE 3
 //!   tentpole), with a byte-identity cross-check on the framed payload.
@@ -141,6 +145,50 @@ fn run_mixed_point(name: &'static str) -> Point {
     )
 }
 
+/// One configuration of the ISSUE 5 HPC point: `pilots` concurrent
+/// Bridges2 pilots, 1 node each. The measured row and the
+/// completion-set cross-check build from here so they can never drift
+/// onto different shapes.
+fn hpc_multipilot_broker(pilots: u32, seed: u64) -> Hydra {
+    Hydra::builder()
+        .seed(seed)
+        .simulated_provider(ProviderId::Bridges2)
+        .resource(ResourceRequest::hpc(ProviderId::Bridges2, 1, pilots))
+        .build()
+        .expect("simulated providers must build")
+}
+
+fn hpc_multipilot_tasks() -> Vec<TaskDescription> {
+    (0..POINT_TASKS)
+        .map(|i| TaskDescription::executable(format!("exe-{i}"), "noop"))
+        .collect()
+}
+
+/// ISSUE 5 point: 4K executable tasks on `pilots` concurrent Bridges2
+/// pilots — the weak-scaling axis the multi-pilot HPC manager opens.
+fn run_hpc_multipilot_point(name: &'static str, pilots: u32) -> Point {
+    measure_point(
+        name,
+        |seed| hpc_multipilot_broker(pilots, seed),
+        hpc_multipilot_tasks,
+        &BrokerPolicy::RoundRobin,
+    )
+}
+
+/// Sorted completed task ids of one multi-pilot HPC run at a fixed seed
+/// (the completion-set cross-check between pilots=1 and pilots=4).
+fn hpc_completed_ids(pilots: u32, seed: u64) -> Vec<u64> {
+    let hydra = hpc_multipilot_broker(pilots, seed);
+    let run = hydra
+        .submit(hpc_multipilot_tasks(), &BrokerPolicy::RoundRobin)
+        .expect("hpc point must broker");
+    let report = run.reports.values().next().expect("one provider");
+    let sim = report.run().detail.hpc_sim().expect("hpc detail");
+    let mut ids: Vec<u64> = sim.tasks.iter().map(|t| t.task_id).collect();
+    ids.sort_unstable();
+    ids
+}
+
 /// ISSUE 3 tentpole row: threads=1 vs threads=N manifest serialization +
 /// bulk framing for the 4K-task SCPP point (the serialization-heaviest
 /// quick point: one manifest per task). Best-of-5 per configuration;
@@ -265,6 +313,7 @@ fn main() {
         run_point("exp1_scpp_4k", &[ProviderId::Jetstream2], PartitionModel::Scpp),
         run_point("exp2_clouds_4k", &ProviderId::CLOUDS, PartitionModel::Mcpp { max_cpp: 16 }),
         run_mixed_point("exp_faas_4k"),
+        run_hpc_multipilot_point("exp_hpc_multipilot_4k", 4),
     ];
     for p in &points {
         println!(
@@ -278,6 +327,21 @@ fn main() {
             p.tpt_s.mean
         );
     }
+
+    // ISSUE 5 acceptance: 4 pilots complete the same task set as the
+    // single-pilot (serial-reference-equivalent) run.
+    let one_pilot = hpc_completed_ids(1, SEEDS[0]);
+    let four_pilots = hpc_completed_ids(4, SEEDS[0]);
+    assert_eq!(one_pilot.len(), POINT_TASKS);
+    assert_eq!(
+        one_pilot, four_pilots,
+        "pilots=4 diverged from the pilots=1 completion set"
+    );
+    println!(
+        "exp_hpc_multipilot_4k: pilots=4 completes the same {POINT_TASKS}-task set as \
+         pilots=1 (checked at seed {:#x})",
+        SEEDS[0]
+    );
 
     println!("\n--- serialize microbench ({POINT_TASKS} tasks, SCPP, best of 5) ---");
     let ser = run_serialize_micro();
@@ -332,6 +396,14 @@ fn main() {
                 .set("speedup", ser.speedup)
                 .set("bulk_bytes", ser.bulk_bytes)
                 .set("bulk_identical", true),
+        )
+        .set(
+            "hpc_multipilot_check",
+            Json::obj()
+                .set("tasks", POINT_TASKS)
+                .set("pilots", 4u64)
+                .set("seed", SEEDS[0])
+                .set("completion_set_identical", true),
         )
         .set(
             "sched_microbench",

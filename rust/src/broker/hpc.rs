@@ -7,21 +7,32 @@
 //! format is a bulk JSON document of task descriptions, serialized by the
 //! broker (a real, measured OVH cost, symmetric with the CaaS manifests).
 //!
+//! Multi-pilot (ISSUE 5): a request with `pilots = P` stages P concurrent
+//! pilot jobs. The connector **shards the bulk submission transport
+//! across the pilot agents** — one framed `[dict,...]` payload per pilot,
+//! over contiguous task chunks — while the *schedule* stays global: the
+//! fleet executes one FIFO workload placed on the best-fit live pilot
+//! through the shared capacity index (`sim::hpc::MultiPilotSim`). With
+//! `P == 1` the single payload and the produced `HpcTaskRecord`s are
+//! byte-identical to the serial pilot-lifecycle reference
+//! (`tests/pilot_equivalence.rs`). Per-pilot utilization is reported in
+//! `RunDetail::Hpc`.
+//!
 //! Implements the open manager interface (`broker::manager`): built
 //! through `ManagerFactory`, reporting the unified `ManagerRun` with the
-//! pilot sim report in `RunDetail::Hpc`.
+//! pilot-fleet report in `RunDetail::Hpc`.
 
 use crate::api::resource::ResourceRequest;
 use crate::api::task::{Payload, TaskDescription, TaskId, TaskState};
 use crate::api::ProviderConfig;
 use crate::broker::data::{
-    expected_framed_len, frame_bulk, serialize_sharded, submit_bulk, ManifestShard,
-    SerializeOptions,
+    expected_framed_len, frame_bulk, serialize_sharded, shard_ranges, submit_bulk,
+    ManifestShard, SerializeOptions,
 };
 use crate::broker::manager::{ManagerError, ManagerRun, RunDetail};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
-use crate::sim::hpc::{HpcSim, HpcTaskSpec, PilotSpec};
+use crate::sim::hpc::{HpcTaskSpec, MultiPilotSim, PilotSpec};
 use crate::util::json::Json;
 use crate::util::Stopwatch;
 use std::borrow::Borrow;
@@ -58,6 +69,17 @@ pub fn bulk_task_document<T: Borrow<TaskDescription> + Sync>(
     serialize_sharded(tasks, opts, 128, |out, (id, t), i| {
         task_dict(*id, t.borrow(), &specs[i]).write_into(out)
     })
+}
+
+/// Contiguous task chunks for sharding the bulk submission transport
+/// across `pilots` agents: one chunk per payload, in task order. An empty
+/// workload still ships one (empty) payload, so `pilots == 1` frames
+/// exactly the single-payload reference bytes at every task count.
+pub fn pilot_chunks(tasks: usize, pilots: u32) -> Vec<(usize, usize)> {
+    if tasks == 0 {
+        return vec![(0, 0)];
+    }
+    shard_ranges(tasks, pilots.max(1) as usize)
 }
 
 pub struct HpcManager {
@@ -100,8 +122,9 @@ impl HpcManager {
         self
     }
 
-    /// Execute a workload: validate → serialize bulk task descriptions →
-    /// submit onto the pilot → trace to completion.
+    /// Execute a workload: validate → serialize bulk task descriptions
+    /// (one transport payload per pilot) → submit onto the pilot fleet →
+    /// trace to completion.
     ///
     /// Generic over `Borrow<TaskDescription>`: the service proxy passes
     /// `Arc<TaskDescription>` handles shared with the registry (§Perf: no
@@ -126,25 +149,40 @@ impl HpcManager {
         registry.transition_all(&ids, TaskState::Partitioned)?;
 
         // -- OVH: serialize the bulk submission (RADICAL-Pilot-style task
-        // description dicts in one JSON document), sharded across scoped
-        // threads (§Perf).
+        // description dicts), the transport sharded across the pilot
+        // agents — one JSON document per pilot over contiguous task
+        // chunks, each serialized on scoped threads (§Perf). One pilot =
+        // one document = the serial reference bytes.
         let sw = Stopwatch::start();
-        let shards = bulk_task_document(tasks, &specs, self.serialize);
+        let chunks = pilot_chunks(tasks.len(), self.resource.pilots);
+        let per_pilot: Vec<Vec<ManifestShard>> = chunks
+            .iter()
+            .map(|&(lo, hi)| bulk_task_document(&tasks[lo..hi], &specs[lo..hi], self.serialize))
+            .collect();
         let serialize_s = sw.elapsed_secs();
 
         // -- OVH: frame + submit -----------------------------------------
-        // The bulk document is framed directly from the shard buffers
+        // Each pilot's document is framed directly from its shard buffers
         // (one copy per shard) and shipped through the shared
-        // provider-API sink before the pilot takes the specs.
-        let bytes_serialized: usize = shards.iter().map(ManifestShard::item_bytes).sum();
+        // provider-API sink before the fleet takes the specs. The shipped
+        // total is asserted against the span-table accounting.
+        let bytes_serialized: usize = per_pilot
+            .iter()
+            .flat_map(|shards| shards.iter())
+            .map(ManifestShard::item_bytes)
+            .sum();
         let sw = Stopwatch::start();
-        let expected_bulk = expected_framed_len(&shards);
-        let bulk = frame_bulk(&shards, self.serialize);
-        let bulk_bytes = submit_bulk(&bulk);
+        let mut expected_bulk = 0usize;
+        let mut bulk_bytes = 0usize;
+        for shards in &per_pilot {
+            expected_bulk += expected_framed_len(shards);
+            bulk_bytes += submit_bulk(&frame_bulk(shards, self.serialize));
+        }
         assert_eq!(bulk_bytes, expected_bulk, "bulk framing lost bytes");
-        let mut sim = HpcSim::new(
+        let mut sim = MultiPilotSim::uniform(
             self.config.profile(),
             PilotSpec { nodes: self.resource.nodes },
+            self.resource.pilots,
             self.seed,
         )
         .with_failure_rate(self.failure_rate);
@@ -152,7 +190,7 @@ impl HpcManager {
         let submit_s = sw.elapsed_secs();
         registry.transition_all(&ids, TaskState::Submitted)?;
 
-        // -- platform: pilot executes in virtual time ---------------------
+        // -- platform: the pilot fleet executes in virtual time -----------
         let report = sim.run();
         let first_fail = report
             .tasks
@@ -236,9 +274,13 @@ mod tests {
     use crate::sim::provider::ProviderId;
 
     fn manager(nodes: u32) -> HpcManager {
+        manager_with_pilots(nodes, 1)
+    }
+
+    fn manager_with_pilots(nodes: u32, pilots: u32) -> HpcManager {
         HpcManager::new(
             ProviderConfig::simulated(ProviderId::Bridges2),
-            ResourceRequest::pilot(ProviderId::Bridges2, nodes),
+            ResourceRequest::hpc(ProviderId::Bridges2, nodes, pilots),
             11,
         )
         .unwrap()
@@ -260,7 +302,7 @@ mod tests {
         let tasks = workload(&reg, 200, 0.0);
         let r = manager(1).execute(&tasks, &reg).unwrap();
         assert_eq!(r.metrics.tasks, 200);
-        assert!(r.metrics.tpt_s > r.detail.hpc_sim().unwrap().agent_ready_s);
+        assert!(r.metrics.tpt_s > r.detail.hpc_sim().unwrap().first_agent_ready_s());
         assert!(r.bytes_serialized > 200 * 50);
         assert!(r.bulk_bytes > r.bytes_serialized, "framed envelope bytes missing");
         assert!(reg.all_final());
@@ -310,6 +352,67 @@ mod tests {
         assert!(counts.get(&TaskState::Failed).copied().unwrap_or(0) > 5, "{counts:?}");
         assert!(counts.get(&TaskState::Canceled).copied().unwrap_or(0) > 0, "{counts:?}");
         assert!(reg.all_final());
+    }
+
+    #[test]
+    fn pilot_chunks_tile_the_workload() {
+        assert_eq!(pilot_chunks(0, 1), vec![(0, 0)], "empty bulk still ships one payload");
+        assert_eq!(pilot_chunks(0, 4), vec![(0, 0)]);
+        assert_eq!(pilot_chunks(10, 1), vec![(0, 10)]);
+        assert_eq!(pilot_chunks(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        // Fewer tasks than pilots: one chunk per task, never an empty one.
+        assert_eq!(pilot_chunks(2, 4).len(), 2);
+    }
+
+    #[test]
+    fn multi_pilot_run_reports_per_pilot_utilization() {
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 400, 2.0);
+        let r = manager_with_pilots(1, 4).execute(&tasks, &reg).unwrap();
+        let sim = r.detail.hpc_sim().unwrap();
+        assert_eq!(sim.pilots.len(), 4);
+        assert_eq!(sim.tasks.len(), 400);
+        assert_eq!(sim.pilots.iter().map(|p| p.tasks_executed).sum::<usize>(), 400);
+        for (i, p) in sim.pilots.iter().enumerate() {
+            assert_eq!(p.total_cores, 128, "pilot {i}");
+            assert!(p.peak_cores_busy <= p.total_cores, "pilot {i}");
+            assert!((0.0..=1.0).contains(&p.utilization), "pilot {i}: {}", p.utilization);
+        }
+        assert!(reg.all_final());
+    }
+
+    #[test]
+    fn sharded_submission_byte_accounting_reconciles() {
+        // pilots = P ships k = min(P, n) framed payloads: total bulk
+        // bytes must equal item_bytes + (n - k) separators between items
+        // + 2k brackets = item_bytes + n + k — for every pilot count.
+        for pilots in [1u32, 3, 4, 7] {
+            let reg = TaskRegistry::new();
+            let n = 250usize;
+            let tasks = workload(&reg, n, 0.0);
+            let r = manager_with_pilots(1, pilots).execute(&tasks, &reg).unwrap();
+            let payloads = (pilots as usize).min(n);
+            assert_eq!(
+                r.bulk_bytes,
+                r.bytes_serialized + n + payloads,
+                "pilots={pilots}"
+            );
+        }
+    }
+
+    #[test]
+    fn item_bytes_invariant_across_pilot_counts() {
+        // Sharding the transport must not change what is serialized —
+        // only how it is framed.
+        let mk = |pilots: u32| {
+            let reg = TaskRegistry::new();
+            let tasks = workload(&reg, 300, 1.0);
+            manager_with_pilots(1, pilots).execute(&tasks, &reg).unwrap().bytes_serialized
+        };
+        let one = mk(1);
+        for pilots in [2u32, 8] {
+            assert_eq!(mk(pilots), one, "pilots={pilots}");
+        }
     }
 
     #[test]

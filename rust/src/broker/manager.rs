@@ -33,7 +33,7 @@ use crate::broker::partitioner::{PartitionError, PartitionModel, Partitioner, Po
 use crate::broker::state::{StateError, TaskRegistry};
 use crate::metrics::RunMetrics;
 use crate::sim::faas::FaasReport;
-use crate::sim::hpc::HpcReport;
+use crate::sim::hpc::MultiPilotReport;
 use crate::sim::kubernetes::SimReport;
 use crate::sim::provider::ProviderId;
 use crate::sim::vm::ProvisionReport;
@@ -109,7 +109,10 @@ pub enum RunDetail {
         provision: ProvisionReport,
     },
     Hpc {
-        sim: HpcReport,
+        /// Pilot-fleet report: per-task records plus per-pilot lifecycle
+        /// and utilization stats ([`PilotStat`](crate::sim::hpc::PilotStat)
+        /// per staged pilot — one entry when `pilots == 1`).
+        sim: MultiPilotReport,
     },
     Faas {
         sim: FaasReport,
@@ -140,7 +143,7 @@ impl RunDetail {
         }
     }
 
-    pub fn hpc_sim(&self) -> Option<&HpcReport> {
+    pub fn hpc_sim(&self) -> Option<&MultiPilotReport> {
         match self {
             RunDetail::Hpc { sim } => Some(sim),
             _ => None,
@@ -375,11 +378,13 @@ mod tests {
     #[test]
     fn factory_rejects_invalid_requests() {
         let f = ManagerFactory::default();
-        // CaaS on an HPC platform, FaaS on an HPC platform, zero pilots.
+        // CaaS on an HPC platform, FaaS on an HPC platform, zero nodes,
+        // zero pilots.
         for req in [
             ResourceRequest::kubernetes(ProviderId::Bridges2, 1, 8),
             ResourceRequest::faas(ProviderId::Bridges2, 16),
             ResourceRequest::pilot(ProviderId::Bridges2, 0),
+            ResourceRequest::hpc(ProviderId::Bridges2, 1, 0),
         ] {
             let cfg = ProviderConfig::simulated(req.provider);
             assert!(f.create(cfg, req, 1).is_err());

@@ -26,6 +26,7 @@ fn app() -> App {
                 .opt("tasks", "4000", "number of tasks")
                 .opt("vcpus", "16", "vCPUs per node (cloud)")
                 .opt("nodes", "1", "nodes per cluster / pilot")
+                .opt("pilots", "1", "concurrent pilot jobs (HPC providers)")
                 .opt("sleep", "0", "per-task sleep seconds (0 = noop)")
                 .opt("seed", "42", "simulation seed")
                 .opt(
@@ -116,6 +117,7 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
     let n_tasks = m.usize("tasks")?;
     let vcpus = m.u64("vcpus")? as u32;
     let nodes = m.u64("nodes")? as u32;
+    let pilots = m.u64("pilots")? as u32;
     let sleep = m.f64("sleep")?;
     let model = if m.flag("scpp") {
         PartitionModel::Scpp
@@ -135,7 +137,7 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
         let req = if hydra::sim::provider::PlatformProfile::of(p).kind
             == hydra::sim::provider::PlatformKind::Hpc
         {
-            ResourceRequest::pilot(p, nodes)
+            ResourceRequest::hpc(p, nodes, pilots)
         } else if use_faas {
             // Clouds serve functions; the vcpus knob doubles as the
             // account-level concurrency limit.

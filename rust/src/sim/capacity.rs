@@ -1,0 +1,401 @@
+//! Shared free-capacity index: a segment tree over per-slot free
+//! resources.
+//!
+//! Extracted from `sim::kubernetes` (where it indexed per-*node* free
+//! capacity, PR 1) and generalized so the HPC multi-pilot scheduler can
+//! index per-*pilot* free cores through the same structure (ISSUE 5
+//! tentpole). A "slot" is whatever the owning simulator places work on —
+//! a Kubernetes node or a live pilot job.
+//!
+//! Each leaf holds one slot's free [`Cap`] (cpus, gpus, mem); every
+//! internal vertex stores the *per-dimension maxima* of its subtree, so a
+//! subtree whose maxima cannot satisfy a demand is pruned wholesale.
+//! Operations:
+//!
+//! * [`reserve`](CapacityIndex::reserve) / [`release`](CapacityIndex::release)
+//!   / [`set`](CapacityIndex::set) — update one leaf and recompute maxima
+//!   along the root path: **O(log N)** exact.
+//! * [`first_fit`](CapacityIndex::first_fit) — in-order descent pruned by
+//!   subtree maxima; returns the lowest-indexed slot satisfying all three
+//!   constraints, i.e. the *same slot a linear scan would pick*
+//!   (determinism preserved by construction, enforced by the churn test
+//!   below and the kubernetes equivalence suites). **O(log N)** expected;
+//!   the adversarial worst case where a subtree's per-dimension maxima
+//!   come from different leaves degrades toward O(N) — never worse than
+//!   the scan it replaces.
+//! * [`best_fit`](CapacityIndex::best_fit) — the fitting slot with the
+//!   *fewest* free cpus (ties: lowest index), found by a maxima-pruned
+//!   search with a perfect-fit early exit. Multi-pilot placement uses
+//!   this to pack tasks onto the fullest pilot that still fits, keeping
+//!   wide pilots free for wide tasks. **O(log N)** expected for the
+//!   mostly-uniform slot populations the simulators produce; worst case
+//!   O(N), same caveat as `first_fit`.
+//!
+//! The seed's linear scans ([`first_fit_linear`](CapacityIndex::first_fit_linear),
+//! [`best_fit_linear`](CapacityIndex::best_fit_linear)) are kept as the
+//! reference implementations the unit tests check the tree against.
+
+/// Free capacity of one slot: the three resource dimensions the
+/// simulators schedule on. One-dimensional users (the pilot index: free
+/// cores only) build leaves with [`Cap::cores`], leaving gpus/mem zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cap {
+    pub cpus: u32,
+    pub gpus: u32,
+    pub mem: u64,
+}
+
+impl Cap {
+    /// The all-zero capacity (an empty or masked slot).
+    pub const ZERO: Cap = Cap { cpus: 0, gpus: 0, mem: 0 };
+
+    pub fn new(cpus: u32, gpus: u32, mem: u64) -> Cap {
+        Cap { cpus, gpus, mem }
+    }
+
+    /// A one-dimensional capacity: `cpus` cores, no gpus, no memory.
+    pub fn cores(cpus: u32) -> Cap {
+        Cap { cpus, gpus: 0, mem: 0 }
+    }
+
+    /// Whether this free capacity satisfies `need` in every dimension.
+    pub fn fits(self, need: Cap) -> bool {
+        self.cpus >= need.cpus && self.gpus >= need.gpus && self.mem >= need.mem
+    }
+}
+
+/// Segment tree over per-slot free capacities (see module docs).
+#[derive(Debug, Clone)]
+pub struct CapacityIndex {
+    /// Number of real slots (leaves beyond `n` are zero-capacity padding).
+    n: usize,
+    /// Leaf capacity: smallest power of two >= max(n, 1). The tree arrays
+    /// have length `2 * size`; leaf i lives at `size + i`.
+    size: usize,
+    cpus: Vec<u32>,
+    gpus: Vec<u32>,
+    mem: Vec<u64>,
+}
+
+impl CapacityIndex {
+    /// An index of `n` slots, every leaf starting at `leaf` free capacity.
+    pub fn uniform(n: usize, leaf: Cap) -> CapacityIndex {
+        let size = n.max(1).next_power_of_two();
+        let mut idx = CapacityIndex {
+            n,
+            size,
+            cpus: vec![0; 2 * size],
+            gpus: vec![0; 2 * size],
+            mem: vec![0; 2 * size],
+        };
+        for i in 0..n {
+            idx.cpus[size + i] = leaf.cpus;
+            idx.gpus[size + i] = leaf.gpus;
+            idx.mem[size + i] = leaf.mem;
+        }
+        for i in (1..size).rev() {
+            idx.pull(i);
+        }
+        idx
+    }
+
+    /// An index of `n` slots starting empty — the multi-pilot scheduler
+    /// opens a slot (via [`set`](CapacityIndex::set)) only once its pilot
+    /// agent is live.
+    pub fn zeroed(n: usize) -> CapacityIndex {
+        CapacityIndex::uniform(n, Cap::ZERO)
+    }
+
+    /// Number of real slots.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Recompute vertex `i`'s maxima from its two children.
+    fn pull(&mut self, i: usize) {
+        self.cpus[i] = self.cpus[2 * i].max(self.cpus[2 * i + 1]);
+        self.gpus[i] = self.gpus[2 * i].max(self.gpus[2 * i + 1]);
+        self.mem[i] = self.mem[2 * i].max(self.mem[2 * i + 1]);
+    }
+
+    /// Update the root path above leaf `slot`: O(log N).
+    fn bubble_up(&mut self, slot: usize) {
+        let mut i = (self.size + slot) / 2;
+        while i >= 1 {
+            self.pull(i);
+            if i == 1 {
+                break;
+            }
+            i /= 2;
+        }
+    }
+
+    /// Subtract `take` from slot's free capacity (placement).
+    pub fn reserve(&mut self, slot: usize, take: Cap) {
+        let leaf = self.size + slot;
+        self.cpus[leaf] -= take.cpus;
+        self.gpus[leaf] -= take.gpus;
+        self.mem[leaf] -= take.mem;
+        self.bubble_up(slot);
+    }
+
+    /// Return `give` to slot's free capacity (teardown).
+    pub fn release(&mut self, slot: usize, give: Cap) {
+        let leaf = self.size + slot;
+        self.cpus[leaf] += give.cpus;
+        self.gpus[leaf] += give.gpus;
+        self.mem[leaf] += give.mem;
+        self.bubble_up(slot);
+    }
+
+    /// Point-assign slot's free capacity (a pilot going live, or a slot
+    /// masked to [`Cap::ZERO`] while its launcher is busy).
+    pub fn set(&mut self, slot: usize, free: Cap) {
+        let leaf = self.size + slot;
+        self.cpus[leaf] = free.cpus;
+        self.gpus[leaf] = free.gpus;
+        self.mem[leaf] = free.mem;
+        self.bubble_up(slot);
+    }
+
+    /// Lowest-indexed slot satisfying all three demands, via pruned
+    /// in-order descent. Exact first-fit: a leaf's "maxima" are its actual
+    /// free capacities, so the leaf test is precise and internal vertices
+    /// only prune.
+    pub fn first_fit(&self, need: Cap) -> Option<u32> {
+        if self.n == 0 {
+            return None;
+        }
+        self.search(1, need)
+    }
+
+    fn search(&self, i: usize, need: Cap) -> Option<u32> {
+        if self.cpus[i] < need.cpus || self.gpus[i] < need.gpus || self.mem[i] < need.mem {
+            return None;
+        }
+        if i >= self.size {
+            let slot = i - self.size;
+            return if slot < self.n { Some(slot as u32) } else { None };
+        }
+        self.search(2 * i, need).or_else(|| self.search(2 * i + 1, need))
+    }
+
+    /// Reference first-fit: scan every leaf in order (the seed behavior).
+    pub fn first_fit_linear(&self, need: Cap) -> Option<u32> {
+        (0..self.n).find(|&i| self.free_of(i).fits(need)).map(|i| i as u32)
+    }
+
+    /// The fitting slot with the fewest free cpus (best fit on the cpu
+    /// dimension; ties break toward the lowest index). Prunes subtrees
+    /// whose maxima cannot fit `need` and exits early on a perfect fit
+    /// (`free cpus == need.cpus`). See module docs for the cost bounds.
+    pub fn best_fit(&self, need: Cap) -> Option<u32> {
+        if self.n == 0 {
+            return None;
+        }
+        let mut best: Option<(u32, u32)> = None; // (free cpus, slot)
+        self.best_search(1, need, &mut best);
+        best.map(|(_, slot)| slot)
+    }
+
+    fn best_search(&self, i: usize, need: Cap, best: &mut Option<(u32, u32)>) {
+        if self.cpus[i] < need.cpus || self.gpus[i] < need.gpus || self.mem[i] < need.mem {
+            return;
+        }
+        if let Some((free, _)) = *best {
+            if free == need.cpus {
+                return; // perfect fit already found; nothing can beat it
+            }
+        }
+        if i >= self.size {
+            let slot = i - self.size;
+            if slot >= self.n {
+                return; // zero-capacity padding leaf
+            }
+            let free = self.cpus[i];
+            let better = match *best {
+                None => true,
+                // Strict `<` + left-first descent keeps ties on the
+                // lowest slot index (deterministic placement).
+                Some((best_free, _)) => free < best_free,
+            };
+            if better {
+                *best = Some((free, slot as u32));
+            }
+            return;
+        }
+        self.best_search(2 * i, need, best);
+        self.best_search(2 * i + 1, need, best);
+    }
+
+    /// Reference best-fit: scan every leaf (the test oracle for
+    /// [`best_fit`](CapacityIndex::best_fit)).
+    pub fn best_fit_linear(&self, need: Cap) -> Option<u32> {
+        let mut best: Option<(u32, u32)> = None;
+        for i in 0..self.n {
+            let free = self.free_of(i);
+            if !free.fits(need) {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((best_free, _)) => free.cpus < best_free,
+            };
+            if better {
+                best = Some((free.cpus, i as u32));
+            }
+        }
+        best.map(|(_, slot)| slot)
+    }
+
+    /// Current free capacity of one slot.
+    pub fn free_of(&self, slot: usize) -> Cap {
+        let leaf = self.size + slot;
+        Cap { cpus: self.cpus[leaf], gpus: self.gpus[leaf], mem: self.mem[leaf] }
+    }
+
+    /// Total free capacity across all slots (invariant surface for the
+    /// teardown-frees-capacity tests).
+    pub fn total_free(&self) -> Cap {
+        let mut total = Cap::ZERO;
+        for i in 0..self.n {
+            let f = self.free_of(i);
+            total.cpus += f.cpus;
+            total.gpus += f.gpus;
+            total.mem += f.mem;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn first_fit_agrees_with_scan_under_churn() {
+        // Ported from the inline segment-tree coverage in sim::kubernetes
+        // (ISSUE 5 satellite): the tree against the reference scan across
+        // a randomized reserve/release workload.
+        let mut idx = CapacityIndex::uniform(13, Cap::new(16, 2, 4096));
+        let mut rng = Prng::new(99);
+        let mut held: Vec<(usize, Cap)> = Vec::new();
+        for step in 0..2000 {
+            let need = Cap::new(
+                rng.range_u64(1, 16) as u32,
+                if step % 5 == 0 { rng.range_u64(0, 2) as u32 } else { 0 },
+                rng.range_u64(64, 4096),
+            );
+            assert_eq!(
+                idx.first_fit(need),
+                idx.first_fit_linear(need),
+                "divergence at step {step}"
+            );
+            if let Some(n) = idx.first_fit(need) {
+                idx.reserve(n as usize, need);
+                held.push((n as usize, need));
+            }
+            if held.len() > 8 {
+                let (n, cap) = held.remove(0);
+                idx.release(n, cap);
+            }
+        }
+        for (n, cap) in held {
+            idx.release(n, cap);
+        }
+        assert_eq!(idx.total_free(), Cap::new(13 * 16, 13 * 2, 13 * 4096));
+    }
+
+    #[test]
+    fn best_fit_agrees_with_scan_under_churn() {
+        // Same churn shape, one-dimensional leaves (the pilot index use
+        // case): the pruned best-fit must match the linear oracle exactly,
+        // including tie-breaks.
+        let mut idx = CapacityIndex::zeroed(9);
+        let mut rng = Prng::new(7);
+        // Open slots at heterogeneous widths, as staged pilots would.
+        for i in 0..9 {
+            idx.set(i, Cap::cores(64 * (1 + (i as u32 % 3))));
+        }
+        let mut held: Vec<(usize, Cap)> = Vec::new();
+        for step in 0..3000 {
+            let need = Cap::cores(rng.range_u64(1, 128) as u32);
+            assert_eq!(
+                idx.best_fit(need),
+                idx.best_fit_linear(need),
+                "divergence at step {step}"
+            );
+            if let Some(n) = idx.best_fit(need) {
+                idx.reserve(n as usize, need);
+                held.push((n as usize, need));
+            }
+            if held.len() > 6 {
+                let (n, cap) = held.remove(0);
+                idx.release(n, cap);
+            }
+        }
+        for (n, cap) in held {
+            idx.release(n, cap);
+        }
+        assert_eq!(idx.total_free().cpus, (0..9u32).map(|i| 64 * (1 + i % 3)).sum());
+    }
+
+    #[test]
+    fn best_fit_packs_fullest_slot_and_breaks_ties_low() {
+        let mut idx = CapacityIndex::uniform(4, Cap::cores(32));
+        idx.reserve(1, Cap::cores(20)); // slot 1: 12 free
+        idx.reserve(3, Cap::cores(24)); // slot 3: 8 free
+        assert_eq!(idx.best_fit(Cap::cores(8)), Some(3), "fewest free cpus wins");
+        assert_eq!(idx.best_fit(Cap::cores(10)), Some(1));
+        assert_eq!(idx.best_fit(Cap::cores(16)), Some(0), "tie between 0 and 2 breaks low");
+        assert_eq!(idx.best_fit(Cap::cores(33)), None);
+        // first_fit would have picked slot 0 for all of these.
+        assert_eq!(idx.first_fit(Cap::cores(8)), Some(0));
+    }
+
+    #[test]
+    fn set_masks_and_reopens_slots() {
+        let mut idx = CapacityIndex::zeroed(3);
+        assert_eq!(idx.best_fit(Cap::cores(1)), None, "no slot is live yet");
+        idx.set(1, Cap::cores(128));
+        assert_eq!(idx.best_fit(Cap::cores(1)), Some(1));
+        assert_eq!(idx.first_fit(Cap::cores(1)), Some(1));
+        idx.set(1, Cap::ZERO); // masked (launcher busy)
+        assert_eq!(idx.best_fit(Cap::cores(1)), None);
+        idx.set(1, Cap::cores(100));
+        assert_eq!(idx.free_of(1), Cap::cores(100));
+        assert_eq!(idx.total_free(), Cap::cores(100));
+    }
+
+    #[test]
+    fn empty_and_padding_leaves_never_match() {
+        let idx = CapacityIndex::uniform(0, Cap::cores(16));
+        assert!(idx.is_empty());
+        assert_eq!(idx.first_fit(Cap::ZERO), None);
+        assert_eq!(idx.best_fit(Cap::ZERO), None);
+        // 5 slots pad to 8 leaves; a zero demand must still resolve to a
+        // real slot, never a padding leaf.
+        let idx = CapacityIndex::uniform(5, Cap::ZERO);
+        assert_eq!(idx.len(), 5);
+        assert_eq!(idx.first_fit(Cap::ZERO), Some(0));
+        assert_eq!(idx.best_fit(Cap::ZERO), Some(0));
+        assert_eq!(idx.best_fit(Cap::cores(1)), None);
+    }
+
+    #[test]
+    fn multi_dimension_constraints_all_enforced() {
+        let mut idx = CapacityIndex::uniform(4, Cap::new(16, 2, 4096));
+        idx.reserve(0, Cap::new(0, 2, 0)); // gpus exhausted on slot 0
+        idx.reserve(1, Cap::new(0, 0, 4000)); // mem nearly exhausted on slot 1
+        assert_eq!(idx.first_fit(Cap::new(1, 1, 64)), Some(2));
+        assert_eq!(idx.first_fit(Cap::new(1, 0, 128)), Some(0));
+        assert_eq!(idx.best_fit(Cap::new(1, 0, 128)), Some(0), "ties on cpus break low");
+        idx.release(0, Cap::new(0, 2, 0));
+        assert_eq!(idx.first_fit(Cap::new(1, 1, 64)), Some(0));
+    }
+}

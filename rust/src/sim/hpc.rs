@@ -1,31 +1,50 @@
-//! HPC platform simulator: Slurm-like batch queue + pilot-job agent.
+//! HPC platform simulator: Slurm-like batch queue + pilot-job agents.
 //!
 //! Stands in for ACCESS Bridges2 driven through RADICAL-Pilot (paper §3.1,
 //! §5.3–5.4). The pilot abstraction is what Hydra's HPC Manager connector
-//! targets: one batch *pilot job* acquires N whole nodes, waits in the
+//! targets: a batch *pilot job* acquires N whole nodes, waits in the
 //! queue, boots an agent, and then executes bulk-submitted tasks on the
-//! pilot's cores without further queue round-trips.
+//! pilot's cores without further queue round-trips. The paper's strong/
+//! weak-scaling runs acquire **concurrent** pilots; this module models
+//! both regimes:
 //!
-//! Model:
+//! * [`HpcSim`] — one pilot lifecycle. The serial reference path: kept
+//!   byte-for-byte stable, mirroring how `SchedulerKind::LinearScan`
+//!   anchors the Kubernetes scheduler (ISSUE 5).
+//! * [`MultiPilotSim`] — P concurrent pilots sharing one FIFO workload.
+//!   Each pilot draws its own queue wait and boots its own agent; each
+//!   task is placed on the **best-fit live pilot** (fewest free cores
+//!   that still fit) through the shared
+//!   [`CapacityIndex`](crate::sim::capacity::CapacityIndex), whose leaves
+//!   are per-pilot free cores — O(log P) per placement. With `P == 1`
+//!   the schedule degenerates to exactly the [`HpcSim`] schedule and the
+//!   [`HpcTaskRecord`]s are **byte-identical** (enforced by
+//!   `tests/pilot_equivalence.rs`).
+//!
+//! Shared model:
 //! * queue wait ~ lognormal(mean = `queue_wait_mean_s`, cv = `queue_wait_cv`)
 //!   — the paper reports "short and consistent queuing time" for its runs.
 //! * agent boot is a constant `pilot_boot_s`.
-//! * the agent launches tasks through a serialized spawner costing
-//!   `task_launch_s` per task (the RADICAL-Pilot executor), onto free cores
-//!   greedily in FIFO order; a task holds `cores` cores for its duration.
+//! * each agent launches tasks through a serialized spawner costing
+//!   `task_launch_s` per task (the RADICAL-Pilot executor), onto free
+//!   cores greedily in FIFO order; a task holds `cores` cores for its
+//!   duration. A task wider than every pilot clamps to the widest pilot
+//!   (single-pilot: to that pilot's width) instead of deadlocking the
+//!   FIFO head.
 //! * payload durations scale with the platform's `cpu_speed` (bare-metal
 //!   EPYC on Bridges2: the Fig 5 advantage).
 //!
 //! # Scheduling cost (§Perf / DESIGN-note)
 //!
-//! The pilot is the HPC analogue of the Kubernetes free-capacity index:
-//! the pilot's capacity is a *single* scalar (free cores across whole
-//! nodes), so the index degenerates to a counter plus a FIFO cursor into
-//! the submitted task list. [`PilotAgent`] keeps both; every simulator
-//! event (agent-ready, launcher-free, task-done) is **O(1)** — there is no
-//! per-event rescan of the task list, and a run processes O(T) events for
-//! T tasks.
+//! In the single-pilot sim the capacity index degenerates to a counter
+//! plus a FIFO cursor; the internal `PilotAgent` keeps both, making every
+//! event (agent-ready, launcher-free, task-done) **O(1)**. The multi-pilot sim
+//! keeps the FIFO cursor global and pays O(log P) per event for the
+//! index query; both process O(T) events for T tasks. Launcher-busy
+//! pilots are masked out of the index (leaf zeroed) so one query answers
+//! "live, launcher idle, and fits" at once.
 
+use super::capacity::{Cap, CapacityIndex};
 use super::event::{secs, to_secs, EventQueue};
 use super::provider::PlatformProfile;
 use crate::util::prng::Prng;
@@ -140,6 +159,10 @@ impl PilotAgent {
 }
 
 /// Simulate one pilot lifecycle executing `tasks`.
+///
+/// The serial reference implementation: [`MultiPilotSim`] with one pilot
+/// must reproduce this schedule byte for byte (the HPC analogue of
+/// `SchedulerKind::LinearScan`).
 pub struct HpcSim {
     profile: PlatformProfile,
     pilot: PilotSpec,
@@ -217,6 +240,338 @@ impl HpcSim {
             tasks: records.into_iter().flatten().collect(),
             events_processed: q.processed(),
             peak_cores_busy: agent.peak,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-pilot scheduling on the shared capacity index (ISSUE 5 tentpole)
+// ---------------------------------------------------------------------------
+
+/// Per-pilot outcome of a [`MultiPilotSim`] run: the lifecycle timings
+/// plus the utilization accounting the HPC Manager reports per pilot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PilotStat {
+    pub queue_wait_s: f64,
+    pub agent_ready_s: f64,
+    pub total_cores: u32,
+    /// Tasks this pilot launched.
+    pub tasks_executed: usize,
+    pub peak_cores_busy: u32,
+    /// Core-seconds of payload executed on this pilot (Σ cores × runtime,
+    /// launch overhead excluded).
+    pub busy_core_s: f64,
+    /// `busy_core_s` over the pilot's live capacity
+    /// (`total_cores × (makespan − agent_ready)`); 0 for a pilot that
+    /// never went live before the run ended.
+    pub utilization: f64,
+}
+
+/// Result of simulating P concurrent pilots over one bulk workload.
+///
+/// `tasks` carries the same [`HpcTaskRecord`]s as [`HpcReport`] — in
+/// submission order, byte-identical to the serial reference when
+/// `P == 1` — with the pilot assignment alongside in `pilot_of`.
+#[derive(Debug, Clone)]
+pub struct MultiPilotReport {
+    /// Makespan from submission to the last task completion (for an
+    /// empty workload: until the last pilot is staged). A pilot whose
+    /// queue wait elapses after the workload has drained does not extend
+    /// the makespan.
+    pub makespan_s: f64,
+    /// Per-task records, index-aligned with the submitted task list.
+    pub tasks: Vec<HpcTaskRecord>,
+    /// Pilot that executed each task, index-aligned with `tasks`.
+    pub pilot_of: Vec<u32>,
+    /// Per-pilot lifecycle + utilization stats, in pilot order.
+    pub pilots: Vec<PilotStat>,
+    pub events_processed: u64,
+}
+
+impl MultiPilotReport {
+    /// Earliest agent-ready instant across pilots — the moment execution
+    /// could first start (what the single-pilot `agent_ready_s` was; the
+    /// workflow engine charges this one-off cost on the first wave only).
+    pub fn first_agent_ready_s(&self) -> f64 {
+        self.pilots.iter().map(|p| p.agent_ready_s).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Total cores across all pilots.
+    pub fn total_cores(&self) -> u32 {
+        self.pilots.iter().map(|p| p.total_cores).sum()
+    }
+}
+
+enum MpEv {
+    /// A pilot's batch job started and its agent finished booting.
+    PilotReady { pilot: usize },
+    /// A pilot's serialized launcher finished spawning a task.
+    LauncherFree { pilot: usize },
+    /// A task completed on a pilot.
+    TaskDone { pilot: usize, idx: usize },
+}
+
+/// Run-time state of one staged pilot.
+struct PilotState {
+    total_cores: u32,
+    free_cores: u32,
+    live: bool,
+    launcher_free: bool,
+    peak: u32,
+    tasks_executed: usize,
+    busy_core_s: f64,
+    queue_wait_s: f64,
+    agent_ready_s: f64,
+}
+
+/// Simulate P concurrent pilots executing one bulk-submitted workload.
+///
+/// Pilots stage independently (per-pilot queue wait + agent boot drawn
+/// from the same model as [`HpcSim`], in pilot order — so with one pilot
+/// the PRNG stream is consumed identically). Tasks launch in FIFO order;
+/// the head task goes to the best-fit live pilot found through the
+/// shared capacity index, or waits (head-of-line) until one fits.
+///
+/// `run` consumes the staged workload; construct a fresh sim per run.
+pub struct MultiPilotSim {
+    profile: PlatformProfile,
+    specs: Vec<PilotSpec>,
+    tasks: Vec<HpcTaskSpec>,
+    rng: Prng,
+    failure_rate: f64,
+    // Run state (populated by `run`, queryable afterwards).
+    pilots: Vec<PilotState>,
+    index: CapacityIndex,
+    next: usize,
+    widest: u32,
+}
+
+impl MultiPilotSim {
+    /// Heterogeneous pilots: one entry per pilot job to stage.
+    pub fn new(profile: PlatformProfile, pilots: Vec<PilotSpec>, seed: u64) -> MultiPilotSim {
+        assert!(!pilots.is_empty(), "at least one pilot required");
+        MultiPilotSim {
+            profile,
+            specs: pilots,
+            tasks: Vec::new(),
+            rng: Prng::new(seed),
+            failure_rate: 0.0,
+            pilots: Vec::new(),
+            index: CapacityIndex::zeroed(0),
+            next: 0,
+            widest: 0,
+        }
+    }
+
+    /// `count` identical pilots (the common weak-scaling shape).
+    pub fn uniform(
+        profile: PlatformProfile,
+        pilot: PilotSpec,
+        count: u32,
+        seed: u64,
+    ) -> MultiPilotSim {
+        assert!(count >= 1, "at least one pilot required");
+        MultiPilotSim::new(profile, vec![pilot; count as usize], seed)
+    }
+
+    /// Enable failure injection with per-task probability `p`.
+    pub fn with_failure_rate(mut self, p: f64) -> MultiPilotSim {
+        self.failure_rate = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Bulk-submit task descriptions (one bulk for the whole pilot fleet;
+    /// the connector shards the *transport*, not the schedule).
+    pub fn submit(&mut self, tasks: Vec<HpcTaskSpec>) {
+        self.tasks.extend(tasks);
+    }
+
+    /// Total free cores across pilots right now — after `run`, every
+    /// reservation must have been returned (the core-conservation
+    /// invariant surface for `tests/prop_invariants.rs`).
+    pub fn free_capacity(&self) -> u32 {
+        self.pilots.iter().map(|p| p.free_cores).sum()
+    }
+
+    /// Re-derive pilot `p`'s index leaf from its state: the leaf is the
+    /// pilot's free cores *plus an eligibility bias of one* while the
+    /// pilot is live with an idle launcher, and zero otherwise. The bias
+    /// keeps zero-core demands from matching masked pilots (queries add
+    /// one to the demand symmetrically), so a single O(log P) index query
+    /// answers "live ∧ launcher idle ∧ fits".
+    fn sync_slot(&mut self, p: usize) {
+        let st = &self.pilots[p];
+        let leaf = if st.live && st.launcher_free {
+            st.free_cores.saturating_add(1)
+        } else {
+            0
+        };
+        self.index.set(p, Cap::cores(leaf));
+    }
+
+    /// Launch FIFO-head tasks while a live, launcher-idle pilot fits the
+    /// head; stop on the first head that fits nowhere (head-of-line, as
+    /// in the serial reference) or when the workload is drained.
+    fn try_launch(
+        &mut self,
+        q: &mut EventQueue<MpEv>,
+        records: &mut [Option<HpcTaskRecord>],
+        pilot_of: &mut [u32],
+        fail_flags: &[bool],
+    ) {
+        while self.next < self.tasks.len() {
+            let t = self.tasks[self.next];
+            // Oversized tasks clamp to the widest pilot (the multi-pilot
+            // generalization of the serial path's clamp to pilot width).
+            let need = t.cores.min(self.widest);
+            let Some(slot) = self.index.best_fit(Cap::cores(need.saturating_add(1))) else {
+                return;
+            };
+            let pilot = slot as usize;
+            let idx = self.next;
+            self.next += 1;
+            let launch_done = to_secs(q.now()) + self.profile.task_launch_s;
+            let run_s = t.sleep_s + self.profile.payload_duration_s(t.work_s, need);
+            {
+                let st = &mut self.pilots[pilot];
+                st.free_cores -= need;
+                st.peak = st.peak.max(st.total_cores - st.free_cores);
+                st.launcher_free = false;
+                st.tasks_executed += 1;
+                st.busy_core_s += f64::from(need) * run_s;
+            }
+            self.sync_slot(pilot); // masked while the launcher spawns
+            records[idx] = Some(HpcTaskRecord {
+                task_id: t.task_id,
+                launched_s: launch_done,
+                finished_s: launch_done + run_s, // finalized again at TaskDone
+                failed: fail_flags[idx],
+            });
+            pilot_of[idx] = slot;
+            q.schedule_in(secs(self.profile.task_launch_s), MpEv::LauncherFree { pilot });
+            q.schedule_in(
+                secs(self.profile.task_launch_s + run_s),
+                MpEv::TaskDone { pilot, idx },
+            );
+        }
+    }
+
+    /// Stage the pilots, run the workload to quiescence, and report.
+    pub fn run(&mut self) -> MultiPilotReport {
+        let mut q: EventQueue<MpEv> = EventQueue::new();
+        let mut staged = Vec::with_capacity(self.specs.len());
+        for spec in &self.specs {
+            let total_cores = spec.cores(&self.profile);
+            assert!(total_cores > 0, "pilot must request at least one node");
+            // Pilot-order draws: with one pilot this consumes the PRNG
+            // exactly like the serial reference.
+            let queue_wait_s = if self.profile.queue_wait_mean_s > 0.0 {
+                self.rng
+                    .lognormal_mean_cv(self.profile.queue_wait_mean_s, self.profile.queue_wait_cv)
+            } else {
+                0.0
+            };
+            staged.push(PilotState {
+                total_cores,
+                free_cores: total_cores,
+                live: false,
+                launcher_free: false,
+                peak: 0,
+                tasks_executed: 0,
+                busy_core_s: 0.0,
+                queue_wait_s,
+                agent_ready_s: queue_wait_s + self.profile.pilot_boot_s,
+            });
+        }
+        self.pilots = staged;
+        for (p, st) in self.pilots.iter().enumerate() {
+            q.schedule_at(secs(st.agent_ready_s), MpEv::PilotReady { pilot: p });
+        }
+        self.widest = self.pilots.iter().map(|s| s.total_cores).max().unwrap_or(0);
+        self.index = CapacityIndex::zeroed(self.pilots.len());
+        self.next = 0;
+
+        let fail_flags: Vec<bool> = (0..self.tasks.len())
+            .map(|_| self.failure_rate > 0.0 && self.rng.bool_with_p(self.failure_rate))
+            .collect();
+        let mut records: Vec<Option<HpcTaskRecord>> = vec![None; self.tasks.len()];
+        let mut pilot_of: Vec<u32> = vec![0; self.tasks.len()];
+        // Last task-completion instant. The makespan ends here, not at the
+        // final queue event: a pilot whose queue wait elapses after the
+        // workload has drained must not inflate TTX (with one pilot the
+        // last event *is* the last TaskDone, so this stays bit-identical
+        // to the serial reference).
+        let mut last_done_s = 0.0f64;
+
+        while let Some((_, ev)) = q.pop() {
+            match ev {
+                MpEv::PilotReady { pilot } => {
+                    let st = &mut self.pilots[pilot];
+                    st.live = true;
+                    st.launcher_free = true;
+                    self.sync_slot(pilot);
+                    self.try_launch(&mut q, &mut records, &mut pilot_of, &fail_flags);
+                }
+                MpEv::LauncherFree { pilot } => {
+                    self.pilots[pilot].launcher_free = true;
+                    self.sync_slot(pilot);
+                    self.try_launch(&mut q, &mut records, &mut pilot_of, &fail_flags);
+                }
+                MpEv::TaskDone { pilot, idx } => {
+                    let need = self.tasks[idx].cores.min(self.widest);
+                    let st = &mut self.pilots[pilot];
+                    st.free_cores += need;
+                    debug_assert!(
+                        st.free_cores <= st.total_cores,
+                        "core conservation violated on pilot {pilot}"
+                    );
+                    self.sync_slot(pilot);
+                    let rec = records[idx].as_mut().expect("done task was launched");
+                    // Clamp against float rounding of the micros clock so
+                    // finished >= launched holds exactly.
+                    rec.finished_s = to_secs(q.now()).max(rec.launched_s);
+                    // Events pop in time order, so the final assignment is
+                    // the latest TaskDone (every launch's LauncherFree
+                    // precedes its TaskDone, so this is the last task
+                    // event overall).
+                    last_done_s = to_secs(q.now());
+                    self.try_launch(&mut q, &mut records, &mut pilot_of, &fail_flags);
+                }
+            }
+        }
+
+        // Empty workload: the run "ends" when the last pilot is staged,
+        // exactly as the serial reference reports for zero tasks.
+        let makespan_s = if self.tasks.is_empty() { to_secs(q.now()) } else { last_done_s };
+        let pilots = self
+            .pilots
+            .iter()
+            .map(|st| {
+                let window = (makespan_s - st.agent_ready_s).max(0.0);
+                let capacity = f64::from(st.total_cores) * window;
+                PilotStat {
+                    queue_wait_s: st.queue_wait_s,
+                    agent_ready_s: st.agent_ready_s,
+                    total_cores: st.total_cores,
+                    tasks_executed: st.tasks_executed,
+                    peak_cores_busy: st.peak,
+                    busy_core_s: st.busy_core_s,
+                    utilization: if capacity > 0.0 {
+                        (st.busy_core_s / capacity).min(1.0)
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect();
+        let tasks: Vec<HpcTaskRecord> = records.into_iter().flatten().collect();
+        debug_assert_eq!(tasks.len(), pilot_of.len(), "every submitted task must complete");
+        MultiPilotReport {
+            makespan_s,
+            tasks,
+            pilot_of,
+            pilots,
+            events_processed: q.processed(),
         }
     }
 }
@@ -322,5 +677,106 @@ mod tests {
             let r = run_tasks(tasks, 1, 11);
             assert_eq!(r.events_processed, 1 + 2 * n);
         }
+    }
+
+    // ---- multi-pilot (ISSUE 5 tentpole) ----------------------------------
+
+    fn run_multi(
+        tasks: Vec<HpcTaskSpec>,
+        nodes: u32,
+        pilots: u32,
+        seed: u64,
+    ) -> MultiPilotReport {
+        let mut sim = MultiPilotSim::uniform(b2(), PilotSpec { nodes }, pilots, seed);
+        sim.submit(tasks);
+        sim.run()
+    }
+
+    #[test]
+    fn single_pilot_reproduces_serial_reference() {
+        // The full-matrix equivalence lives in tests/pilot_equivalence.rs;
+        // this is the fast inline guard.
+        let tasks: Vec<_> = (0..200)
+            .map(|i| HpcTaskSpec {
+                task_id: i,
+                cores: 1 + (i as u32 % 5),
+                work_s: 3.0,
+                sleep_s: 0.0,
+            })
+            .collect();
+        let serial = run_tasks(tasks.clone(), 2, 42);
+        let multi = run_multi(tasks, 2, 1, 42);
+        assert_eq!(serial.tasks, multi.tasks);
+        assert_eq!(serial.events_processed, multi.events_processed);
+        assert_eq!(serial.makespan_s, multi.makespan_s);
+        assert_eq!(serial.queue_wait_s, multi.pilots[0].queue_wait_s);
+        assert_eq!(serial.agent_ready_s, multi.pilots[0].agent_ready_s);
+        assert_eq!(serial.peak_cores_busy, multi.pilots[0].peak_cores_busy);
+        assert!(multi.pilot_of.iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn more_pilots_is_faster_weak_scaling() {
+        // Core-bound workload: 4 concurrent pilots quadruple the fleet's
+        // cores and must beat one pilot despite four queue waits.
+        let mk = |pilots: u32| {
+            let tasks: Vec<_> = (0..512)
+                .map(|i| HpcTaskSpec { task_id: i, cores: 1, work_s: 2000.0, sleep_s: 0.0 })
+                .collect();
+            run_multi(tasks, 1, pilots, 7).makespan_s
+        };
+        let one = mk(1);
+        let four = mk(4);
+        assert!(four < one, "{four} !< {one}");
+    }
+
+    #[test]
+    fn every_pilot_contributes_under_load() {
+        // 800 long tasks: far more than the fleet can drain before the
+        // last pilot's queue wait elapses, so every pilot must launch.
+        let tasks: Vec<_> = (0..800)
+            .map(|i| HpcTaskSpec { task_id: i, cores: 4, work_s: 2000.0, sleep_s: 0.0 })
+            .collect();
+        let r = run_multi(tasks, 1, 4, 13);
+        assert_eq!(r.tasks.len(), 800);
+        assert_eq!(r.pilots.iter().map(|p| p.tasks_executed).sum::<usize>(), 800);
+        for (i, p) in r.pilots.iter().enumerate() {
+            assert!(p.tasks_executed > 0, "pilot {i} idle");
+            assert!(p.peak_cores_busy <= p.total_cores);
+            assert!((0.0..=1.0).contains(&p.utilization), "pilot {i}: {}", p.utilization);
+        }
+        // pilot_of is consistent with the per-pilot counts.
+        for (i, p) in r.pilots.iter().enumerate() {
+            let n = r.pilot_of.iter().filter(|&&x| x == i as u32).count();
+            assert_eq!(n, p.tasks_executed, "pilot {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_task_clamps_to_widest_pilot_and_lands_there() {
+        // Pilots of 1 and 2 nodes: a 300-core task clamps to 256 (the
+        // widest pilot) and can only run there.
+        let mut sim = MultiPilotSim::new(
+            b2(),
+            vec![PilotSpec { nodes: 1 }, PilotSpec { nodes: 2 }],
+            9,
+        );
+        sim.submit(vec![HpcTaskSpec { task_id: 0, cores: 300, work_s: 10.0, sleep_s: 0.0 }]);
+        let r = sim.run();
+        assert_eq!(r.tasks.len(), 1);
+        assert_eq!(r.pilot_of[0], 1, "must land on the 256-core pilot");
+        assert_eq!(r.pilots[1].peak_cores_busy, 256, "clamped to the widest width");
+        assert_eq!(sim.free_capacity(), 128 + 256, "all cores returned");
+    }
+
+    #[test]
+    fn multi_pilot_deterministic_per_seed() {
+        let t: Vec<_> = (0..300).map(HpcTaskSpec::noop).collect();
+        let a = run_multi(t.clone(), 1, 8, 21);
+        let b = run_multi(t, 1, 8, 21);
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.pilot_of, b.pilot_of);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.events_processed, b.events_processed);
     }
 }

@@ -4,11 +4,16 @@
 //! * [`event`] — discrete-event engine (virtual clock + ordered queue).
 //! * [`provider`] — calibrated per-platform profiles (JET2, CHI, AWS,
 //!   Azure, Bridges2).
+//! * [`capacity`] — shared segment-tree free-capacity index (per-node
+//!   leaves for the Kubernetes scheduler, per-pilot leaves for the HPC
+//!   multi-pilot scheduler).
 //! * [`kubernetes`] — cluster/pod lifecycle + scheduler (EKS/AKS stand-in).
-//! * [`hpc`] — batch queue + pilot agent (Bridges2 + RADICAL-Pilot stand-in).
+//! * [`hpc`] — batch queue + pilot agents, single- and multi-pilot
+//!   (Bridges2 + RADICAL-Pilot stand-in).
 //! * [`faas`] — function-as-a-service (cold/warm starts, concurrency cap).
 //! * [`vm`] — VM/cluster provisioning latencies.
 
+pub mod capacity;
 pub mod event;
 pub mod faas;
 pub mod hpc;

@@ -117,10 +117,17 @@ impl WorkflowEngine {
                 .map_err(|e| manager_err(&e))?;
             let r = mgr.execute(&tasks, registry).map_err(|e| manager_err(&e))?;
             ovh.accumulate(&r.metrics.ovh);
-            // The pilot is acquired once for the whole workflow run:
-            // charge queue wait + agent boot only on the first wave.
+            // The pilot fleet is acquired once for the whole workflow
+            // run: later waves drop the staging cost up to the earliest
+            // agent-ready (when execution could first start). With one
+            // pilot this removes the whole queue-wait + boot, as before;
+            // with several, the later waves still carry whatever part of
+            // the slower pilots' staging delayed their tasks — that skew
+            // is real schedule shape, not a fixed cost we can subtract.
             let adjusted = match r.detail.hpc_sim() {
-                Some(sim) if wave_idx > 0 => (r.metrics.ttx_s - sim.agent_ready_s).max(0.0),
+                Some(sim) if wave_idx > 0 => {
+                    (r.metrics.ttx_s - sim.first_agent_ready_s()).max(0.0)
+                }
                 _ => r.metrics.ttx_s,
             };
             wave_ttx.push(adjusted);

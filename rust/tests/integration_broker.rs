@@ -178,6 +178,66 @@ fn mixed_caas_hpc_faas_run_by_task_kind() {
 }
 
 #[test]
+fn mixed_run_with_multi_pilot_sharded_submission() {
+    // ISSUE 5 satellite: CaaS + HPC + FaaS end to end with pilots = 4.
+    // The HPC bulk payload is sharded across the pilot agents; the
+    // unified ManagerRun byte accounting must still reconcile exactly —
+    // with n tasks over k payloads: item bytes + (n - k) separators
+    // between items + 2k brackets = item_bytes + n + k — and the
+    // per-pilot utilization report must cover the whole slice.
+    let hydra = Hydra::builder()
+        .simulated_provider(ProviderId::Jetstream2)
+        .resource(ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 16))
+        .simulated_provider(ProviderId::Bridges2)
+        .resource(ResourceRequest::pilot(ProviderId::Bridges2, 1).with_pilots(4))
+        .simulated_provider(ProviderId::Aws)
+        .resource(ResourceRequest::faas(ProviderId::Aws, 32))
+        .seed(17)
+        .build()
+        .unwrap();
+    let mut tasks = containers(90);
+    tasks.extend((0..90).map(|i| {
+        TaskDescription::executable(format!("exe-{i}"), "noop")
+            .with_payload(Payload::Work(5.0))
+    }));
+    tasks.extend((0..90).map(|i| TaskDescription::function(format!("fn-{i}"), "pkg.handler")));
+    let run = hydra.submit(tasks, &BrokerPolicy::ByTaskKind).unwrap();
+    assert_eq!(run.aggregate.tasks, 270);
+    assert_eq!(run.reports.len(), 3);
+
+    // Byte accounting reconciles for every manager; exactly for HPC.
+    for report in run.reports.values() {
+        let r = report.run();
+        assert!(r.bulk_bytes > r.bytes_serialized, "{}", r.metrics.provider);
+    }
+    let hpc = run.reports[&ProviderId::Bridges2].run();
+    let (n, payloads) = (90usize, 4usize);
+    assert_eq!(
+        hpc.bulk_bytes,
+        hpc.bytes_serialized + n + payloads,
+        "sharded bulk framing must account every byte"
+    );
+
+    // The fleet executed the whole HPC slice, each task on one pilot.
+    let sim = hpc.detail.hpc_sim().unwrap();
+    assert_eq!(sim.pilots.len(), 4);
+    assert_eq!(sim.tasks.len(), n);
+    assert_eq!(sim.pilots.iter().map(|p| p.tasks_executed).sum::<usize>(), n);
+    let mut ids: Vec<u64> = sim.tasks.iter().map(|t| t.task_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "every HPC task completed exactly once");
+    for p in &sim.pilots {
+        assert!(p.peak_cores_busy <= p.total_cores);
+        assert!((0.0..=1.0).contains(&p.utilization));
+    }
+
+    assert!(hydra.registry().all_final());
+    let counts = hydra.registry().counts();
+    assert_eq!(counts.get(&TaskState::Done), Some(&270));
+}
+
+#[test]
 fn disk_vs_memory_build_modes_same_platform_outcome() {
     // The §6 ablation: identical platform-side results (same pods, same
     // seed); only the broker-side cost differs.

@@ -1,0 +1,191 @@
+//! ISSUE 5 acceptance: multi-pilot HPC scheduling is locked to the serial
+//! pilot-lifecycle reference.
+//!
+//! * `MultiPilotSim` with `pilots = 1` must produce **byte-identical**
+//!   `HpcTaskRecord`s to `HpcSim` (the serial reference kept the way
+//!   `SchedulerKind::LinearScan` anchors the Kubernetes scheduler) —
+//!   checked across 3 fixed seeds × task counts {0, 1, 4096}, down to
+//!   the f64 bit patterns.
+//! * For `pilots ∈ {2, 8}` the fleet must complete exactly the submitted
+//!   task set (same records per seed in any order — the runs themselves
+//!   are deterministic), with every task on exactly one pilot.
+//! * The production path (`HpcManager`, which always runs the multi-pilot
+//!   scheduler) must reproduce the reference records end to end when
+//!   `pilots = 1`.
+
+use hydra::api::task::{Payload, TaskDescription, TaskId};
+use hydra::api::{ProviderConfig, ResourceRequest};
+use hydra::broker::hpc::{pilot_specs, HpcManager};
+use hydra::broker::state::TaskRegistry;
+use hydra::sim::hpc::{HpcSim, HpcTaskSpec, MultiPilotSim, PilotSpec};
+use hydra::sim::provider::{PlatformProfile, ProviderId};
+
+const SEEDS: [u64; 3] = [11, 0xBEEF, 0x5EED5];
+const COUNTS: [usize; 3] = [0, 1, 4096];
+
+fn b2() -> PlatformProfile {
+    PlatformProfile::of(ProviderId::Bridges2)
+}
+
+/// Heterogeneous pilot workload: mixed widths (including oversized tasks
+/// that exercise the clamp), payload kinds, and durations.
+fn workload(n: usize) -> Vec<HpcTaskSpec> {
+    (0..n)
+        .map(|i| {
+            let cores = match i % 7 {
+                0 => 1,
+                1 => 4,
+                2 => 16,
+                3 => 32,
+                4 => 128,
+                5 => 300, // wider than any pilot in these tests: clamps
+                _ => 2,
+            };
+            HpcTaskSpec {
+                task_id: i as u64,
+                cores,
+                work_s: (i % 5) as f64 * 7.5,
+                sleep_s: if i % 3 == 0 { 0.25 } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+fn run_serial(tasks: Vec<HpcTaskSpec>, nodes: u32, seed: u64) -> hydra::sim::hpc::HpcReport {
+    let mut sim = HpcSim::new(b2(), PilotSpec { nodes }, seed);
+    sim.submit(tasks);
+    sim.run()
+}
+
+fn run_multi(
+    tasks: Vec<HpcTaskSpec>,
+    nodes: u32,
+    pilots: u32,
+    seed: u64,
+) -> hydra::sim::hpc::MultiPilotReport {
+    let mut sim = MultiPilotSim::uniform(b2(), PilotSpec { nodes }, pilots, seed);
+    sim.submit(tasks);
+    sim.run()
+}
+
+#[test]
+fn pilots_1_matches_serial_reference_byte_for_byte() {
+    for &seed in &SEEDS {
+        for &n in &COUNTS {
+            let tasks = workload(n);
+            let serial = run_serial(tasks.clone(), 2, seed);
+            let multi = run_multi(tasks, 2, 1, seed);
+            assert_eq!(serial.tasks.len(), n, "seed={seed} n={n}");
+            assert_eq!(serial.tasks, multi.tasks, "seed={seed} n={n}");
+            // Exact equality above already forbids -0.0/0.0 and NaN
+            // mismatches for these records; the bit-pattern check makes
+            // "byte-identical" literal.
+            for (a, b) in serial.tasks.iter().zip(&multi.tasks) {
+                assert_eq!(a.task_id, b.task_id);
+                assert_eq!(a.launched_s.to_bits(), b.launched_s.to_bits());
+                assert_eq!(a.finished_s.to_bits(), b.finished_s.to_bits());
+                assert_eq!(a.failed, b.failed);
+            }
+            assert_eq!(serial.makespan_s.to_bits(), multi.makespan_s.to_bits());
+            assert_eq!(serial.events_processed, multi.events_processed);
+            assert_eq!(multi.pilots.len(), 1);
+            assert_eq!(
+                serial.queue_wait_s.to_bits(),
+                multi.pilots[0].queue_wait_s.to_bits()
+            );
+            assert_eq!(
+                serial.agent_ready_s.to_bits(),
+                multi.pilots[0].agent_ready_s.to_bits()
+            );
+            assert_eq!(serial.peak_cores_busy, multi.pilots[0].peak_cores_busy);
+        }
+    }
+}
+
+#[test]
+fn pilots_1_matches_serial_reference_under_failure_injection() {
+    // The failure-flag PRNG draws must line up too.
+    for &seed in &SEEDS {
+        let tasks = workload(500);
+        let mut a = HpcSim::new(b2(), PilotSpec { nodes: 1 }, seed).with_failure_rate(0.07);
+        a.submit(tasks.clone());
+        let serial = a.run();
+        let mut b = MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, 1, seed)
+            .with_failure_rate(0.07);
+        b.submit(tasks);
+        let multi = b.run();
+        assert_eq!(serial.tasks, multi.tasks, "seed={seed}");
+        assert!(serial.tasks.iter().any(|t| t.failed), "injection must fire");
+    }
+}
+
+#[test]
+fn multi_pilot_completes_the_same_records_any_order() {
+    for pilots in [2u32, 8] {
+        for &seed in &SEEDS {
+            let n = 4096;
+            let tasks = workload(n);
+            let multi = run_multi(tasks.clone(), 1, pilots, seed);
+
+            // Completion-set equality against the submitted set: every
+            // task appears exactly once, none invented.
+            let mut ids: Vec<u64> = multi.tasks.iter().map(|t| t.task_id).collect();
+            ids.sort_unstable();
+            let want: Vec<u64> = (0..n as u64).collect();
+            assert_eq!(ids, want, "pilots={pilots} seed={seed}");
+
+            // ...and against the serial reference's completion set.
+            let serial = run_serial(tasks.clone(), 1, seed);
+            let mut serial_ids: Vec<u64> = serial.tasks.iter().map(|t| t.task_id).collect();
+            serial_ids.sort_unstable();
+            assert_eq!(ids, serial_ids, "pilots={pilots} seed={seed}");
+
+            // Records are internally consistent and deterministic.
+            for t in &multi.tasks {
+                assert!(t.finished_s >= t.launched_s);
+                assert!(t.launched_s >= multi.first_agent_ready_s());
+            }
+            assert_eq!(multi.pilot_of.len(), n);
+            assert!(multi.pilot_of.iter().all(|&p| (p as usize) < pilots as usize));
+            let again = run_multi(tasks, 1, pilots, seed);
+            assert_eq!(multi.tasks, again.tasks, "pilots={pilots} seed={seed}");
+            assert_eq!(multi.pilot_of, again.pilot_of, "pilots={pilots} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn manager_pilots_1_reproduces_the_reference_end_to_end() {
+    // The production path: HpcManager always drives the multi-pilot
+    // scheduler; with pilots = 1 its records must be the serial
+    // reference's, byte for byte, through validation, sharded
+    // serialization, and submission.
+    let seed = 11u64;
+    let reg = TaskRegistry::new();
+    let tasks: Vec<(TaskId, TaskDescription)> = (0..600)
+        .map(|i| {
+            let d = TaskDescription::executable(format!("e{i}"), "/bin/step")
+                .with_cpus(1 + (i as u32 % 8))
+                .with_payload(match i % 3 {
+                    0 => Payload::Noop,
+                    1 => Payload::Sleep(1.5),
+                    _ => Payload::Work(40.0),
+                });
+            (reg.register(d.clone()), d)
+        })
+        .collect();
+    let manager = HpcManager::new(
+        ProviderConfig::simulated(ProviderId::Bridges2),
+        ResourceRequest::pilot(ProviderId::Bridges2, 2),
+        seed,
+    )
+    .unwrap();
+    let run = manager.execute(&tasks, &reg).unwrap();
+    let got = &run.detail.hpc_sim().unwrap().tasks;
+
+    let mut reference = HpcSim::new(b2(), PilotSpec { nodes: 2 }, seed);
+    reference.submit(pilot_specs(&tasks));
+    let want = reference.run().tasks;
+    assert_eq!(got, &want, "manager path diverged from the serial reference");
+    assert!(reg.all_final());
+}
