@@ -4,8 +4,11 @@
 //! users pick the service type (container service vs batch system), the
 //! amount of resources, and service-specific properties.
 
+use crate::sim::hpc::PilotSpec;
 use crate::sim::kubernetes::ClusterSpec;
 use crate::sim::provider::{PlatformKind, PlatformProfile, ProviderId};
+
+pub use crate::sim::hpc::FaultSpec;
 
 /// The service level the resources are acquired through.
 ///
@@ -44,6 +47,17 @@ pub struct ResourceRequest {
     /// workload across all of them on the shared capacity index, so
     /// `nodes` is the size of *each* pilot, not of the fleet.
     pub pilots: u32,
+    /// Per-pilot node widths for a heterogeneous fleet (Batch only).
+    /// Empty: every pilot gets `nodes` nodes. Non-empty: must have one
+    /// entry per pilot, each >= 1 (see [`ResourceRequest::with_pilot_nodes`]).
+    pub pilot_nodes: Vec<u32>,
+    /// Pilot-level fault model (Batch only; must stay
+    /// [`FaultSpec::none`] elsewhere). Validated by
+    /// [`FaultSpec::validate`].
+    pub fault: FaultSpec,
+    /// Per-task failure-injection probability in [0, 1] (the knob the
+    /// CaaS manager already had, now uniform across services).
+    pub task_failure_rate: f64,
 }
 
 impl ResourceRequest {
@@ -58,6 +72,9 @@ impl ResourceRequest {
             mem_mb_per_node: 4096 * vcpus_per_node as u64,
             concurrency: 0,
             pilots: 1,
+            pilot_nodes: Vec::new(),
+            fault: FaultSpec::none(),
+            task_failure_rate: 0.0,
         }
     }
 
@@ -80,6 +97,9 @@ impl ResourceRequest {
             mem_mb_per_node: 2048 * profile.cores_per_node as u64,
             concurrency: 0,
             pilots,
+            pilot_nodes: Vec::new(),
+            fault: FaultSpec::none(),
+            task_failure_rate: 0.0,
         }
     }
 
@@ -98,6 +118,9 @@ impl ResourceRequest {
             mem_mb_per_node: 2048,
             concurrency,
             pilots: 1,
+            pilot_nodes: Vec::new(),
+            fault: FaultSpec::none(),
+            task_failure_rate: 0.0,
         }
     }
 
@@ -116,6 +139,40 @@ impl ResourceRequest {
     pub fn with_mem_mb_per_node(mut self, mem: u64) -> Self {
         self.mem_mb_per_node = mem;
         self
+    }
+
+    /// Heterogeneous fleet: one pilot per entry, each `widths[i]` whole
+    /// nodes (Batch requests). Overrides the uniform `nodes × pilots`
+    /// shape — `pilots` is set to the fleet size and `nodes` to the
+    /// widest pilot so the uniform accessors stay meaningful.
+    pub fn with_pilot_nodes(mut self, widths: &[u32]) -> Self {
+        self.pilot_nodes = widths.to_vec();
+        self.pilots = widths.len() as u32;
+        self.nodes = widths.iter().copied().max().unwrap_or(self.nodes);
+        self
+    }
+
+    /// Pilot-level fault model (Batch requests; see [`FaultSpec`]).
+    pub fn with_faults(mut self, fault: FaultSpec) -> Self {
+        self.fault = fault;
+        self
+    }
+
+    /// Per-task failure-injection probability in [0, 1].
+    pub fn with_task_failure_rate(mut self, p: f64) -> Self {
+        self.task_failure_rate = p;
+        self
+    }
+
+    /// The pilot fleet this request stages: one [`PilotSpec`] per pilot,
+    /// heterogeneous when `pilot_nodes` is set, else `pilots` uniform
+    /// pilots of `nodes` nodes each.
+    pub fn pilot_fleet(&self) -> Vec<PilotSpec> {
+        if self.pilot_nodes.is_empty() {
+            vec![PilotSpec { nodes: self.nodes }; self.pilots as usize]
+        } else {
+            self.pilot_nodes.iter().map(|&nodes| PilotSpec { nodes }).collect()
+        }
     }
 
     pub fn total_vcpus(&self) -> u32 {
@@ -159,8 +216,47 @@ impl ResourceRequest {
             if self.pilots == 0 {
                 return Err(format!("{}: pilots must be >= 1", self.provider));
             }
-        } else if self.pilots != 1 {
-            return Err(format!("{}: pilots apply to batch resources only", self.provider));
+            if !self.pilot_nodes.is_empty() {
+                if self.pilot_nodes.len() != self.pilots as usize {
+                    return Err(format!(
+                        "{}: pilot_nodes has {} entries for {} pilots",
+                        self.provider,
+                        self.pilot_nodes.len(),
+                        self.pilots
+                    ));
+                }
+                if self.pilot_nodes.iter().any(|&w| w == 0) {
+                    return Err(format!(
+                        "{}: every pilot_nodes width must be >= 1",
+                        self.provider
+                    ));
+                }
+            }
+            self.fault
+                .validate()
+                .map_err(|e| format!("{}: invalid fault spec: {e}", self.provider))?;
+        } else {
+            if self.pilots != 1 {
+                return Err(format!("{}: pilots apply to batch resources only", self.provider));
+            }
+            if !self.pilot_nodes.is_empty() {
+                return Err(format!(
+                    "{}: pilot_nodes applies to batch resources only",
+                    self.provider
+                ));
+            }
+            if !self.fault.is_none() {
+                return Err(format!(
+                    "{}: pilot fault model applies to batch resources only",
+                    self.provider
+                ));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.task_failure_rate) {
+            return Err(format!(
+                "{}: task_failure_rate must be in [0, 1], got {}",
+                self.provider, self.task_failure_rate
+            ));
         }
         Ok(())
     }
@@ -212,6 +308,77 @@ mod tests {
         assert!(k.validate().is_err());
         let f = ResourceRequest::faas(ProviderId::Aws, 16).with_pilots(3);
         assert!(f.validate().is_err());
+    }
+
+    #[test]
+    fn heterogeneous_pilot_nodes_validate_and_build_the_fleet() {
+        let r = ResourceRequest::pilot(ProviderId::Bridges2, 1).with_pilot_nodes(&[2, 4, 8]);
+        assert_eq!(r.pilots, 3);
+        assert_eq!(r.nodes, 8, "uniform accessors track the widest pilot");
+        assert!(r.validate().is_ok());
+        let fleet = r.pilot_fleet();
+        assert_eq!(fleet.iter().map(|p| p.nodes).collect::<Vec<_>>(), vec![2, 4, 8]);
+
+        // The uniform shape is unchanged.
+        let u = ResourceRequest::hpc(ProviderId::Bridges2, 2, 4);
+        assert_eq!(u.pilot_fleet().len(), 4);
+        assert!(u.pilot_fleet().iter().all(|p| p.nodes == 2));
+
+        // Mismatched length, zero widths, and non-batch use are rejected.
+        let mut bad = ResourceRequest::pilot(ProviderId::Bridges2, 1).with_pilot_nodes(&[2, 4]);
+        bad.pilots = 3;
+        assert!(bad.validate().is_err());
+        assert!(ResourceRequest::pilot(ProviderId::Bridges2, 1)
+            .with_pilot_nodes(&[2, 0])
+            .validate()
+            .is_err());
+        let mut k = ResourceRequest::kubernetes(ProviderId::Aws, 1, 8);
+        k.pilot_nodes = vec![1];
+        assert!(k.validate().is_err());
+    }
+
+    #[test]
+    fn fault_spec_and_failure_rate_ranges_validated() {
+        let ok = ResourceRequest::hpc(ProviderId::Bridges2, 1, 2).with_faults(FaultSpec {
+            walltime_s: 3600.0,
+            mtbf_s: 900.0,
+            materialization_failure_p: 0.05,
+            retry_budget: 2,
+            injected_kill: None,
+        });
+        assert!(ok.validate().is_ok());
+
+        let mut bad = ok.clone();
+        bad.fault.materialization_failure_p = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.fault.walltime_s = -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.fault.mtbf_s = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = ok.clone();
+        bad.fault.injected_kill = Some((0, f64::INFINITY));
+        assert!(bad.validate().is_err());
+
+        // Fault models are batch-only.
+        let k = ResourceRequest::kubernetes(ProviderId::Aws, 1, 8)
+            .with_faults(FaultSpec { mtbf_s: 100.0, ..FaultSpec::none() });
+        assert!(k.validate().is_err());
+
+        // task_failure_rate is range-checked on every service.
+        assert!(ResourceRequest::kubernetes(ProviderId::Aws, 1, 8)
+            .with_task_failure_rate(0.2)
+            .validate()
+            .is_ok());
+        assert!(ResourceRequest::hpc(ProviderId::Bridges2, 1, 1)
+            .with_task_failure_rate(1.2)
+            .validate()
+            .is_err());
+        assert!(ResourceRequest::hpc(ProviderId::Bridges2, 1, 1)
+            .with_task_failure_rate(-0.1)
+            .validate()
+            .is_err());
     }
 
     #[test]

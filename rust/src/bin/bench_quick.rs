@@ -17,6 +17,10 @@
 //!   Bridges2 pilots** (ISSUE 5: per-pilot sharded bulk submission +
 //!   capacity-index placement), with a cross-check that the 4-pilot run
 //!   completes exactly the task set the single-pilot reference completes.
+//!   `exp_hpc_faulty_4k` re-runs that shape with pilot 2 killed 5 s
+//!   after its agent materializes (ISSUE 6: fault-tolerant fleets),
+//!   cross-checking that the survivors re-run the dead pilot's tasks and
+//!   complete exactly the healthy run's task set.
 //! * **serialize microbench** — threads=1 vs threads=N manifest
 //!   serialization + bulk framing on the 4K-task SCPP point (ISSUE 3
 //!   tentpole), with a byte-identity cross-check on the framed payload.
@@ -25,6 +29,7 @@
 //!   linear scan, with the speedup and a determinism cross-check
 //!   (identical `TaskRecord`s from both schedulers).
 
+use hydra::api::resource::FaultSpec;
 use hydra::api::task::TaskId;
 use hydra::api::{ResourceRequest, TaskDescription};
 use hydra::broker::partitioner::Partitioner;
@@ -189,6 +194,66 @@ fn hpc_completed_ids(pilots: u32, seed: u64) -> Vec<u64> {
     ids
 }
 
+/// ISSUE 6: the faulty HPC configuration — same 4K-executable shape as
+/// `exp_hpc_multipilot_4k` on 4 pilots, but pilot 2 is killed 5 s after
+/// its agent materializes (default retry budget). Survivors must re-run
+/// the dead pilot's tasks, so the completion set matches the healthy
+/// run's exactly.
+fn hpc_faulty_broker(seed: u64) -> Hydra {
+    Hydra::builder()
+        .seed(seed)
+        .simulated_provider(ProviderId::Bridges2)
+        .resource(
+            ResourceRequest::hpc(ProviderId::Bridges2, 1, 4)
+                .with_faults(FaultSpec { injected_kill: Some((2, 5.0)), ..FaultSpec::none() }),
+        )
+        .build()
+        .expect("simulated providers must build")
+}
+
+fn run_hpc_faulty_point(name: &'static str) -> Point {
+    measure_point(name, hpc_faulty_broker, hpc_multipilot_tasks, &BrokerPolicy::RoundRobin)
+}
+
+/// Fault accounting of one faulty run at a fixed seed, for the
+/// completion-set cross-check against the healthy pilots=4 run.
+struct FaultCheck {
+    completed: Vec<u64>,
+    died: Vec<usize>,
+    requeued: usize,
+    retried: usize,
+    retry_waves: usize,
+    retry_bulk_bytes: usize,
+    abandoned: usize,
+}
+
+fn hpc_faulty_check(seed: u64) -> FaultCheck {
+    let hydra = hpc_faulty_broker(seed);
+    let run = hydra
+        .submit(hpc_multipilot_tasks(), &BrokerPolicy::RoundRobin)
+        .expect("faulty hpc point must broker");
+    let report = run.reports.values().next().expect("one provider");
+    let faults = report.run().faults;
+    let sim = report.run().detail.hpc_sim().expect("hpc detail");
+    let mut completed: Vec<u64> = sim.tasks.iter().map(|t| t.task_id).collect();
+    completed.sort_unstable();
+    FaultCheck {
+        completed,
+        died: sim
+            .pilots
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.died_at.is_some())
+            .map(|(i, _)| i)
+            .collect(),
+        requeued: sim.pilots.iter().map(|p| p.tasks_requeued).sum(),
+        retried: faults.retried,
+        retry_waves: faults.retry_waves,
+        retry_bulk_bytes: faults.retry_bulk_bytes,
+        abandoned: faults.abandoned,
+    }
+}
+
 /// ISSUE 3 tentpole row: threads=1 vs threads=N manifest serialization +
 /// bulk framing for the 4K-task SCPP point (the serialization-heaviest
 /// quick point: one manifest per task). Best-of-5 per configuration;
@@ -314,6 +379,7 @@ fn main() {
         run_point("exp2_clouds_4k", &ProviderId::CLOUDS, PartitionModel::Mcpp { max_cpp: 16 }),
         run_mixed_point("exp_faas_4k"),
         run_hpc_multipilot_point("exp_hpc_multipilot_4k", 4),
+        run_hpc_faulty_point("exp_hpc_faulty_4k"),
     ];
     for p in &points {
         println!(
@@ -341,6 +407,25 @@ fn main() {
         "exp_hpc_multipilot_4k: pilots=4 completes the same {POINT_TASKS}-task set as \
          pilots=1 (checked at seed {:#x})",
         SEEDS[0]
+    );
+
+    // ISSUE 6 acceptance: kill pilot 2 five seconds after its agent
+    // comes up; the three survivors must complete exactly the healthy
+    // run's task set — nothing duplicated, nothing abandoned.
+    let fault = hpc_faulty_check(SEEDS[0]);
+    assert_eq!(fault.died, vec![2], "exactly the injected pilot must die");
+    assert!(fault.requeued >= 1, "the dead pilot must hand at least one task back");
+    assert_eq!(fault.retried, fault.requeued, "retry accounting out of sync with the sim");
+    assert_eq!(fault.abandoned, 0, "the default retry budget must absorb one pilot kill");
+    assert!(fault.retry_bulk_bytes > 0, "retry waves must account transport bytes");
+    assert_eq!(
+        fault.completed, four_pilots,
+        "faulty run lost or duplicated tasks vs the healthy pilots=4 run"
+    );
+    println!(
+        "exp_hpc_faulty_4k: pilot 2 killed mid-run, {} tasks re-queued over {} wave(s) \
+         ({} B resubmitted); completion set matches the healthy run (seed {:#x})",
+        fault.requeued, fault.retry_waves, fault.retry_bulk_bytes, SEEDS[0]
     );
 
     println!("\n--- serialize microbench ({POINT_TASKS} tasks, SCPP, best of 5) ---");
@@ -403,6 +488,20 @@ fn main() {
                 .set("tasks", POINT_TASKS)
                 .set("pilots", 4u64)
                 .set("seed", SEEDS[0])
+                .set("completion_set_identical", true),
+        )
+        .set(
+            "hpc_fault_check",
+            Json::obj()
+                .set("tasks", POINT_TASKS)
+                .set("pilots", 4u64)
+                .set("killed_pilot", 2u64)
+                .set("kill_after_agent_ready_s", 5.0)
+                .set("seed", SEEDS[0])
+                .set("tasks_requeued", fault.requeued)
+                .set("retry_waves", fault.retry_waves)
+                .set("retry_bulk_bytes", fault.retry_bulk_bytes)
+                .set("abandoned", fault.abandoned)
                 .set("completion_set_identical", true),
         )
         .set(

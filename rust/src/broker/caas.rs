@@ -22,7 +22,7 @@ use crate::api::resource::ResourceRequest;
 use crate::api::task::{TaskDescription, TaskId, TaskState};
 use crate::api::ProviderConfig;
 use crate::broker::data::submit_bulk;
-use crate::broker::manager::{ManagerError, ManagerRun, RunDetail};
+use crate::broker::manager::{FaultTally, ManagerError, ManagerRun, RunDetail};
 use crate::broker::partitioner::{PartitionError, Partitioner, PodBuildMode, PreparedWorkload};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
@@ -54,13 +54,14 @@ impl CaasManager {
         seed: u64,
     ) -> Result<CaasManager, ManagerError> {
         crate::broker::manager::validate_binding(&config, &resource)?;
+        let failure_rate = resource.task_failure_rate;
         Ok(CaasManager {
             config,
             resource,
             partitioner,
             seed,
             cancel_on_failure: false,
-            failure_rate: 0.0,
+            failure_rate,
         })
     }
 
@@ -210,6 +211,8 @@ impl CaasManager {
             metrics,
             bytes_serialized,
             bulk_bytes: bulk_len,
+            // No pilot fleet on the CaaS path: only task-level failures.
+            faults: FaultTally { failed: report.failed_tasks, ..FaultTally::default() },
             detail: RunDetail::Caas { sim: report, provision: self.provision() },
         })
     }

@@ -16,7 +16,7 @@ use crate::broker::data::{
     expected_framed_len, frame_bulk, serialize_sharded, submit_bulk, ManifestShard,
     SerializeOptions,
 };
-use crate::broker::manager::{ManagerError, ManagerRun, RunDetail};
+use crate::broker::manager::{FaultTally, ManagerError, ManagerRun, RunDetail};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
 use crate::sim::faas::{FaasSim, FaasSpec, Invocation};
@@ -158,6 +158,9 @@ impl FaasManager {
             metrics,
             bytes_serialized,
             bulk_bytes,
+            // The simulated function service retries internally; no
+            // fault accounting surfaces yet.
+            faults: FaultTally::default(),
             detail: RunDetail::Faas { sim: report },
         })
     }

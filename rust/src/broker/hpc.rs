@@ -18,6 +18,17 @@
 //! (`tests/pilot_equivalence.rs`). Per-pilot utilization is reported in
 //! `RunDetail::Hpc`.
 //!
+//! Fault tolerance (ISSUE 6): the resource request can carry a
+//! [`FaultSpec`](crate::api::resource::FaultSpec) — pilot walltime, MTBF,
+//! materialization-failure probability, retry budget. Dead pilots roll
+//! their in-flight tasks back to the FIFO head; each re-queue wave is
+//! **resubmitted over the transport** (one framed `[dict,...]` payload
+//! per wave, charged to `FaultTally::retry_bulk_bytes`), tasks whose
+//! retry budget is exhausted are transitioned to `Failed` as abandoned,
+//! and the unified run surfaces failed/retried/abandoned counts in
+//! `ManagerRun::faults`. A heterogeneous fleet
+//! (`ResourceRequest::with_pilot_nodes`) stages one pilot per width.
+//!
 //! Implements the open manager interface (`broker::manager`): built
 //! through `ManagerFactory`, reporting the unified `ManagerRun` with the
 //! pilot-fleet report in `RunDetail::Hpc`.
@@ -29,10 +40,10 @@ use crate::broker::data::{
     expected_framed_len, frame_bulk, serialize_sharded, shard_ranges, submit_bulk,
     ManifestShard, SerializeOptions,
 };
-use crate::broker::manager::{ManagerError, ManagerRun, RunDetail};
+use crate::broker::manager::{FaultTally, ManagerError, ManagerRun, RunDetail};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
-use crate::sim::hpc::{HpcTaskSpec, MultiPilotSim, PilotSpec};
+use crate::sim::hpc::{HpcTaskSpec, MultiPilotSim};
 use crate::util::json::Json;
 use crate::util::Stopwatch;
 use std::borrow::Borrow;
@@ -87,6 +98,8 @@ pub struct HpcManager {
     pub resource: ResourceRequest,
     pub seed: u64,
     /// Injected per-task failure probability (0 = reliable platform).
+    /// Seeded from `resource.task_failure_rate`;
+    /// [`HpcManager::with_failure_handling`] still overrides.
     pub failure_rate: f64,
     /// Cancel not-yet-started tasks after the first failure.
     pub cancel_on_failure: bool,
@@ -101,11 +114,12 @@ impl HpcManager {
         seed: u64,
     ) -> Result<HpcManager, ManagerError> {
         crate::broker::manager::validate_binding(&config, &resource)?;
+        let failure_rate = resource.task_failure_rate;
         Ok(HpcManager {
             config,
             resource,
             seed,
-            failure_rate: 0.0,
+            failure_rate,
             cancel_on_failure: false,
             serialize: SerializeOptions::default(),
         })
@@ -179,19 +193,48 @@ impl HpcManager {
             bulk_bytes += submit_bulk(&frame_bulk(shards, self.serialize));
         }
         assert_eq!(bulk_bytes, expected_bulk, "bulk framing lost bytes");
-        let mut sim = MultiPilotSim::uniform(
-            self.config.profile(),
-            PilotSpec { nodes: self.resource.nodes },
-            self.resource.pilots,
-            self.seed,
-        )
-        .with_failure_rate(self.failure_rate);
-        sim.submit(specs);
+        let mut sim =
+            MultiPilotSim::new(self.config.profile(), self.resource.pilot_fleet(), self.seed)
+                .with_failure_rate(self.failure_rate)
+                .with_faults(self.resource.fault);
+        sim.submit(specs.clone());
         let submit_s = sw.elapsed_secs();
         registry.transition_all(&ids, TaskState::Submitted)?;
 
         // -- platform: the pilot fleet executes in virtual time -----------
         let report = sim.run();
+
+        // -- OVH: resubmission transport per retry wave (ISSUE 6) ---------
+        // Every dead-pilot rollback that re-queued tasks costs one more
+        // framed `[dict,...]` bulk over the connector — real transport
+        // bytes the healthy path never pays, accounted separately from
+        // the initial submission.
+        let mut retry_bulk_bytes = 0usize;
+        let mut retried = 0usize;
+        for wave in &report.retry_waves {
+            let mut doc = Vec::with_capacity(2 + wave.tasks.len() * 64);
+            doc.push(b'[');
+            for (k, &idx) in wave.tasks.iter().enumerate() {
+                if k > 0 {
+                    doc.push(b',');
+                }
+                task_dict(tasks[idx].0, tasks[idx].1.borrow(), &specs[idx]).write_into(&mut doc);
+            }
+            doc.push(b']');
+            retry_bulk_bytes += submit_bulk(&doc);
+            retried += wave.tasks.len();
+        }
+
+        // Abandoned tasks (retry budget exhausted, or the whole fleet
+        // died) reach a final state instead of being silently dropped.
+        for &task_id in &report.abandoned {
+            registry.transition_virtual(
+                TaskId(task_id),
+                TaskState::Failed,
+                Some(report.makespan_s),
+            )?;
+        }
+
         let first_fail = report
             .tasks
             .iter()
@@ -239,10 +282,18 @@ impl HpcManager {
             tpt_s: report.makespan_s,
             ttx_s: report.makespan_s,
         };
+        let faults = FaultTally {
+            failed: report.tasks.iter().filter(|r| r.failed).count(),
+            retried,
+            abandoned: report.abandoned.len(),
+            retry_waves: report.retry_waves.len(),
+            retry_bulk_bytes,
+        };
         Ok(ManagerRun {
             metrics,
             bytes_serialized,
             bulk_bytes,
+            faults,
             detail: RunDetail::Hpc { sim: report },
         })
     }
@@ -413,6 +464,84 @@ mod tests {
         for pilots in [2u32, 8] {
             assert_eq!(mk(pilots), one, "pilots={pilots}");
         }
+    }
+
+    #[test]
+    fn pilot_kill_surfaces_retry_stats_and_transport_bytes() {
+        use crate::api::resource::FaultSpec;
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 300, 60.0);
+        let resource = ResourceRequest::hpc(ProviderId::Bridges2, 1, 2)
+            .with_faults(FaultSpec { injected_kill: Some((0, 20.0)), ..FaultSpec::none() });
+        let m = HpcManager::new(ProviderConfig::simulated(ProviderId::Bridges2), resource, 11)
+            .unwrap();
+        let r = m.execute(&tasks, &reg).unwrap();
+        let sim = r.detail.hpc_sim().unwrap();
+        assert!(sim.pilots[0].died_at.is_some(), "pilot 0 must die");
+        assert!(r.faults.retried > 0, "mid-run kill must re-queue tasks");
+        assert_eq!(r.faults.retry_waves, 1);
+        assert!(r.faults.retry_bulk_bytes > 0, "resubmission transport must be charged");
+        assert_eq!(r.faults.abandoned, 0, "survivor absorbs every retry");
+        assert_eq!(sim.tasks.len(), 300, "every task still completes");
+        assert!(reg.all_final());
+    }
+
+    #[test]
+    fn exhausted_retry_budget_reports_abandoned_tasks_as_failed() {
+        use crate::api::resource::FaultSpec;
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 50, 600.0);
+        // Single pilot killed mid-run with budget 0: nothing survives.
+        let resource = ResourceRequest::hpc(ProviderId::Bridges2, 1, 1).with_faults(FaultSpec {
+            injected_kill: Some((0, 10.0)),
+            retry_budget: 0,
+            ..FaultSpec::none()
+        });
+        let m = HpcManager::new(ProviderConfig::simulated(ProviderId::Bridges2), resource, 11)
+            .unwrap();
+        let r = m.execute(&tasks, &reg).unwrap();
+        assert_eq!(r.faults.abandoned, 50);
+        assert_eq!(r.faults.retried, 0);
+        assert_eq!(r.faults.retry_bulk_bytes, 0);
+        let counts = reg.counts();
+        assert_eq!(counts.get(&TaskState::Failed).copied().unwrap_or(0), 50, "{counts:?}");
+        assert!(reg.all_final(), "abandoned tasks must reach a final state");
+    }
+
+    #[test]
+    fn heterogeneous_fleet_stages_mixed_pilot_widths() {
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 200, 2.0);
+        let resource =
+            ResourceRequest::pilot(ProviderId::Bridges2, 1).with_pilot_nodes(&[1, 2, 4]);
+        let m = HpcManager::new(ProviderConfig::simulated(ProviderId::Bridges2), resource, 11)
+            .unwrap();
+        let r = m.execute(&tasks, &reg).unwrap();
+        let sim = r.detail.hpc_sim().unwrap();
+        let widths: Vec<u32> = sim.pilots.iter().map(|p| p.total_cores).collect();
+        assert_eq!(widths, vec![128, 256, 512]);
+        assert_eq!(sim.tasks.len(), 200);
+        assert!(reg.all_final());
+    }
+
+    #[test]
+    fn task_failure_rate_flows_from_the_resource_request() {
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 400, 1.0);
+        let resource =
+            ResourceRequest::hpc(ProviderId::Bridges2, 1, 1).with_task_failure_rate(0.1);
+        let m = HpcManager::new(ProviderConfig::simulated(ProviderId::Bridges2), resource, 11)
+            .unwrap();
+        assert!((m.failure_rate - 0.1).abs() < 1e-12);
+        let r = m.execute(&tasks, &reg).unwrap();
+        assert!(r.faults.failed > 5, "failed count must surface upward: {:?}", r.faults);
+        let counts = reg.counts();
+        assert_eq!(
+            counts.get(&TaskState::Failed).copied().unwrap_or(0),
+            r.faults.failed,
+            "{counts:?}"
+        );
+        assert!(reg.all_final());
     }
 
     #[test]

@@ -158,12 +158,33 @@ impl RunDetail {
     }
 }
 
+/// Fault and retry accounting of one manager execution, uniform across
+/// service kinds (ISSUE 6). Zero everywhere for a healthy run; the HPC
+/// manager fills the retry fields from the pilot-fleet fault model, the
+/// CaaS/FaaS managers report task-level failures only.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultTally {
+    /// Tasks whose final record carries `failed: true` (injected
+    /// task-level failures). Previously filtered out of the HPC report
+    /// and never surfaced.
+    pub failed: usize,
+    /// Task launches rolled back off dead pilots and re-queued.
+    pub retried: usize,
+    /// Tasks reported abandoned (retry budget exhausted or fleet dead).
+    pub abandoned: usize,
+    /// Resubmission bulks sent after pilot deaths.
+    pub retry_waves: usize,
+    /// Transport bytes of those resubmission bulks.
+    pub retry_bulk_bytes: usize,
+}
+
 /// Unified report of one manager execution — the same shape for every
 /// service kind, replacing the three divergent per-manager report
 /// structs. Byte accounting is uniform: `bytes_serialized` counts the
 /// serialized item bytes (manifests / task dicts / invocations, bulk
 /// envelope excluded), `bulk_bytes` the framed `[i0,i1,...]` payload the
-/// provider-API sink accepted.
+/// provider-API sink accepted (resubmission bulks counted separately in
+/// `faults.retry_bulk_bytes`).
 #[derive(Debug)]
 pub struct ManagerRun {
     pub metrics: RunMetrics,
@@ -171,6 +192,8 @@ pub struct ManagerRun {
     pub bytes_serialized: usize,
     /// Framed bulk payload bytes accepted by the provider-API sink.
     pub bulk_bytes: usize,
+    /// Failure / retry / abandonment accounting (ISSUE 6).
+    pub faults: FaultTally,
     pub detail: RunDetail,
 }
 

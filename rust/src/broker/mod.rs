@@ -16,7 +16,11 @@
 //! * [`manager`] — the [`ServiceManager`] trait, unified
 //!   [`ManagerRun`]/[`RunDetail`] reports, and the [`ManagerFactory`].
 //! * [`caas`] — CaaS Manager (Kubernetes clusters, pod workloads).
-//! * [`hpc`] — HPC Manager (pilot connector, bulk task submission).
+//! * [`hpc`] — HPC Manager (pilot connector, bulk task submission,
+//!   fault-tolerant pilot fleets: a `FaultSpec` on the acquired
+//!   `ResourceRequest` arms pilot death / walltime expiry /
+//!   materialization failure, with exactly-once re-queue onto survivors
+//!   and per-retry-wave transport accounting in `ManagerRun::faults`).
 //! * [`faas`] — FaaS Manager (functions with cold starts + concurrency
 //!   limits).
 //! * [`data`] — Data Manager (copy/move/link/delete/list, staging) and

@@ -7,6 +7,7 @@
 //!                 executing the real AOT compute through PJRT.
 //! * `inspect`   — print the artifact manifest the runtime would load.
 
+use hydra::api::resource::FaultSpec;
 use hydra::api::task::{Payload, TaskDescription};
 use hydra::api::ResourceRequest;
 use hydra::broker::{BrokerPolicy, Hydra, PartitionModel, PodBuildMode};
@@ -27,6 +28,15 @@ fn app() -> App {
                 .opt("vcpus", "16", "vCPUs per node (cloud)")
                 .opt("nodes", "1", "nodes per cluster / pilot")
                 .opt("pilots", "1", "concurrent pilot jobs (HPC providers)")
+                .opt(
+                    "pilot-nodes",
+                    "",
+                    "heterogeneous pilot widths, e.g. 2,4,8 (HPC; overrides nodes/pilots)",
+                )
+                .opt("task-failure-rate", "0", "per-task failure probability in [0,1]")
+                .opt("pilot-walltime", "0", "pilot walltime seconds, 0 = off (HPC)")
+                .opt("pilot-mtbf", "0", "pilot mean time between failures seconds, 0 = off (HPC)")
+                .opt("retry-budget", "3", "re-queues per task before abandoning it (HPC)")
                 .opt("sleep", "0", "per-task sleep seconds (0 = noop)")
                 .opt("seed", "42", "simulation seed")
                 .opt(
@@ -118,6 +128,14 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
     let vcpus = m.u64("vcpus")? as u32;
     let nodes = m.u64("nodes")? as u32;
     let pilots = m.u64("pilots")? as u32;
+    let pilot_nodes: Vec<u32> = m.u64_list("pilot-nodes")?.into_iter().map(|w| w as u32).collect();
+    let task_failure_rate = m.f64("task-failure-rate")?;
+    let fault = FaultSpec {
+        walltime_s: m.f64("pilot-walltime")?,
+        mtbf_s: m.f64("pilot-mtbf")?,
+        retry_budget: m.u64("retry-budget")? as u32,
+        ..FaultSpec::none()
+    };
     let sleep = m.f64("sleep")?;
     let model = if m.flag("scpp") {
         PartitionModel::Scpp
@@ -137,7 +155,11 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
         let req = if hydra::sim::provider::PlatformProfile::of(p).kind
             == hydra::sim::provider::PlatformKind::Hpc
         {
-            ResourceRequest::hpc(p, nodes, pilots)
+            let mut req = ResourceRequest::hpc(p, nodes, pilots);
+            if !pilot_nodes.is_empty() {
+                req = req.with_pilot_nodes(&pilot_nodes);
+            }
+            req.with_faults(fault).with_task_failure_rate(task_failure_rate)
         } else if use_faas {
             // Clouds serve functions; the vcpus knob doubles as the
             // account-level concurrency limit.
@@ -211,6 +233,21 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
             fmt_secs(r.ovh.serialize_s),
             fmt_secs(r.ovh.submit_s),
         );
+    }
+    // Fault accounting, when any manager saw failures or retries.
+    for (id, rep) in &run.reports {
+        let f = rep.run().faults;
+        if f.failed + f.retried + f.abandoned + f.retry_waves > 0 {
+            println!(
+                "  {} faults: failed {} | retried {} (waves {}, {} B resubmitted) | abandoned {}",
+                id.short_name(),
+                f.failed,
+                f.retried,
+                f.retry_waves,
+                f.retry_bulk_bytes,
+                f.abandoned,
+            );
+        }
     }
     Ok(())
 }

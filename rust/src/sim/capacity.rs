@@ -14,7 +14,10 @@
 //!
 //! * [`reserve`](CapacityIndex::reserve) / [`release`](CapacityIndex::release)
 //!   / [`set`](CapacityIndex::set) — update one leaf and recompute maxima
-//!   along the root path: **O(log N)** exact.
+//!   along the root path: **O(log N)** exact. `set` is also how owners
+//!   mask a slot outright — the fault-tolerant pilot fleet (ISSUE 6)
+//!   zeroes a dead pilot's leaf with `set(p, Cap::ZERO)` so no
+//!   placement query can ever land on it again.
 //! * [`first_fit`](CapacityIndex::first_fit) — in-order descent pruned by
 //!   subtree maxima; returns the lowest-indexed slot satisfying all three
 //!   constraints, i.e. the *same slot a linear scan would pick*

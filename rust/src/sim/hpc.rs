@@ -34,6 +34,32 @@
 //! * payload durations scale with the platform's `cpu_speed` (bare-metal
 //!   EPYC on Bridges2: the Fig 5 advantage).
 //!
+//! # Failure model (ISSUE 6)
+//!
+//! Two independent layers, both deterministic per seed:
+//!
+//! * **Task-level** injection (`with_failure_rate`): each task draws a
+//!   failed flag from the main PRNG stream; the record carries
+//!   `failed: true` but the schedule is unaffected (application-level
+//!   failures, the knob the CaaS path already had).
+//! * **Pilot-level** faults ([`FaultSpec`], `with_faults`, multi-pilot
+//!   only): each pilot draws — from a *dedicated* PRNG stream seeded
+//!   `seed ^ FAULT_STREAM_SALT`, so [`FaultSpec::none`] consumes nothing
+//!   and the fault-free schedule stays byte-identical to the healthy
+//!   reference — a materialization failure (the batch job is lost before
+//!   its agent boots), an exponential MTBF kill offset, and a walltime
+//!   expiry (measured from job start, i.e. queue-wait elapse). The
+//!   earliest applicable instant becomes the pilot's `PilotDead` event:
+//!   the dead pilot's leaf in the shared capacity index is zeroed, its
+//!   in-flight tasks are rolled back (cores returned, records voided)
+//!   and re-queued **at the FIFO head** in submission order for
+//!   placement on surviving pilots — clamping now against the widest
+//!   *live* pilot. A task killed more than `retry_budget` times is
+//!   reported **abandoned**: never silently dropped, never duplicated.
+//!   If the whole fleet dies the run ends as a partial report (completed
+//!   records + abandoned ids partition the submission) instead of
+//!   hanging.
+//!
 //! # Scheduling cost (§Perf / DESIGN-note)
 //!
 //! In the single-pilot sim the capacity index degenerates to a counter
@@ -43,6 +69,8 @@
 //! index query; both process O(T) events for T tasks. Launcher-busy
 //! pilots are masked out of the index (leaf zeroed) so one query answers
 //! "live, launcher idle, and fits" at once.
+
+use std::collections::VecDeque;
 
 use super::capacity::{Cap, CapacityIndex};
 use super::event::{secs, to_secs, EventQueue};
@@ -246,25 +274,136 @@ impl HpcSim {
 
 // ---------------------------------------------------------------------------
 // Multi-pilot scheduling on the shared capacity index (ISSUE 5 tentpole)
+// + pilot-fleet fault tolerance (ISSUE 6 tentpole)
 // ---------------------------------------------------------------------------
 
+/// Pilot-level fault model (ISSUE 6). Every knob is off at zero; the
+/// stochastic draws come from a dedicated PRNG stream
+/// (`seed ^ FAULT_STREAM_SALT`) so [`FaultSpec::none`] consumes nothing
+/// from the schedule's stream and the fault-free multi-pilot schedule
+/// stays byte-identical to the PR 5 reference
+/// (`tests/pilot_equivalence.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Batch walltime limit in seconds, measured from job start (the
+    /// queue-wait elapse) — a pilot whose walltime expires before its
+    /// agent boots dies without materializing. 0 disables.
+    pub walltime_s: f64,
+    /// Mean time between pilot failures: each pilot draws an exponential
+    /// kill offset from its agent-ready instant. 0 disables.
+    pub mtbf_s: f64,
+    /// Probability the pilot never materializes (batch job lost / agent
+    /// fails to boot): it dies at its would-be agent-ready instant
+    /// without executing anything. 0 disables.
+    pub materialization_failure_p: f64,
+    /// How many times a killed task may be re-queued before it is
+    /// reported abandoned. 0 abandons on the first kill.
+    pub retry_budget: u32,
+    /// Deterministic kill for benches/tests: `(pilot, offset_s)` kills
+    /// that pilot `offset_s` virtual seconds after its agent is ready,
+    /// independent of the stochastic knobs.
+    pub injected_kill: Option<(u32, f64)>,
+}
+
+impl FaultSpec {
+    /// No faults: the multi-pilot schedule is byte-identical to a run
+    /// without the fault machinery.
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            walltime_s: 0.0,
+            mtbf_s: 0.0,
+            materialization_failure_p: 0.0,
+            retry_budget: 3,
+            injected_kill: None,
+        }
+    }
+
+    /// True when every fault *source* is disabled (the retry budget is
+    /// irrelevant without one).
+    pub fn is_none(&self) -> bool {
+        self.walltime_s == 0.0
+            && self.mtbf_s == 0.0
+            && self.materialization_failure_p == 0.0
+            && self.injected_kill.is_none()
+    }
+
+    /// Range-check every knob (surfaced through
+    /// `ResourceRequest::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.walltime_s.is_finite() || self.walltime_s < 0.0 {
+            return Err(format!("walltime_s must be finite and >= 0, got {}", self.walltime_s));
+        }
+        if !self.mtbf_s.is_finite() || self.mtbf_s < 0.0 {
+            return Err(format!("mtbf_s must be finite and >= 0, got {}", self.mtbf_s));
+        }
+        if !(0.0..=1.0).contains(&self.materialization_failure_p) {
+            return Err(format!(
+                "materialization_failure_p must be in [0, 1], got {}",
+                self.materialization_failure_p
+            ));
+        }
+        if let Some((_, off)) = self.injected_kill {
+            if !off.is_finite() || off < 0.0 {
+                return Err(format!(
+                    "injected_kill offset must be finite and >= 0, got {off}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec::none()
+    }
+}
+
+/// Salt for the dedicated fault stream: decorrelated from the schedule
+/// stream for the same seed, stable across runs.
+const FAULT_STREAM_SALT: u64 = 0xFA17_5EED_0D1E;
+
+/// One re-queue wave: the tasks rolled back from a dead pilot and handed
+/// to the FIFO head at `at_s`. The HPC Manager charges one resubmission
+/// bulk per wave.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryWave {
+    /// The pilot that died.
+    pub pilot: u32,
+    /// Virtual instant of the death / rollback.
+    pub at_s: f64,
+    /// Indices into the submitted task list, in submission order.
+    pub tasks: Vec<usize>,
+}
+
 /// Per-pilot outcome of a [`MultiPilotSim`] run: the lifecycle timings
-/// plus the utilization accounting the HPC Manager reports per pilot.
+/// plus the utilization and fault accounting the HPC Manager reports
+/// per pilot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PilotStat {
     pub queue_wait_s: f64,
     pub agent_ready_s: f64,
     pub total_cores: u32,
-    /// Tasks this pilot launched.
+    /// Tasks this pilot ran to completion (rolled-back launches are
+    /// subtracted again).
     pub tasks_executed: usize,
     pub peak_cores_busy: u32,
     /// Core-seconds of payload executed on this pilot (Σ cores × runtime,
-    /// launch overhead excluded).
+    /// launch overhead excluded; rolled-back launches subtracted).
     pub busy_core_s: f64,
     /// `busy_core_s` over the pilot's live capacity
-    /// (`total_cores × (makespan − agent_ready)`); 0 for a pilot that
-    /// never went live before the run ended.
+    /// (`total_cores × (lifetime end − agent_ready)`, where a dead
+    /// pilot's lifetime ends at `died_at`); 0 for a pilot that never
+    /// went live before the run ended.
     pub utilization: f64,
+    /// Whether the pilot's agent ever came up (false: lost before
+    /// agent-ready).
+    pub materialized: bool,
+    /// Virtual instant the pilot died, if it did.
+    pub died_at: Option<f64>,
+    /// Tasks rolled back from this pilot and re-queued at the FIFO head
+    /// (abandonments not included).
+    pub tasks_requeued: usize,
 }
 
 /// Result of simulating P concurrent pilots over one bulk workload.
@@ -275,17 +414,25 @@ pub struct PilotStat {
 #[derive(Debug, Clone)]
 pub struct MultiPilotReport {
     /// Makespan from submission to the last task completion (for an
-    /// empty workload: until the last pilot is staged). A pilot whose
-    /// queue wait elapses after the workload has drained does not extend
-    /// the makespan.
+    /// empty workload, or a faulty run that completed nothing: until the
+    /// last processed event). A pilot whose queue wait elapses after the
+    /// workload has drained does not extend the makespan.
     pub makespan_s: f64,
-    /// Per-task records, index-aligned with the submitted task list.
+    /// Records of the *completed* tasks, in submission order — the full
+    /// submission whenever no pilot-level fault fires.
     pub tasks: Vec<HpcTaskRecord>,
     /// Pilot that executed each task, index-aligned with `tasks`.
     pub pilot_of: Vec<u32>,
-    /// Per-pilot lifecycle + utilization stats, in pilot order.
+    /// Per-pilot lifecycle + utilization + fault stats, in pilot order.
     pub pilots: Vec<PilotStat>,
     pub events_processed: u64,
+    /// Task ids reported abandoned: killed more than `retry_budget`
+    /// times, or stranded when the whole fleet died. Disjoint from
+    /// `tasks`; together they partition the submission exactly once.
+    pub abandoned: Vec<u64>,
+    /// One entry per dead-pilot rollback that re-queued at least one
+    /// task, in death order.
+    pub retry_waves: Vec<RetryWave>,
 }
 
 impl MultiPilotReport {
@@ -309,6 +456,10 @@ enum MpEv {
     LauncherFree { pilot: usize },
     /// A task completed on a pilot.
     TaskDone { pilot: usize, idx: usize },
+    /// A pilot died (MTBF kill, walltime expiry, or materialization
+    /// failure). Scheduled during staging, so on a time tie it pops
+    /// before any task event of the same instant.
+    PilotDead { pilot: usize },
 }
 
 /// Run-time state of one staged pilot.
@@ -322,6 +473,34 @@ struct PilotState {
     busy_core_s: f64,
     queue_wait_s: f64,
     agent_ready_s: f64,
+    // Fault lifecycle (ISSUE 6).
+    dead: bool,
+    died_at: Option<f64>,
+    was_live: bool,
+    tasks_requeued: usize,
+}
+
+/// Per-task run state, bundled so the launch/rollback paths pass one
+/// `&mut` instead of six.
+struct TaskBook {
+    records: Vec<Option<HpcTaskRecord>>,
+    pilot_of: Vec<u32>,
+    fail_flags: Vec<bool>,
+    /// Pilot currently executing the task — the exactly-once guard: a
+    /// `TaskDone` from any other pilot is stale (the launcher died and
+    /// the task was re-queued) and is dropped.
+    running_on: Vec<Option<usize>>,
+    /// Core width the task was launched with. Deaths can narrow the
+    /// fleet's widest live pilot, so the clamp is recorded at launch and
+    /// used for the rollback / completion core-return — recomputing it
+    /// later would break core conservation.
+    launched_need: Vec<u32>,
+    /// Times the task has been rolled back off a dead pilot.
+    attempts: Vec<u32>,
+    abandoned: Vec<bool>,
+    /// Tasks resolved (completed or abandoned); the faulty-run early
+    /// exit fires when this reaches the submission size.
+    resolved: usize,
 }
 
 /// Simulate P concurrent pilots executing one bulk-submitted workload.
@@ -338,12 +517,19 @@ pub struct MultiPilotSim {
     specs: Vec<PilotSpec>,
     tasks: Vec<HpcTaskSpec>,
     rng: Prng,
+    seed: u64,
     failure_rate: f64,
+    fault: FaultSpec,
     // Run state (populated by `run`, queryable afterwards).
     pilots: Vec<PilotState>,
     index: CapacityIndex,
     next: usize,
-    widest: u32,
+    /// Rolled-back tasks waiting at the FIFO head (consumed before the
+    /// global cursor), in submission order.
+    requeue: VecDeque<usize>,
+    /// Widest live pilot — the oversized-task clamp target; deaths can
+    /// narrow it mid-run.
+    widest_live: u32,
 }
 
 impl MultiPilotSim {
@@ -355,11 +541,14 @@ impl MultiPilotSim {
             specs: pilots,
             tasks: Vec::new(),
             rng: Prng::new(seed),
+            seed,
             failure_rate: 0.0,
+            fault: FaultSpec::none(),
             pilots: Vec::new(),
             index: CapacityIndex::zeroed(0),
             next: 0,
-            widest: 0,
+            requeue: VecDeque::new(),
+            widest_live: 0,
         }
     }
 
@@ -377,6 +566,14 @@ impl MultiPilotSim {
     /// Enable failure injection with per-task probability `p`.
     pub fn with_failure_rate(mut self, p: f64) -> MultiPilotSim {
         self.failure_rate = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Enable the pilot-level fault model. [`FaultSpec::none`] is a true
+    /// no-op: the dedicated fault stream is not even constructed, so the
+    /// schedule stays byte-identical to the fault-free reference.
+    pub fn with_faults(mut self, fault: FaultSpec) -> MultiPilotSim {
+        self.fault = fault;
         self
     }
 
@@ -398,7 +595,8 @@ impl MultiPilotSim {
     /// pilot is live with an idle launcher, and zero otherwise. The bias
     /// keeps zero-core demands from matching masked pilots (queries add
     /// one to the demand symmetrically), so a single O(log P) index query
-    /// answers "live ∧ launcher idle ∧ fits".
+    /// answers "live ∧ launcher idle ∧ fits". A dead pilot is never live
+    /// again, so its leaf stays zero from `PilotDead` onward.
     fn sync_slot(&mut self, p: usize) {
         let st = &self.pilots[p];
         let leaf = if st.live && st.launcher_free {
@@ -411,25 +609,27 @@ impl MultiPilotSim {
 
     /// Launch FIFO-head tasks while a live, launcher-idle pilot fits the
     /// head; stop on the first head that fits nowhere (head-of-line, as
-    /// in the serial reference) or when the workload is drained.
-    fn try_launch(
-        &mut self,
-        q: &mut EventQueue<MpEv>,
-        records: &mut [Option<HpcTaskRecord>],
-        pilot_of: &mut [u32],
-        fail_flags: &[bool],
-    ) {
-        while self.next < self.tasks.len() {
-            let t = self.tasks[self.next];
-            // Oversized tasks clamp to the widest pilot (the multi-pilot
-            // generalization of the serial path's clamp to pilot width).
-            let need = t.cores.min(self.widest);
+    /// in the serial reference) or when the workload is drained. The
+    /// head is the oldest re-queued task if any (rolled back off a dead
+    /// pilot), else the global cursor.
+    fn try_launch(&mut self, q: &mut EventQueue<MpEv>, book: &mut TaskBook) {
+        while !self.requeue.is_empty() || self.next < self.tasks.len() {
+            let from_requeue = !self.requeue.is_empty();
+            let idx = if from_requeue { *self.requeue.front().unwrap() } else { self.next };
+            let t = self.tasks[idx];
+            // Oversized tasks clamp to the widest *live* pilot (the
+            // multi-pilot generalization of the serial path's clamp to
+            // pilot width; deaths can narrow the fleet).
+            let need = t.cores.min(self.widest_live);
             let Some(slot) = self.index.best_fit(Cap::cores(need.saturating_add(1))) else {
                 return;
             };
+            if from_requeue {
+                self.requeue.pop_front();
+            } else {
+                self.next += 1;
+            }
             let pilot = slot as usize;
-            let idx = self.next;
-            self.next += 1;
             let launch_done = to_secs(q.now()) + self.profile.task_launch_s;
             let run_s = t.sleep_s + self.profile.payload_duration_s(t.work_s, need);
             {
@@ -441,13 +641,15 @@ impl MultiPilotSim {
                 st.busy_core_s += f64::from(need) * run_s;
             }
             self.sync_slot(pilot); // masked while the launcher spawns
-            records[idx] = Some(HpcTaskRecord {
+            book.records[idx] = Some(HpcTaskRecord {
                 task_id: t.task_id,
                 launched_s: launch_done,
                 finished_s: launch_done + run_s, // finalized again at TaskDone
-                failed: fail_flags[idx],
+                failed: book.fail_flags[idx],
             });
-            pilot_of[idx] = slot;
+            book.pilot_of[idx] = slot;
+            book.running_on[idx] = Some(pilot);
+            book.launched_need[idx] = need;
             q.schedule_in(secs(self.profile.task_launch_s), MpEv::LauncherFree { pilot });
             q.schedule_in(
                 secs(self.profile.task_launch_s + run_s),
@@ -458,9 +660,16 @@ impl MultiPilotSim {
 
     /// Stage the pilots, run the workload to quiescence, and report.
     pub fn run(&mut self) -> MultiPilotReport {
+        let faults_on = !self.fault.is_none();
+        // Dedicated fault stream: constructed only when a fault source is
+        // enabled, so FaultSpec::none() consumes nothing anywhere.
+        let mut frng =
+            if faults_on { Some(Prng::new(self.seed ^ FAULT_STREAM_SALT)) } else { None };
         let mut q: EventQueue<MpEv> = EventQueue::new();
         let mut staged = Vec::with_capacity(self.specs.len());
-        for spec in &self.specs {
+        let mut deaths: Vec<Option<f64>> = Vec::with_capacity(self.specs.len());
+        let mut boots: Vec<bool> = Vec::with_capacity(self.specs.len());
+        for (p, spec) in self.specs.iter().enumerate() {
             let total_cores = spec.cores(&self.profile);
             assert!(total_cores > 0, "pilot must request at least one node");
             // Pilot-order draws: with one pilot this consumes the PRNG
@@ -471,6 +680,43 @@ impl MultiPilotSim {
             } else {
                 0.0
             };
+            let agent_ready_s = queue_wait_s + self.profile.pilot_boot_s;
+            // Fault draws in pilot order, one per enabled knob regardless
+            // of the other knobs' outcomes, so no pilot's fate shifts
+            // another pilot's draws.
+            let (mat_fail, kill_after_s) = match frng.as_mut() {
+                Some(r) => (
+                    self.fault.materialization_failure_p > 0.0
+                        && r.bool_with_p(self.fault.materialization_failure_p),
+                    if self.fault.mtbf_s > 0.0 {
+                        Some(r.exponential(self.fault.mtbf_s))
+                    } else {
+                        None
+                    },
+                ),
+                None => (false, None),
+            };
+            let death = if mat_fail {
+                Some(agent_ready_s)
+            } else {
+                let mut d = f64::INFINITY;
+                if let Some(k) = kill_after_s {
+                    d = d.min(agent_ready_s + k);
+                }
+                if self.fault.walltime_s > 0.0 {
+                    // Walltime runs from job start; expiry before the
+                    // agent boots kills the pilot pre-materialization.
+                    d = d.min(queue_wait_s + self.fault.walltime_s);
+                }
+                if let Some((ip, off)) = self.fault.injected_kill {
+                    if ip as usize == p {
+                        d = d.min(agent_ready_s + off);
+                    }
+                }
+                if d.is_finite() { Some(d) } else { None }
+            };
+            deaths.push(death);
+            boots.push(!mat_fail);
             staged.push(PilotState {
                 total_cores,
                 free_cores: total_cores,
@@ -480,22 +726,48 @@ impl MultiPilotSim {
                 tasks_executed: 0,
                 busy_core_s: 0.0,
                 queue_wait_s,
-                agent_ready_s: queue_wait_s + self.profile.pilot_boot_s,
+                agent_ready_s,
+                dead: false,
+                died_at: None,
+                was_live: false,
+                tasks_requeued: 0,
             });
         }
         self.pilots = staged;
         for (p, st) in self.pilots.iter().enumerate() {
-            q.schedule_at(secs(st.agent_ready_s), MpEv::PilotReady { pilot: p });
+            if boots[p] {
+                q.schedule_at(secs(st.agent_ready_s), MpEv::PilotReady { pilot: p });
+            }
         }
-        self.widest = self.pilots.iter().map(|s| s.total_cores).max().unwrap_or(0);
+        // Deaths scheduled after the readies: on a PilotReady/PilotDead
+        // time tie the pilot goes live first, then dies; and a PilotDead
+        // always outranks same-instant task events (staging seq < task
+        // seq).
+        for (p, d) in deaths.iter().enumerate() {
+            if let Some(d) = d {
+                q.schedule_at(secs(*d), MpEv::PilotDead { pilot: p });
+            }
+        }
+        self.widest_live = self.pilots.iter().map(|s| s.total_cores).max().unwrap_or(0);
         self.index = CapacityIndex::zeroed(self.pilots.len());
         self.next = 0;
+        self.requeue.clear();
 
-        let fail_flags: Vec<bool> = (0..self.tasks.len())
+        let n = self.tasks.len();
+        let fail_flags: Vec<bool> = (0..n)
             .map(|_| self.failure_rate > 0.0 && self.rng.bool_with_p(self.failure_rate))
             .collect();
-        let mut records: Vec<Option<HpcTaskRecord>> = vec![None; self.tasks.len()];
-        let mut pilot_of: Vec<u32> = vec![0; self.tasks.len()];
+        let mut book = TaskBook {
+            records: vec![None; n],
+            pilot_of: vec![0; n],
+            fail_flags,
+            running_on: vec![None; n],
+            launched_need: vec![0; n],
+            attempts: vec![0; n],
+            abandoned: vec![false; n],
+            resolved: 0,
+        };
+        let mut waves: Vec<RetryWave> = Vec::new();
         // Last task-completion instant. The makespan ends here, not at the
         // final queue event: a pilot whose queue wait elapses after the
         // workload has drained must not inflate TTX (with one pilot the
@@ -507,18 +779,32 @@ impl MultiPilotSim {
             match ev {
                 MpEv::PilotReady { pilot } => {
                     let st = &mut self.pilots[pilot];
+                    if st.dead {
+                        continue; // died before materializing (early walltime)
+                    }
                     st.live = true;
                     st.launcher_free = true;
+                    st.was_live = true;
                     self.sync_slot(pilot);
-                    self.try_launch(&mut q, &mut records, &mut pilot_of, &fail_flags);
+                    self.try_launch(&mut q, &mut book);
                 }
                 MpEv::LauncherFree { pilot } => {
+                    if self.pilots[pilot].dead {
+                        continue;
+                    }
                     self.pilots[pilot].launcher_free = true;
                     self.sync_slot(pilot);
-                    self.try_launch(&mut q, &mut records, &mut pilot_of, &fail_flags);
+                    self.try_launch(&mut q, &mut book);
                 }
                 MpEv::TaskDone { pilot, idx } => {
-                    let need = self.tasks[idx].cores.min(self.widest);
+                    if book.running_on[idx] != Some(pilot) {
+                        // Stale completion: the launching pilot died and
+                        // the task was rolled back (and possibly re-run
+                        // elsewhere). Exactly-once: drop it.
+                        continue;
+                    }
+                    book.running_on[idx] = None;
+                    let need = book.launched_need[idx];
                     let st = &mut self.pilots[pilot];
                     st.free_cores += need;
                     debug_assert!(
@@ -526,7 +812,7 @@ impl MultiPilotSim {
                         "core conservation violated on pilot {pilot}"
                     );
                     self.sync_slot(pilot);
-                    let rec = records[idx].as_mut().expect("done task was launched");
+                    let rec = book.records[idx].as_mut().expect("done task was launched");
                     // Clamp against float rounding of the micros clock so
                     // finished >= launched holds exactly.
                     rec.finished_s = to_secs(q.now()).max(rec.launched_s);
@@ -535,19 +821,122 @@ impl MultiPilotSim {
                     // precedes its TaskDone, so this is the last task
                     // event overall).
                     last_done_s = to_secs(q.now());
-                    self.try_launch(&mut q, &mut records, &mut pilot_of, &fail_flags);
+                    book.resolved += 1;
+                    self.try_launch(&mut q, &mut book);
                 }
+                MpEv::PilotDead { pilot } => {
+                    if self.pilots[pilot].dead {
+                        continue;
+                    }
+                    let now_s = to_secs(q.now());
+                    {
+                        let st = &mut self.pilots[pilot];
+                        st.dead = true;
+                        st.live = false;
+                        st.launcher_free = false;
+                        st.died_at = Some(now_s);
+                    }
+                    self.sync_slot(pilot); // zero the dead pilot's leaf
+                    self.widest_live = self
+                        .pilots
+                        .iter()
+                        .filter(|s| !s.dead)
+                        .map(|s| s.total_cores)
+                        .max()
+                        .unwrap_or(0);
+                    // Roll back every in-flight task of the dead pilot in
+                    // submission order: return its cores, void its
+                    // record, and either hand it to the FIFO head or
+                    // abandon it when its retry budget is spent.
+                    let mut wave: Vec<usize> = Vec::new();
+                    for idx in 0..n {
+                        if book.running_on[idx] != Some(pilot) {
+                            continue;
+                        }
+                        book.running_on[idx] = None;
+                        book.records[idx] = None;
+                        let t = self.tasks[idx];
+                        let need = book.launched_need[idx];
+                        let run_s =
+                            t.sleep_s + self.profile.payload_duration_s(t.work_s, need);
+                        let st = &mut self.pilots[pilot];
+                        st.free_cores += need;
+                        st.busy_core_s -= f64::from(need) * run_s;
+                        st.tasks_executed -= 1;
+                        book.attempts[idx] += 1;
+                        if book.attempts[idx] > self.fault.retry_budget {
+                            book.abandoned[idx] = true;
+                            book.resolved += 1;
+                        } else {
+                            st.tasks_requeued += 1;
+                            wave.push(idx);
+                        }
+                    }
+                    debug_assert_eq!(
+                        self.pilots[pilot].free_cores,
+                        self.pilots[pilot].total_cores,
+                        "dead pilot {pilot} must return every core"
+                    );
+                    for &idx in wave.iter().rev() {
+                        self.requeue.push_front(idx);
+                    }
+                    if !wave.is_empty() {
+                        waves.push(RetryWave { pilot: pilot as u32, at_s: now_s, tasks: wave });
+                    }
+                    self.try_launch(&mut q, &mut book);
+                }
+            }
+            if faults_on && n > 0 && book.resolved == n {
+                // Faulty runs can leave stale events behind (dead pilots'
+                // TaskDones, later deaths); once every task is resolved
+                // the schedule is final. Fault-free runs drain the queue
+                // exactly as the PR 5 reference did.
+                break;
             }
         }
 
+        // A fleet that died entirely leaves unplaced tasks behind: report
+        // them abandoned (partial run) rather than silently dropping them.
+        if faults_on {
+            for idx in 0..n {
+                if book.records[idx].is_none() && !book.abandoned[idx] {
+                    book.abandoned[idx] = true;
+                }
+            }
+        }
+        let mut tasks_out: Vec<HpcTaskRecord> = Vec::with_capacity(n);
+        let mut pilot_out: Vec<u32> = Vec::with_capacity(n);
+        let mut abandoned_ids: Vec<u64> = Vec::new();
+        for (idx, rec) in book.records.into_iter().enumerate() {
+            match rec {
+                Some(r) => {
+                    tasks_out.push(r);
+                    pilot_out.push(book.pilot_of[idx]);
+                }
+                None => abandoned_ids.push(self.tasks[idx].task_id),
+            }
+        }
+        debug_assert!(
+            faults_on || abandoned_ids.is_empty(),
+            "every submitted task must complete on a healthy fleet"
+        );
+
         // Empty workload: the run "ends" when the last pilot is staged,
-        // exactly as the serial reference reports for zero tasks.
-        let makespan_s = if self.tasks.is_empty() { to_secs(q.now()) } else { last_done_s };
+        // exactly as the serial reference reports for zero tasks. A
+        // faulty run that completed nothing ends at its last processed
+        // event (the final pilot death).
+        let makespan_s = if self.tasks.is_empty() || tasks_out.is_empty() {
+            to_secs(q.now())
+        } else {
+            last_done_s
+        };
         let pilots = self
             .pilots
             .iter()
             .map(|st| {
-                let window = (makespan_s - st.agent_ready_s).max(0.0);
+                // A dead pilot's capacity window closes at its death.
+                let window_end = st.died_at.map_or(makespan_s, |d| d.min(makespan_s));
+                let window = (window_end - st.agent_ready_s).max(0.0);
                 let capacity = f64::from(st.total_cores) * window;
                 PilotStat {
                     queue_wait_s: st.queue_wait_s,
@@ -557,21 +946,24 @@ impl MultiPilotSim {
                     peak_cores_busy: st.peak,
                     busy_core_s: st.busy_core_s,
                     utilization: if capacity > 0.0 {
-                        (st.busy_core_s / capacity).min(1.0)
+                        (st.busy_core_s / capacity).clamp(0.0, 1.0)
                     } else {
                         0.0
                     },
+                    materialized: st.was_live,
+                    died_at: st.died_at,
+                    tasks_requeued: st.tasks_requeued,
                 }
             })
             .collect();
-        let tasks: Vec<HpcTaskRecord> = records.into_iter().flatten().collect();
-        debug_assert_eq!(tasks.len(), pilot_of.len(), "every submitted task must complete");
         MultiPilotReport {
             makespan_s,
-            tasks,
-            pilot_of,
+            tasks: tasks_out,
+            pilot_of: pilot_out,
             pilots,
             events_processed: q.processed(),
+            abandoned: abandoned_ids,
+            retry_waves: waves,
         }
     }
 }
@@ -778,5 +1170,149 @@ mod tests {
         assert_eq!(a.pilot_of, b.pilot_of);
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    // ---- pilot-fleet fault tolerance (ISSUE 6 tentpole) ------------------
+
+    #[test]
+    fn fault_spec_none_is_inert_inline() {
+        // The full 3-seed matrix lives in tests/pilot_equivalence.rs;
+        // this is the fast inline guard that the machinery is a no-op.
+        let tasks: Vec<_> = (0..200)
+            .map(|i| HpcTaskSpec {
+                task_id: i,
+                cores: 1 + (i as u32 % 9),
+                work_s: 5.0,
+                sleep_s: 0.0,
+            })
+            .collect();
+        let a = run_multi(tasks.clone(), 1, 4, 99);
+        let mut sim = MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, 4, 99)
+            .with_faults(FaultSpec::none());
+        sim.submit(tasks);
+        let b = sim.run();
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.pilot_of, b.pilot_of);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.events_processed, b.events_processed);
+        assert!(b.abandoned.is_empty());
+        assert!(b.retry_waves.is_empty());
+        assert!(b.pilots.iter().all(|p| p.died_at.is_none() && p.materialized));
+    }
+
+    #[test]
+    fn injected_kill_requeues_exactly_once_on_the_survivor() {
+        // 2 pilots, long tasks, pilot 0 killed mid-run: every task must
+        // complete exactly once, the kill's rollback must restore the
+        // dead pilot's cores, and nothing is abandoned (budget 3 covers
+        // the single kill).
+        let n = 300u64;
+        let fault = FaultSpec { injected_kill: Some((0, 50.0)), ..FaultSpec::none() };
+        let mut sim =
+            MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, 2, 33).with_faults(fault);
+        sim.submit(
+            (0..n)
+                .map(|i| HpcTaskSpec { task_id: i, cores: 4, work_s: 2000.0, sleep_s: 0.0 })
+                .collect(),
+        );
+        let r = sim.run();
+        assert!(r.abandoned.is_empty(), "survivor must absorb every retry");
+        let mut ids: Vec<u64> = r.tasks.iter().map(|t| t.task_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>(), "exactly-once completion set");
+        assert!(r.pilots[0].died_at.is_some(), "pilot 0 must die");
+        assert!(r.pilots[0].tasks_requeued > 0, "mid-run kill must roll back tasks");
+        assert!(r.pilots[1].died_at.is_none());
+        assert_eq!(r.retry_waves.len(), 1);
+        assert_eq!(r.retry_waves[0].pilot, 0);
+        assert_eq!(r.retry_waves[0].tasks.len(), r.pilots[0].tasks_requeued);
+        // pilot_of counts stay consistent with per-pilot tallies.
+        for (i, p) in r.pilots.iter().enumerate() {
+            let cnt = r.pilot_of.iter().filter(|&&x| x == i as u32).count();
+            assert_eq!(cnt, p.tasks_executed, "pilot {i}");
+        }
+        assert_eq!(sim.free_capacity(), 256, "all cores returned, dead pilot included");
+    }
+
+    #[test]
+    fn walltime_expiry_reports_partial_run_without_hanging() {
+        // Walltime far shorter than any task: both pilots expire with
+        // work in flight and budget 0 abandons everything — completed
+        // and abandoned must still partition the submission exactly.
+        let n = 100u64;
+        let fault = FaultSpec { walltime_s: 40.0, retry_budget: 0, ..FaultSpec::none() };
+        let mut sim = MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, 2, 5).with_faults(fault);
+        sim.submit(
+            (0..n)
+                .map(|i| HpcTaskSpec { task_id: i, cores: 1, work_s: 2000.0, sleep_s: 0.0 })
+                .collect(),
+        );
+        let r = sim.run();
+        assert!(r.tasks.is_empty(), "40 s walltime cannot finish 180 s tasks");
+        let mut ab = r.abandoned.clone();
+        ab.sort_unstable();
+        ab.dedup();
+        assert_eq!(ab.len() as u64, n, "no duplicates, nothing dropped");
+        assert!(r.pilots.iter().all(|p| p.died_at.is_some()));
+        assert_eq!(sim.free_capacity(), 256);
+        assert!(r.makespan_s > 0.0, "partial run still reports when it ended");
+    }
+
+    #[test]
+    fn certain_materialization_failure_abandons_everything() {
+        let fault = FaultSpec { materialization_failure_p: 1.0, ..FaultSpec::none() };
+        let mut sim = MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, 3, 8).with_faults(fault);
+        sim.submit((0..50).map(HpcTaskSpec::noop).collect());
+        let r = sim.run();
+        assert!(r.tasks.is_empty());
+        assert_eq!(r.abandoned.len(), 50);
+        assert!(r.pilots.iter().all(|p| p.died_at.is_some() && !p.materialized));
+        assert_eq!(r.pilots.iter().map(|p| p.tasks_executed).sum::<usize>(), 0);
+        assert!(r.retry_waves.is_empty(), "nothing launched, nothing to re-queue");
+    }
+
+    #[test]
+    fn retry_budget_zero_abandons_on_first_kill() {
+        // Single pilot, killed 5 s after agent-ready with ~5.7 s tasks in
+        // flight: nothing completes, budget 0 abandons the in-flight
+        // tasks and the fleet death strands the rest.
+        let fault =
+            FaultSpec { injected_kill: Some((0, 5.0)), retry_budget: 0, ..FaultSpec::none() };
+        let mut sim = MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, 1, 4).with_faults(fault);
+        sim.submit(
+            (0..10)
+                .map(|i| HpcTaskSpec { task_id: i, cores: 32, work_s: 2000.0, sleep_s: 0.0 })
+                .collect(),
+        );
+        let r = sim.run();
+        assert!(r.tasks.is_empty());
+        assert_eq!(r.abandoned.len(), 10);
+        assert!(r.retry_waves.is_empty(), "budget 0 never re-queues");
+        assert_eq!(r.pilots[0].tasks_requeued, 0);
+        assert_eq!(sim.free_capacity(), 128);
+    }
+
+    #[test]
+    fn mtbf_kills_resolve_every_task_exactly_once() {
+        // Stochastic kills with a generous budget: however the deaths
+        // land, completed + abandoned must partition the submission.
+        let n = 400u64;
+        let fault = FaultSpec { mtbf_s: 200.0, retry_budget: 5, ..FaultSpec::none() };
+        let mut sim =
+            MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, 4, 21).with_faults(fault);
+        sim.submit(
+            (0..n)
+                .map(|i| HpcTaskSpec { task_id: i, cores: 2, work_s: 500.0, sleep_s: 0.0 })
+                .collect(),
+        );
+        let r = sim.run();
+        let mut ids: Vec<u64> = r.tasks.iter().map(|t| t.task_id).collect();
+        ids.extend(&r.abandoned);
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>(), "exactly-once partition");
+        assert_eq!(sim.free_capacity(), 512, "core conservation under kills");
+        let requeued: usize = r.pilots.iter().map(|p| p.tasks_requeued).sum();
+        let waved: usize = r.retry_waves.iter().map(|w| w.tasks.len()).sum();
+        assert_eq!(requeued, waved, "wave log matches per-pilot tallies");
     }
 }

@@ -104,6 +104,12 @@ impl Prng {
         (mu + sigma2.sqrt() * self.normal()).exp()
     }
 
+    /// Exponential with the given mean (pilot MTBF draws). `uniform` is in
+    /// [0, 1), so `1 - u` is in (0, 1] and the log is finite.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.uniform()).ln()
+    }
+
     pub fn bool_with_p(&mut self, p: f64) -> bool {
         self.uniform() < p
     }
@@ -199,6 +205,20 @@ mod tests {
         }
         let mean = sum / n as f64;
         assert!((mean - 3.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_positive_and_mean_close() {
+        let mut r = Prng::new(17);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.exponential(4.0);
+            assert!(v >= 0.0 && v.is_finite());
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean={mean}");
     }
 
     #[test]

@@ -12,12 +12,15 @@
 //! * The production path (`HpcManager`, which always runs the multi-pilot
 //!   scheduler) must reproduce the reference records end to end when
 //!   `pilots = 1`.
+//! * `FaultSpec::none()` is a true no-op (ISSUE 6): the fault machinery
+//!   draws nothing and schedules nothing, so the P ∈ {1, 4} schedules
+//!   stay byte-identical to the fault-free runs.
 
 use hydra::api::task::{Payload, TaskDescription, TaskId};
 use hydra::api::{ProviderConfig, ResourceRequest};
 use hydra::broker::hpc::{pilot_specs, HpcManager};
 use hydra::broker::state::TaskRegistry;
-use hydra::sim::hpc::{HpcSim, HpcTaskSpec, MultiPilotSim, PilotSpec};
+use hydra::sim::hpc::{FaultSpec, HpcSim, HpcTaskSpec, MultiPilotSim, PilotSpec};
 use hydra::sim::provider::{PlatformProfile, ProviderId};
 
 const SEEDS: [u64; 3] = [11, 0xBEEF, 0x5EED5];
@@ -150,6 +153,42 @@ fn multi_pilot_completes_the_same_records_any_order() {
             let again = run_multi(tasks, 1, pilots, seed);
             assert_eq!(multi.tasks, again.tasks, "pilots={pilots} seed={seed}");
             assert_eq!(multi.pilot_of, again.pilot_of, "pilots={pilots} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn fault_spec_none_is_a_true_noop() {
+    // ISSUE 6 acceptance: with `FaultSpec::none()` the fault machinery
+    // must consume nothing — no PRNG draws, no extra events — so the
+    // schedule stays byte-identical to the fault-free run for P ∈ {1, 4}
+    // across 3 seeds, down to the f64 bit patterns.
+    for &seed in &SEEDS {
+        for pilots in [1u32, 4] {
+            let n = 2048;
+            let plain = run_multi(workload(n), 1, pilots, seed);
+            let mut sim = MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, pilots, seed)
+                .with_faults(FaultSpec::none());
+            sim.submit(workload(n));
+            let faultless = sim.run();
+
+            assert_eq!(plain.tasks.len(), faultless.tasks.len(), "seed={seed} P={pilots}");
+            for (a, b) in plain.tasks.iter().zip(&faultless.tasks) {
+                assert_eq!(a.task_id, b.task_id, "seed={seed} P={pilots}");
+                assert_eq!(a.launched_s.to_bits(), b.launched_s.to_bits());
+                assert_eq!(a.finished_s.to_bits(), b.finished_s.to_bits());
+                assert_eq!(a.failed, b.failed);
+            }
+            assert_eq!(plain.pilot_of, faultless.pilot_of, "seed={seed} P={pilots}");
+            assert_eq!(
+                plain.makespan_s.to_bits(),
+                faultless.makespan_s.to_bits(),
+                "seed={seed} P={pilots}"
+            );
+            assert_eq!(plain.events_processed, faultless.events_processed);
+            assert!(faultless.abandoned.is_empty(), "seed={seed} P={pilots}");
+            assert!(faultless.retry_waves.is_empty(), "seed={seed} P={pilots}");
+            assert!(faultless.pilots.iter().all(|p| p.died_at.is_none() && p.materialized));
         }
     }
 }

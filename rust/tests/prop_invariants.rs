@@ -6,7 +6,7 @@ use hydra::api::task::{Payload, TaskDescription, TaskId, TaskState};
 use hydra::broker::partitioner::{PartitionModel, Partitioner, PodBuildMode};
 use hydra::broker::policy::{assign, BrokerPolicy};
 use hydra::broker::state::TaskRegistry;
-use hydra::sim::hpc::{HpcSim, HpcTaskSpec, MultiPilotSim, PilotSpec};
+use hydra::sim::hpc::{FaultSpec, HpcSim, HpcTaskSpec, MultiPilotSim, PilotSpec};
 use hydra::sim::kubernetes::{simulate_batch, ClusterSpec};
 use hydra::sim::provider::{PlatformProfile, ProviderId};
 use hydra::util::prop::{forall, Gen};
@@ -283,6 +283,90 @@ fn prop_multi_pilot_conserves_cores_and_tasks() {
             // can sit up to half a microsecond past the rounded event
             // clock that defines the makespan.
             assert!(t.finished_s <= r.makespan_s + 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_exactly_once_under_pilot_faults() {
+    // ISSUE 6: under any mix of pilot-level faults — injected kills,
+    // MTBF draws, walltime expiry, materialization failure, any retry
+    // budget — every submitted task ends exactly once: in one completed
+    // record on one pilot, or in `abandoned`. Never both, never twice,
+    // never silently dropped. Every reservation a dying pilot rolled
+    // back is returned (free capacity ends at the fleet total), and the
+    // re-queue accounting agrees between pilots and recorded waves.
+    let profile = PlatformProfile::of(ProviderId::Bridges2);
+    forall("exactly-once completion under pilot faults", 60, |g| {
+        let pilot_count = g.usize(1, 5);
+        let specs: Vec<PilotSpec> = (0..pilot_count)
+            .map(|_| PilotSpec { nodes: g.u64(1, 3) as u32 })
+            .collect();
+        let fault = FaultSpec {
+            walltime_s: if g.bool() { g.f64(10.0, 500.0) } else { 0.0 },
+            mtbf_s: if g.bool() { g.f64(50.0, 2000.0) } else { 0.0 },
+            materialization_failure_p: if g.u64(0, 3) == 0 { g.f64(0.0, 1.0) } else { 0.0 },
+            retry_budget: g.u64(0, 4) as u32,
+            injected_kill: if g.bool() {
+                Some((g.u64(0, pilot_count as u64 - 1) as u32, g.f64(0.0, 120.0)))
+            } else {
+                None
+            },
+        };
+        let tasks: Vec<HpcTaskSpec> = g
+            .vec(0, 120, |g| HpcTaskSpec {
+                task_id: 0, // re-keyed to the submission index below
+                cores: g.u64(1, 600) as u32,
+                work_s: g.f64(0.0, 50.0),
+                sleep_s: if g.bool() { g.f64(0.0, 2.0) } else { 0.0 },
+            })
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut t)| {
+                t.task_id = i as u64;
+                t
+            })
+            .collect();
+        let n = tasks.len();
+        let mut sim =
+            MultiPilotSim::new(profile.clone(), specs.clone(), g.u64(0, u64::MAX / 2))
+                .with_faults(fault);
+        sim.submit(tasks);
+        let r = sim.run();
+
+        // Completed records + abandoned ids partition the submission.
+        let mut ids: Vec<u64> = r.tasks.iter().map(|t| t.task_id).collect();
+        ids.extend(r.abandoned.iter().copied());
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "exactly-once partition");
+
+        // Every rolled-back reservation was returned.
+        let total: u32 = specs.iter().map(|s| s.nodes * 128).sum();
+        assert_eq!(sim.free_capacity(), total, "reservations leaked across pilot deaths");
+
+        // Per-pilot bounds and assignment consistency over the survivors'
+        // completed work.
+        assert_eq!(r.pilot_of.len(), r.tasks.len());
+        for (i, p) in r.pilots.iter().enumerate() {
+            assert!(p.peak_cores_busy <= p.total_cores, "pilot {i} over-allocated");
+            assert!((0.0..=1.0).contains(&p.utilization), "pilot {i} utilization");
+            let assigned = r.pilot_of.iter().filter(|&&x| x as usize == i).count();
+            assert_eq!(assigned, p.tasks_executed, "pilot {i} assignment count");
+            if !p.materialized {
+                assert_eq!(p.tasks_executed, 0, "unmaterialized pilot {i} ran tasks");
+            }
+        }
+
+        // Re-queue accounting: pilots' rollback counters match the waves.
+        let waved: usize = r.retry_waves.iter().map(|w| w.tasks.len()).sum();
+        assert_eq!(
+            r.pilots.iter().map(|p| p.tasks_requeued).sum::<usize>(),
+            waved,
+            "requeue accounting out of sync with recorded waves"
+        );
+        for w in &r.retry_waves {
+            assert!((w.pilot as usize) < pilot_count);
+            assert!(r.pilots[w.pilot as usize].died_at.is_some(), "wave from a live pilot");
         }
     });
 }
