@@ -14,13 +14,14 @@
 #   * events/s rows (sched microbench) must not drop;
 #   * OVH and serialize_ms rows (broker points) must not rise.
 # Rows present in only one of baseline/fresh (e.g. a bench point added by
-# the current PR, like exp_faas_4k or exp_hpc_multipilot_4k) WARN but
-# never fail the gate — the schema is expected to grow a row per PR, and
-# adding a point must not trip the diff. Only shared-row regressions
-# fail. A freshly added row therefore stays WARN-only until a measured
-# run is promoted to the committed baseline with
-# `./ci/bench_gate.sh --refresh`; from then on it gates like any other
-# row.
+# the current PR, like exp_faas_4k, exp_hpc_multipilot_4k, or this PR's
+# exp_failover_4k) WARN but never fail the gate — the schema is expected
+# to grow a row per PR, and adding a point must not trip the diff. Only
+# shared-row regressions fail. A freshly added row therefore stays
+# WARN-only until a measured run is promoted to the committed baseline
+# with `./ci/bench_gate.sh --refresh`; from then on it gates like any
+# other row (exp_failover_4k included, once a baseline carrying it
+# lands).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -8,6 +8,7 @@ use crate::sim::hpc::PilotSpec;
 use crate::sim::kubernetes::ClusterSpec;
 use crate::sim::provider::{PlatformKind, PlatformProfile, ProviderId};
 
+pub use crate::broker::data::{ProviderFaultSpec, RetryPolicy};
 pub use crate::sim::hpc::FaultSpec;
 
 /// The service level the resources are acquired through.
@@ -58,6 +59,13 @@ pub struct ResourceRequest {
     /// Per-task failure-injection probability in [0, 1] (the knob the
     /// CaaS manager already had, now uniform across services).
     pub task_failure_rate: f64,
+    /// Provider control-plane fault model (any service kind): outage
+    /// window, transient submit errors, byte throttling. Validated by
+    /// [`ProviderFaultSpec::validate`]; `none()` consumes no PRNG state.
+    pub provider_fault: ProviderFaultSpec,
+    /// Retry/backoff policy for fallible provider submits. The default
+    /// policy with a `none()` fault spec is a strict no-op.
+    pub retry: RetryPolicy,
 }
 
 impl ResourceRequest {
@@ -75,6 +83,8 @@ impl ResourceRequest {
             pilot_nodes: Vec::new(),
             fault: FaultSpec::none(),
             task_failure_rate: 0.0,
+            provider_fault: ProviderFaultSpec::none(),
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -100,6 +110,8 @@ impl ResourceRequest {
             pilot_nodes: Vec::new(),
             fault: FaultSpec::none(),
             task_failure_rate: 0.0,
+            provider_fault: ProviderFaultSpec::none(),
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -121,6 +133,8 @@ impl ResourceRequest {
             pilot_nodes: Vec::new(),
             fault: FaultSpec::none(),
             task_failure_rate: 0.0,
+            provider_fault: ProviderFaultSpec::none(),
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -161,6 +175,18 @@ impl ResourceRequest {
     /// Per-task failure-injection probability in [0, 1].
     pub fn with_task_failure_rate(mut self, p: f64) -> Self {
         self.task_failure_rate = p;
+        self
+    }
+
+    /// Provider control-plane fault model (see [`ProviderFaultSpec`]).
+    pub fn with_provider_faults(mut self, fault: ProviderFaultSpec) -> Self {
+        self.provider_fault = fault;
+        self
+    }
+
+    /// Retry/backoff policy for fallible provider submits.
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
         self
     }
 
@@ -258,6 +284,12 @@ impl ResourceRequest {
                 self.provider, self.task_failure_rate
             ));
         }
+        self.provider_fault
+            .validate()
+            .map_err(|e| format!("{}: invalid provider fault spec: {e}", self.provider))?;
+        self.retry
+            .validate()
+            .map_err(|e| format!("{}: invalid retry policy: {e}", self.provider))?;
         Ok(())
     }
 
@@ -379,6 +411,39 @@ mod tests {
             .with_task_failure_rate(-0.1)
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn provider_fault_and_retry_ranges_validated_on_every_service() {
+        // The provider control plane is service-agnostic: faults and
+        // retry policy are accepted on CaaS, Batch, and FaaS alike.
+        let fault = ProviderFaultSpec {
+            outage_window: Some((10.0, 20.0)),
+            transient_error_p: 0.1,
+            throttle_after_bytes: 1 << 20,
+        };
+        for ok in [
+            ResourceRequest::kubernetes(ProviderId::Aws, 1, 8),
+            ResourceRequest::pilot(ProviderId::Bridges2, 1),
+            ResourceRequest::faas(ProviderId::Aws, 16),
+        ] {
+            assert!(ok.clone().with_provider_faults(fault).validate().is_ok(), "{:?}", ok);
+        }
+
+        let bad = ResourceRequest::kubernetes(ProviderId::Aws, 1, 8).with_provider_faults(
+            ProviderFaultSpec { transient_error_p: 2.0, ..ProviderFaultSpec::none() },
+        );
+        assert!(bad.validate().is_err());
+        let bad = ResourceRequest::faas(ProviderId::Aws, 16).with_provider_faults(
+            ProviderFaultSpec { outage_window: Some((9.0, 3.0)), ..ProviderFaultSpec::none() },
+        );
+        assert!(bad.validate().is_err());
+        let bad = ResourceRequest::pilot(ProviderId::Bridges2, 1)
+            .with_retry_policy(RetryPolicy { max_attempts: 0, ..RetryPolicy::default() });
+        assert!(bad.validate().is_err());
+        let bad = ResourceRequest::kubernetes(ProviderId::Aws, 1, 8)
+            .with_retry_policy(RetryPolicy { jitter: 1.5, ..RetryPolicy::default() });
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -20,7 +20,12 @@
 //!   `exp_hpc_faulty_4k` re-runs that shape with pilot 2 killed 5 s
 //!   after its agent materializes (ISSUE 6: fault-tolerant fleets),
 //!   cross-checking that the survivors re-run the dead pilot's tasks and
-//!   complete exactly the healthy run's task set.
+//!   complete exactly the healthy run's task set. `exp_failover_4k`
+//!   brokers the mixed workload across two CaaS providers with one
+//!   control plane down for the whole run (ISSUE 7: fallible provider
+//!   endpoints + cross-provider failover), cross-checking that the dead
+//!   provider's slice fails over and the completion set matches the
+//!   healthy run's.
 //! * **serialize microbench** — threads=1 vs threads=N manifest
 //!   serialization + bulk framing on the 4K-task SCPP point (ISSUE 3
 //!   tentpole), with a byte-identity cross-check on the framed payload.
@@ -30,10 +35,13 @@
 //!   (identical `TaskRecord`s from both schedulers).
 
 use hydra::api::resource::FaultSpec;
-use hydra::api::task::TaskId;
+use hydra::api::task::{TaskId, TaskState};
 use hydra::api::{ResourceRequest, TaskDescription};
 use hydra::broker::partitioner::Partitioner;
-use hydra::broker::{BrokerPolicy, Hydra, PartitionModel, PodBuildMode, SerializeOptions};
+use hydra::broker::{
+    BrokerPolicy, BrokerRun, Hydra, PartitionModel, PodBuildMode, ProviderFaultSpec, RetryPolicy,
+    SerializeOptions,
+};
 use hydra::sim::kubernetes::{ClusterSpec, ContainerSpec, KubernetesSim, PodSpec, SchedulerKind};
 use hydra::sim::provider::ProviderId;
 use hydra::util::json::Json;
@@ -137,17 +145,116 @@ fn run_mixed_point(name: &'static str) -> Point {
                 .build()
                 .expect("simulated providers must build")
         },
-        || {
-            (0..POINT_TASKS)
-                .map(|i| match i % 3 {
-                    0 => TaskDescription::container(format!("con-{i}"), "hydra/noop:latest"),
-                    1 => TaskDescription::executable(format!("exe-{i}"), "noop"),
-                    _ => TaskDescription::function(format!("fn-{i}"), "hydra.noop:handler"),
-                })
-                .collect()
-        },
+        mixed_tasks,
         &BrokerPolicy::ByTaskKind,
     )
+}
+
+/// The mixed-kind 4K workload shared by `exp_faas_4k` and
+/// `exp_failover_4k`: containers, executables, and functions round-robin.
+fn mixed_tasks() -> Vec<TaskDescription> {
+    (0..POINT_TASKS)
+        .map(|i| match i % 3 {
+            0 => TaskDescription::container(format!("con-{i}"), "hydra/noop:latest"),
+            1 => TaskDescription::executable(format!("exe-{i}"), "noop"),
+            _ => TaskDescription::function(format!("fn-{i}"), "hydra.noop:handler"),
+        })
+        .collect()
+}
+
+/// ISSUE 7 configuration: the `exp_faas_4k` shape plus a second CaaS
+/// provider (Chameleon). With `outage` armed, Chameleon's control plane
+/// is down for the whole run, so its container slice must fail over to
+/// Jetstream2 through the broker's re-brokering path.
+fn failover_broker(seed: u64, outage: bool) -> Hydra {
+    let mut chameleon = ResourceRequest::kubernetes(ProviderId::Chameleon, 1, 16);
+    if outage {
+        chameleon = chameleon
+            .with_provider_faults(ProviderFaultSpec {
+                outage_window: Some((0.0, 1e9)),
+                ..ProviderFaultSpec::none()
+            })
+            .with_retry_policy(RetryPolicy { max_attempts: 2, ..RetryPolicy::default() });
+    }
+    Hydra::builder()
+        .partition_model(PartitionModel::Mcpp { max_cpp: 16 })
+        .seed(seed)
+        .simulated_provider(ProviderId::Jetstream2)
+        .resource(ResourceRequest::kubernetes(ProviderId::Jetstream2, 1, 16))
+        .simulated_provider(ProviderId::Chameleon)
+        .resource(chameleon)
+        .simulated_provider(ProviderId::Bridges2)
+        .resource(ResourceRequest::pilot(ProviderId::Bridges2, 1))
+        .simulated_provider(ProviderId::Aws)
+        .resource(ResourceRequest::faas(ProviderId::Aws, 64))
+        .build()
+        .expect("simulated providers must build")
+}
+
+fn run_failover_point(name: &'static str) -> Point {
+    measure_point(name, |seed| failover_broker(seed, true), mixed_tasks, &BrokerPolicy::ByTaskKind)
+}
+
+/// Sorted ids of the tasks a brokered run drove to `Done`.
+fn done_ids(hydra: &Hydra, run: &BrokerRun) -> Vec<u64> {
+    let mut ids: Vec<u64> = run
+        .assignment
+        .values()
+        .flatten()
+        .filter(|id| hydra.registry().state_of(**id) == Some(TaskState::Done))
+        .map(|id| id.0)
+        .collect();
+    ids.sort_unstable();
+    ids
+}
+
+/// Resilience accounting of one outage run at a fixed seed, for the
+/// completion-set cross-check against the healthy run.
+struct FailoverCheck {
+    completed: Vec<u64>,
+    failover_legs: usize,
+    failed_over: usize,
+    abandoned: usize,
+    submit_retries: usize,
+    backoff_ms: u64,
+    failover_bulk_bytes: usize,
+}
+
+fn failover_healthy_ids(seed: u64) -> Vec<u64> {
+    let hydra = failover_broker(seed, false);
+    let run = hydra
+        .submit(mixed_tasks(), &BrokerPolicy::ByTaskKind)
+        .expect("healthy failover reference must broker");
+    assert!(run.failovers.is_empty(), "healthy run must not fail over");
+    done_ids(&hydra, &run)
+}
+
+fn failover_faulty_check(seed: u64) -> FailoverCheck {
+    let hydra = failover_broker(seed, true);
+    let run = hydra
+        .submit(mixed_tasks(), &BrokerPolicy::ByTaskKind)
+        .expect("failover point must broker");
+    let completed = done_ids(&hydra, &run);
+    let tallies = run
+        .reports
+        .values()
+        .map(|r| r.run().faults)
+        .chain(run.failovers.iter().map(|f| f.report.run().faults));
+    let (mut submit_retries, mut backoff_ms, mut failed_over) = (0usize, 0u64, 0usize);
+    for f in tallies {
+        submit_retries += f.submit_retries;
+        backoff_ms += f.backoff_ms;
+        failed_over += f.failed_over;
+    }
+    FailoverCheck {
+        completed,
+        failover_legs: run.failovers.len(),
+        failed_over,
+        abandoned: run.abandoned.len(),
+        submit_retries,
+        backoff_ms,
+        failover_bulk_bytes: run.failovers.iter().map(|f| f.report.run().bulk_bytes).sum(),
+    }
 }
 
 /// One configuration of the ISSUE 5 HPC point: `pilots` concurrent
@@ -380,6 +487,7 @@ fn main() {
         run_mixed_point("exp_faas_4k"),
         run_hpc_multipilot_point("exp_hpc_multipilot_4k", 4),
         run_hpc_faulty_point("exp_hpc_faulty_4k"),
+        run_failover_point("exp_failover_4k"),
     ];
     for p in &points {
         println!(
@@ -426,6 +534,35 @@ fn main() {
         "exp_hpc_faulty_4k: pilot 2 killed mid-run, {} tasks re-queued over {} wave(s) \
          ({} B resubmitted); completion set matches the healthy run (seed {:#x})",
         fault.requeued, fault.retry_waves, fault.retry_bulk_bytes, SEEDS[0]
+    );
+
+    // ISSUE 7 acceptance: one CaaS provider's control plane is down for
+    // the whole run; its container slice must land on the surviving CaaS
+    // provider with the completion set identical to the healthy run, at
+    // least one task failed over, and the failover transport accounted.
+    let healthy = failover_healthy_ids(SEEDS[0]);
+    let failover = failover_faulty_check(SEEDS[0]);
+    assert_eq!(healthy.len(), POINT_TASKS, "healthy failover reference lost tasks");
+    assert_eq!(
+        failover.completed, healthy,
+        "outage run lost or duplicated tasks vs the healthy run"
+    );
+    assert!(failover.failed_over >= 1, "the dead provider's slice must fail over");
+    assert_eq!(failover.abandoned, 0, "a surviving CaaS provider must absorb the slice");
+    assert!(
+        failover.failover_bulk_bytes > 0,
+        "the failover leg must account its transport bytes"
+    );
+    println!(
+        "exp_failover_4k: provider down mid-submit, {} tasks failed over in {} leg(s) \
+         ({} B re-shipped, {} submit retries, {} ms backoff); completion set matches the \
+         healthy run (seed {:#x})",
+        failover.failed_over,
+        failover.failover_legs,
+        failover.failover_bulk_bytes,
+        failover.submit_retries,
+        failover.backoff_ms,
+        SEEDS[0]
     );
 
     println!("\n--- serialize microbench ({POINT_TASKS} tasks, SCPP, best of 5) ---");
@@ -502,6 +639,20 @@ fn main() {
                 .set("retry_waves", fault.retry_waves)
                 .set("retry_bulk_bytes", fault.retry_bulk_bytes)
                 .set("abandoned", fault.abandoned)
+                .set("completion_set_identical", true),
+        )
+        .set(
+            "failover_check",
+            Json::obj()
+                .set("tasks", POINT_TASKS)
+                .set("down_provider", "chi")
+                .set("seed", SEEDS[0])
+                .set("failover_legs", failover.failover_legs)
+                .set("tasks_failed_over", failover.failed_over)
+                .set("failover_bulk_bytes", failover.failover_bulk_bytes)
+                .set("submit_retries", failover.submit_retries)
+                .set("backoff_ms", failover.backoff_ms)
+                .set("abandoned", failover.abandoned)
                 .set("completion_set_identical", true),
         )
         .set(

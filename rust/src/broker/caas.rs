@@ -21,9 +21,10 @@
 use crate::api::resource::ResourceRequest;
 use crate::api::task::{TaskDescription, TaskId, TaskState};
 use crate::api::ProviderConfig;
-use crate::broker::data::submit_bulk;
+use crate::broker::data::ProviderEndpoint;
 use crate::broker::manager::{FaultTally, ManagerError, ManagerRun, RunDetail};
 use crate::broker::partitioner::{PartitionError, Partitioner, PodBuildMode, PreparedWorkload};
+use crate::broker::provider_proxy::CircuitBreaker;
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
 use crate::sim::kubernetes::KubernetesSim;
@@ -44,6 +45,9 @@ pub struct CaasManager {
     pub cancel_on_failure: bool,
     /// Injected per-container failure probability (0 = reliable platform).
     pub failure_rate: f64,
+    /// Per-provider circuit breaker shared with the provider handle
+    /// (clones share state; the factory threads the handle's breaker in).
+    pub breaker: CircuitBreaker,
 }
 
 impl CaasManager {
@@ -62,12 +66,19 @@ impl CaasManager {
             seed,
             cancel_on_failure: false,
             failure_rate,
+            breaker: CircuitBreaker::default(),
         })
     }
 
     pub fn with_failure_handling(mut self, failure_rate: f64, cancel_on_failure: bool) -> Self {
         self.failure_rate = failure_rate;
         self.cancel_on_failure = cancel_on_failure;
+        self
+    }
+
+    /// Share an existing per-provider circuit breaker.
+    pub fn with_breaker(mut self, breaker: CircuitBreaker) -> Self {
+        self.breaker = breaker;
         self
     }
 
@@ -140,12 +151,19 @@ impl CaasManager {
                 bulk
             }
         };
-        let bulk_len = submit_bulk(&bulk);
+        let mut endpoint = ProviderEndpoint::new(
+            self.resource.provider_fault,
+            self.resource.retry,
+            self.breaker.clone(),
+            self.seed,
+        );
+        let bulk_len = endpoint.submit(&bulk)?;
         // Both modes ship every manifest byte plus the `[`/`,`/`]`
         // envelope; a mismatch means the framing dropped payload.
         let expected_bulk = if n_pods == 0 { 2 } else { bytes_serialized + n_pods + 1 };
         assert_eq!(bulk_len, expected_bulk, "bulk framing lost bytes");
-        let submit_s = sw.elapsed_secs();
+        // Simulated backoff is charged into OVH: resilience has a cost.
+        let submit_s = sw.elapsed_secs() + endpoint.backoff_s();
         registry.transition_all(&ids, TaskState::Submitted)?;
 
         let PreparedWorkload { pods, .. } = prepared;
@@ -211,8 +229,15 @@ impl CaasManager {
             metrics,
             bytes_serialized,
             bulk_bytes: bulk_len,
-            // No pilot fleet on the CaaS path: only task-level failures.
-            faults: FaultTally { failed: report.failed_tasks, ..FaultTally::default() },
+            // No pilot fleet on the CaaS path: task-level failures plus
+            // the control-plane submit accounting.
+            faults: FaultTally {
+                failed: report.failed_tasks,
+                submit_retries: endpoint.submit_retries(),
+                backoff_ms: endpoint.backoff_ms(),
+                circuit_opens: endpoint.circuit_opens(),
+                ..FaultTally::default()
+            },
             detail: RunDetail::Caas { sim: report, provision: self.provision() },
         })
     }
@@ -351,6 +376,46 @@ mod tests {
         let r = manager(PartitionModel::Scpp).execute(&tasks, &reg).unwrap();
         assert_eq!(r.detail.caas_sim().unwrap().failed_tasks, 0);
         assert_eq!(reg.counts().get(&TaskState::Done), Some(&100));
+    }
+
+    #[test]
+    fn short_outage_is_ridden_out_and_surfaces_in_the_tally() {
+        use crate::api::resource::ProviderFaultSpec;
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 64);
+        let mut m = manager(PartitionModel::Scpp);
+        // With default backoff (0.05s base, 2x, ±10% jitter) the clock
+        // passes 0.12s after exactly two retries, for any jitter draw.
+        m.resource = m.resource.clone().with_provider_faults(ProviderFaultSpec {
+            outage_window: Some((0.0, 0.12)),
+            ..ProviderFaultSpec::none()
+        });
+        let r = m.execute(&tasks, &reg).unwrap();
+        assert_eq!(r.faults.submit_retries, 2);
+        assert!(r.faults.backoff_ms > 0);
+        // Two waits of >= 0.045s and >= 0.09s are charged into OVH.
+        assert!(r.metrics.ovh.submit_s > 0.13, "backoff is charged into OVH");
+        assert_eq!(r.faults.failed_over, 0, "failover is broker-level, not manager-level");
+        assert_eq!(r.faults.circuit_opens, 0);
+        assert!(reg.all_final());
+    }
+
+    #[test]
+    fn hard_outage_errors_before_submitted_transition() {
+        use crate::api::resource::ProviderFaultSpec;
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 16);
+        let mut m = manager(PartitionModel::Scpp);
+        m.resource = m.resource.clone().with_provider_faults(ProviderFaultSpec {
+            outage_window: Some((0.0, 1e9)),
+            ..ProviderFaultSpec::none()
+        });
+        let e = m.execute(&tasks, &reg).unwrap_err();
+        assert!(e.retryable(), "control-plane outage is provider-local: {e}");
+        // The slice failed before Submitted: every task is re-brokerable.
+        for (id, _) in &tasks {
+            assert_eq!(reg.state_of(*id), Some(TaskState::Partitioned));
+        }
     }
 
     #[test]

@@ -21,7 +21,9 @@
 //! CaaS/FaaS/HPC managers share to serialize task batches in parallel and
 //! frame the bulk submission payload copy-free from the shard buffers.
 
+use crate::broker::provider_proxy::CircuitBreaker;
 use crate::util::json::write_str_into;
+use crate::util::prng::Prng;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -260,6 +262,332 @@ pub fn frame_bulk(shards: &[ManifestShard], opts: SerializeOptions) -> Vec<u8> {
 /// length (ISSUE 3 satellite: `bulk_len` asserted, not just hinted).
 pub fn submit_bulk(payload: &[u8]) -> usize {
     std::hint::black_box(payload).len()
+}
+
+// ---------------------------------------------------------------------------
+// Fallible provider control plane (ISSUE 7)
+// ---------------------------------------------------------------------------
+
+/// Salt for the dedicated provider-fault stream: decorrelated from the
+/// schedule and pilot-fault streams for the same seed, stable across
+/// runs (same pattern as `sim::hpc`'s `FAULT_STREAM_SALT`).
+pub const PROVIDER_FAULT_STREAM_SALT: u64 = 0xFA11_BACC_0FF5;
+
+/// Provider-API fault model (ISSUE 7). Every knob is off at zero; the
+/// stochastic draws come from a dedicated PRNG stream
+/// (`seed ^ PROVIDER_FAULT_STREAM_SALT`) so [`ProviderFaultSpec::none`]
+/// consumes nothing and the healthy submit path stays byte-identical to
+/// the infallible-sink reference (`tests/pilot_equivalence.rs`).
+///
+/// The model clocks in **simulated backoff seconds**: the endpoint's
+/// clock starts at 0 and advances only while retries back off, so an
+/// `outage_window` of `(0.0, 0.3)` is ridden out by a few retries while
+/// `(0.0, 1e9)` is a hard outage that exhausts any retry budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProviderFaultSpec {
+    /// Provider API down for `[t0, t1)` on the endpoint's backoff clock.
+    pub outage_window: Option<(f64, f64)>,
+    /// Probability each submit attempt fails transiently (5xx-style).
+    pub transient_error_p: f64,
+    /// Accepted-bytes quota between throttle rejections: a submit that
+    /// would push the window past this many bytes is rejected once and
+    /// the window resets (the quota refills while the retry backs off).
+    /// `0` = no throttling.
+    pub throttle_after_bytes: usize,
+}
+
+impl ProviderFaultSpec {
+    /// All fault sources off — the healthy reference provider.
+    pub fn none() -> ProviderFaultSpec {
+        ProviderFaultSpec {
+            outage_window: None,
+            transient_error_p: 0.0,
+            throttle_after_bytes: 0,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.outage_window.is_none()
+            && self.transient_error_p == 0.0
+            && self.throttle_after_bytes == 0
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some((t0, t1)) = self.outage_window {
+            if !t0.is_finite() || t0 < 0.0 || t1.is_nan() || t1 < t0 {
+                return Err(format!("outage_window ({t0}, {t1}) must satisfy 0 <= t0 <= t1"));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.transient_error_p) {
+            return Err(format!(
+                "transient_error_p must be in [0, 1], got {}",
+                self.transient_error_p
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for ProviderFaultSpec {
+    fn default() -> ProviderFaultSpec {
+        ProviderFaultSpec::none()
+    }
+}
+
+/// Retry discipline for provider submits: exponential backoff with
+/// seeded jitter, bounded by an attempt budget and a backoff deadline.
+/// The default policy is a no-op on a healthy provider (no draws, no
+/// simulated time) and retries transient faults ~5 times over ~1.5 s.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Submit attempts per bulk before the error is terminal (>= 1).
+    pub max_attempts: u32,
+    /// Backoff before the first retry, in simulated seconds.
+    pub base_backoff_s: f64,
+    /// Backoff growth factor per retry (>= 1).
+    pub multiplier: f64,
+    /// Jitter fraction in [0, 1): each wait is scaled by a seeded factor
+    /// in `[1 - jitter, 1 + jitter)` to decorrelate retry storms.
+    pub jitter: f64,
+    /// Total simulated backoff budget; exceeding it is terminal.
+    pub deadline_s: f64,
+}
+
+impl RetryPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_attempts == 0 {
+            return Err("max_attempts must be >= 1".into());
+        }
+        if !self.base_backoff_s.is_finite() || self.base_backoff_s < 0.0 {
+            return Err(format!("base_backoff_s must be finite and >= 0, got {}",
+                               self.base_backoff_s));
+        }
+        if !self.multiplier.is_finite() || self.multiplier < 1.0 {
+            return Err(format!("multiplier must be finite and >= 1, got {}", self.multiplier));
+        }
+        if !(0.0..1.0).contains(&self.jitter) {
+            return Err(format!("jitter must be in [0, 1), got {}", self.jitter));
+        }
+        if !self.deadline_s.is_finite() || self.deadline_s <= 0.0 {
+            return Err(format!("deadline_s must be finite and > 0, got {}", self.deadline_s));
+        }
+        Ok(())
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 5,
+            base_backoff_s: 0.05,
+            multiplier: 2.0,
+            jitter: 0.1,
+            deadline_s: 300.0,
+        }
+    }
+}
+
+/// Why a submit attempt (or the whole submit) failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitFailure {
+    /// The provider API is inside its outage window.
+    Outage,
+    /// Transient (5xx-style) rejection.
+    Transient,
+    /// The accepted-bytes quota was exceeded.
+    Throttle,
+    /// The per-provider circuit breaker fast-failed the attempt.
+    CircuitOpen,
+    /// The retry policy's simulated backoff budget ran out.
+    DeadlineExceeded,
+}
+
+impl std::fmt::Display for SubmitFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitFailure::Outage => write!(f, "provider API outage"),
+            SubmitFailure::Transient => write!(f, "transient submit error"),
+            SubmitFailure::Throttle => write!(f, "throttled (bytes quota exceeded)"),
+            SubmitFailure::CircuitOpen => write!(f, "circuit breaker open"),
+            SubmitFailure::DeadlineExceeded => write!(f, "retry deadline exceeded"),
+        }
+    }
+}
+
+/// Terminal outcome of a bulk submit after the retry policy gave up.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubmitError {
+    pub reason: SubmitFailure,
+    /// Attempts made, including the failing one.
+    pub attempts: u32,
+    /// Total simulated backoff charged before giving up.
+    pub backoff_s: f64,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} after {} attempt(s), {:.3}s backoff",
+            self.reason, self.attempts, self.backoff_s
+        )
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Fallible provider-API ingest: wraps [`submit_bulk`] with the seeded
+/// fault model, the retry/backoff policy, and the provider's circuit
+/// breaker (ISSUE 7 tentpole). One endpoint per manager execution; the
+/// breaker is shared across executions through
+/// [`ProviderHandle`](crate::broker::provider_proxy::ProviderHandle).
+///
+/// Healthy path guarantee: with [`ProviderFaultSpec::none`] no PRNG is
+/// even constructed, every submit succeeds on the first attempt, and all
+/// counters stay zero — byte- and draw-identical to calling
+/// [`submit_bulk`] directly.
+#[derive(Debug)]
+pub struct ProviderEndpoint {
+    fault: ProviderFaultSpec,
+    retry: RetryPolicy,
+    breaker: CircuitBreaker,
+    /// Dedicated fault stream; `None` when the spec is all-off so the
+    /// healthy path consumes nothing.
+    prng: Option<Prng>,
+    /// Simulated clock: advances only while retries back off.
+    clock_s: f64,
+    /// Accepted bytes since the last throttle rejection.
+    window_bytes: usize,
+    submit_retries: usize,
+    backoff_s_total: f64,
+    circuit_opens: usize,
+}
+
+impl ProviderEndpoint {
+    pub fn new(
+        fault: ProviderFaultSpec,
+        retry: RetryPolicy,
+        breaker: CircuitBreaker,
+        seed: u64,
+    ) -> ProviderEndpoint {
+        let prng = if fault.is_none() {
+            None
+        } else {
+            Some(Prng::new(seed ^ PROVIDER_FAULT_STREAM_SALT))
+        };
+        ProviderEndpoint {
+            fault,
+            retry,
+            breaker,
+            prng,
+            clock_s: 0.0,
+            window_bytes: 0,
+            submit_retries: 0,
+            backoff_s_total: 0.0,
+            circuit_opens: 0,
+        }
+    }
+
+    /// Submit one framed bulk payload, retrying per the policy. Returns
+    /// the byte count the provider API accepted (the same count
+    /// [`submit_bulk`] reports — byte-accounting asserts are unaffected).
+    pub fn submit(&mut self, payload: &[u8]) -> Result<usize, SubmitError> {
+        let mut attempt: u32 = 0;
+        loop {
+            attempt += 1;
+            if !self.breaker.allow() {
+                return Err(self.terminal(SubmitFailure::CircuitOpen, attempt));
+            }
+            match self.attempt_failure(payload.len()) {
+                None => {
+                    self.breaker.record_success();
+                    self.window_bytes += payload.len();
+                    return Ok(submit_bulk(payload));
+                }
+                Some(reason) => {
+                    if self.breaker.record_failure() {
+                        self.circuit_opens += 1;
+                    }
+                    if attempt >= self.retry.max_attempts {
+                        return Err(self.terminal(reason, attempt));
+                    }
+                    let wait = self.backoff_for(attempt);
+                    if self.backoff_s_total + wait > self.retry.deadline_s {
+                        return Err(self.terminal(SubmitFailure::DeadlineExceeded, attempt));
+                    }
+                    self.clock_s += wait;
+                    self.backoff_s_total += wait;
+                    self.submit_retries += 1;
+                }
+            }
+        }
+    }
+
+    /// Fault checks for one attempt, in fixed order: outage, throttle,
+    /// transient. `None` = the attempt succeeds.
+    fn attempt_failure(&mut self, len: usize) -> Option<SubmitFailure> {
+        if self.fault.is_none() {
+            return None;
+        }
+        if let Some((t0, t1)) = self.fault.outage_window {
+            if self.clock_s >= t0 && self.clock_s < t1 {
+                return Some(SubmitFailure::Outage);
+            }
+        }
+        if self.fault.throttle_after_bytes > 0
+            && self.window_bytes + len > self.fault.throttle_after_bytes
+        {
+            self.window_bytes = 0; // quota refills while the retry backs off
+            return Some(SubmitFailure::Throttle);
+        }
+        if self.fault.transient_error_p > 0.0 {
+            let p = self.fault.transient_error_p;
+            if self.prng.as_mut().expect("fault spec is armed").bool_with_p(p) {
+                return Some(SubmitFailure::Transient);
+            }
+        }
+        None
+    }
+
+    /// Exponential backoff with seeded jitter for the retry after
+    /// `attempt` failures (1-based).
+    fn backoff_for(&mut self, attempt: u32) -> f64 {
+        let base = self.retry.base_backoff_s * self.retry.multiplier.powi(attempt as i32 - 1);
+        if self.retry.jitter > 0.0 {
+            let u = self.prng.as_mut().map(|p| p.uniform()).unwrap_or(0.5);
+            base * (1.0 - self.retry.jitter + 2.0 * self.retry.jitter * u)
+        } else {
+            base
+        }
+    }
+
+    fn terminal(&self, reason: SubmitFailure, attempts: u32) -> SubmitError {
+        SubmitError { reason, attempts, backoff_s: self.backoff_s_total }
+    }
+
+    /// Retried attempts across all submits through this endpoint.
+    pub fn submit_retries(&self) -> usize {
+        self.submit_retries
+    }
+
+    /// Total simulated backoff in seconds — the managers charge this
+    /// into the submit-phase OVH so resilience has a measurable cost.
+    pub fn backoff_s(&self) -> f64 {
+        self.backoff_s_total
+    }
+
+    pub fn backoff_ms(&self) -> u64 {
+        (self.backoff_s_total * 1000.0).round() as u64
+    }
+
+    /// Closed→open transitions this endpoint drove on the breaker.
+    pub fn circuit_opens(&self) -> usize {
+        self.circuit_opens
+    }
+
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
+    }
 }
 
 /// Data operation errors.
@@ -811,6 +1139,170 @@ mod tests {
         let mut shards = num_shards(&[10u64, 20, 30], SerializeOptions::serial());
         shards[0].spans.pop();
         assert_ne!(expected_framed_len(&shards), framed_len(&shards));
+    }
+
+    // -- fallible provider endpoint (ISSUE 7) ----------------------------
+
+    use crate::broker::provider_proxy::CircuitState;
+
+    fn endpoint(fault: ProviderFaultSpec, retry: RetryPolicy) -> ProviderEndpoint {
+        ProviderEndpoint::new(fault, retry, CircuitBreaker::default(), 11)
+    }
+
+    #[test]
+    fn healthy_endpoint_is_a_transparent_sink() {
+        let mut ep = endpoint(ProviderFaultSpec::none(), RetryPolicy::default());
+        for _ in 0..10 {
+            assert_eq!(ep.submit(b"[1,2,3]").unwrap(), 7);
+        }
+        assert_eq!(ep.submit_retries(), 0);
+        assert_eq!(ep.backoff_s(), 0.0);
+        assert_eq!(ep.circuit_opens(), 0);
+        assert_eq!(ep.breaker().state(), CircuitState::Closed);
+    }
+
+    #[test]
+    fn transient_errors_retry_with_growing_backoff() {
+        // p = 1 fails every attempt: 4 retries then a terminal error.
+        let fault = ProviderFaultSpec { transient_error_p: 1.0, ..ProviderFaultSpec::none() };
+        let retry = RetryPolicy { jitter: 0.0, ..RetryPolicy::default() };
+        let mut ep = endpoint(fault, retry);
+        let e = ep.submit(b"[]").unwrap_err();
+        assert_eq!(e.reason, SubmitFailure::Transient);
+        assert_eq!(e.attempts, 5);
+        // 0.05 + 0.1 + 0.2 + 0.4 (exponential, no jitter)
+        assert!((e.backoff_s - 0.75).abs() < 1e-12, "{}", e.backoff_s);
+        assert_eq!(ep.submit_retries(), 4);
+        assert_eq!(ep.backoff_ms(), 750);
+
+        // A moderate rate rides through on retries: across many submits
+        // some retries happen but every submit eventually succeeds. A
+        // generous attempt budget + breaker threshold keep this
+        // independent of the exact draw sequence.
+        let fault = ProviderFaultSpec { transient_error_p: 0.4, ..ProviderFaultSpec::none() };
+        let retry = RetryPolicy { max_attempts: 64, ..RetryPolicy::default() };
+        let mut ep =
+            ProviderEndpoint::new(fault, retry, CircuitBreaker::with_threshold(1000), 11);
+        for _ in 0..50 {
+            assert_eq!(ep.submit(b"[]").unwrap(), 2);
+        }
+        assert!(ep.submit_retries() > 0);
+        assert!(ep.backoff_s() > 0.0);
+    }
+
+    #[test]
+    fn outage_window_rides_out_or_exhausts_attempts() {
+        // A short outage is ridden out: backoff advances the clock past t1.
+        let fault = ProviderFaultSpec {
+            outage_window: Some((0.0, 0.12)),
+            ..ProviderFaultSpec::none()
+        };
+        let retry = RetryPolicy { jitter: 0.0, ..RetryPolicy::default() };
+        let mut ep = endpoint(fault, retry);
+        assert_eq!(ep.submit(b"[]").unwrap(), 2);
+        assert!(ep.submit_retries() >= 2, "clock must back off past the window");
+
+        // A hard outage exhausts the attempt budget.
+        let fault = ProviderFaultSpec {
+            outage_window: Some((0.0, 1e9)),
+            ..ProviderFaultSpec::none()
+        };
+        let mut ep = endpoint(fault, retry);
+        let e = ep.submit(b"[]").unwrap_err();
+        assert_eq!(e.reason, SubmitFailure::Outage);
+        assert_eq!(e.attempts, 5);
+    }
+
+    #[test]
+    fn throttle_rejects_once_then_quota_refills() {
+        let fault = ProviderFaultSpec { throttle_after_bytes: 10, ..ProviderFaultSpec::none() };
+        let mut ep = endpoint(fault, RetryPolicy::default());
+        assert_eq!(ep.submit(b"12345678").unwrap(), 8); // window = 8
+        // 8 + 8 > 10: rejected once, window resets, retry succeeds.
+        assert_eq!(ep.submit(b"12345678").unwrap(), 8);
+        assert_eq!(ep.submit_retries(), 1);
+        // A payload larger than the whole quota can never land.
+        let e = ep.submit(&[b'x'; 64]).unwrap_err();
+        assert_eq!(e.reason, SubmitFailure::Throttle);
+    }
+
+    #[test]
+    fn circuit_opens_after_consecutive_failures_and_fast_fails() {
+        let fault = ProviderFaultSpec { transient_error_p: 1.0, ..ProviderFaultSpec::none() };
+        let retry = RetryPolicy { max_attempts: 10, jitter: 0.0, ..RetryPolicy::default() };
+        let mut ep = endpoint(fault, retry);
+        // 5 consecutive failures trip the breaker; the next allow() is a
+        // fast-fail denial, terminal as CircuitOpen.
+        let e = ep.submit(b"[]").unwrap_err();
+        assert_eq!(e.reason, SubmitFailure::CircuitOpen);
+        assert_eq!(ep.circuit_opens(), 1);
+        assert_eq!(ep.breaker().state(), CircuitState::Open);
+        // The denial moved the breaker toward half-open: the next submit
+        // runs a probe attempt, which fails (p = 1) and re-opens the
+        // circuit — visible as a second open transition.
+        let e = ep.submit(b"[]").unwrap_err();
+        assert_eq!(ep.circuit_opens(), 2, "half-open probe must run and re-open");
+        assert_eq!(e.reason, SubmitFailure::CircuitOpen);
+        assert_eq!(e.attempts, 2, "one probe attempt, then fast-fail");
+    }
+
+    #[test]
+    fn deadline_bounds_total_backoff() {
+        let fault = ProviderFaultSpec { transient_error_p: 1.0, ..ProviderFaultSpec::none() };
+        let retry = RetryPolicy {
+            max_attempts: 100,
+            jitter: 0.0,
+            deadline_s: 0.2,
+            ..RetryPolicy::default()
+        };
+        let mut ep = endpoint(fault, retry);
+        let e = ep.submit(b"[]").unwrap_err();
+        assert_eq!(e.reason, SubmitFailure::DeadlineExceeded);
+        assert!(ep.backoff_s() <= 0.2);
+    }
+
+    #[test]
+    fn endpoint_is_deterministic_per_seed() {
+        let fault = ProviderFaultSpec { transient_error_p: 0.5, ..ProviderFaultSpec::none() };
+        let run = |seed: u64| {
+            let mut ep =
+                ProviderEndpoint::new(fault, RetryPolicy::default(), CircuitBreaker::default(),
+                                      seed);
+            for _ in 0..30 {
+                let _ = ep.submit(b"[0]");
+            }
+            (ep.submit_retries(), ep.backoff_s().to_bits())
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8), "different seeds must draw different streams");
+    }
+
+    #[test]
+    fn specs_validate() {
+        assert!(ProviderFaultSpec::none().validate().is_ok());
+        assert!(ProviderFaultSpec::none().is_none());
+        let bad = ProviderFaultSpec { transient_error_p: 1.5, ..ProviderFaultSpec::none() };
+        assert!(bad.validate().is_err());
+        assert!(!bad.is_none());
+        let bad = ProviderFaultSpec {
+            outage_window: Some((5.0, 1.0)),
+            ..ProviderFaultSpec::none()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ProviderFaultSpec {
+            outage_window: Some((-1.0, 1.0)),
+            ..ProviderFaultSpec::none()
+        };
+        assert!(bad.validate().is_err());
+
+        assert!(RetryPolicy::default().validate().is_ok());
+        assert!(RetryPolicy { max_attempts: 0, ..RetryPolicy::default() }.validate().is_err());
+        assert!(RetryPolicy { multiplier: 0.5, ..RetryPolicy::default() }.validate().is_err());
+        assert!(RetryPolicy { jitter: 1.0, ..RetryPolicy::default() }.validate().is_err());
+        assert!(RetryPolicy { deadline_s: 0.0, ..RetryPolicy::default() }.validate().is_err());
+        assert!(RetryPolicy { base_backoff_s: -0.1, ..RetryPolicy::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

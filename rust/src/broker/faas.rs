@@ -13,10 +13,11 @@ use crate::api::resource::ResourceRequest;
 use crate::api::task::{Payload, TaskDescription, TaskId, TaskKind, TaskState};
 use crate::api::ProviderConfig;
 use crate::broker::data::{
-    expected_framed_len, frame_bulk, serialize_sharded, submit_bulk, ManifestShard,
-    SerializeOptions,
+    expected_framed_len, frame_bulk, serialize_sharded, ManifestShard, ProviderEndpoint,
+    ProviderFaultSpec, RetryPolicy, SerializeOptions,
 };
 use crate::broker::manager::{FaultTally, ManagerError, ManagerRun, RunDetail};
+use crate::broker::provider_proxy::CircuitBreaker;
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
 use crate::sim::faas::{FaasSim, FaasSpec, Invocation};
@@ -54,6 +55,12 @@ pub struct FaasManager {
     pub seed: u64,
     /// Serialize-phase fan-out; defaults to available parallelism.
     pub serialize: SerializeOptions,
+    /// Provider control-plane fault model from the acquired resource.
+    pub provider_fault: ProviderFaultSpec,
+    /// Retry/backoff policy from the acquired resource.
+    pub retry: RetryPolicy,
+    /// Per-provider circuit breaker shared with the provider handle.
+    pub breaker: CircuitBreaker,
 }
 
 impl FaasManager {
@@ -64,11 +71,25 @@ impl FaasManager {
     ) -> Result<FaasManager, ManagerError> {
         crate::broker::manager::validate_binding(&config, &resource)?;
         let spec = FaasSpec { concurrency: resource.concurrency, ..FaasSpec::default() };
-        Ok(FaasManager { config, spec, seed, serialize: SerializeOptions::default() })
+        Ok(FaasManager {
+            config,
+            spec,
+            seed,
+            serialize: SerializeOptions::default(),
+            provider_fault: resource.provider_fault,
+            retry: resource.retry,
+            breaker: CircuitBreaker::default(),
+        })
     }
 
     pub fn with_serialize(mut self, serialize: SerializeOptions) -> Self {
         self.serialize = serialize;
+        self
+    }
+
+    /// Share an existing per-provider circuit breaker.
+    pub fn with_breaker(mut self, breaker: CircuitBreaker) -> Self {
+        self.breaker = breaker;
         self
     }
 
@@ -125,11 +146,18 @@ impl FaasManager {
         let sw = Stopwatch::start();
         let expected_bulk = expected_framed_len(&shards);
         let bulk = frame_bulk(&shards, self.serialize);
-        let bulk_bytes = submit_bulk(&bulk);
+        let mut endpoint = ProviderEndpoint::new(
+            self.provider_fault,
+            self.retry,
+            self.breaker.clone(),
+            self.seed,
+        );
+        let bulk_bytes = endpoint.submit(&bulk)?;
         assert_eq!(bulk_bytes, expected_bulk, "bulk framing lost bytes");
         let mut sim = FaasSim::new(self.config.profile(), self.spec, self.seed);
         sim.submit(invocations);
-        let submit_s = sw.elapsed_secs();
+        // Simulated backoff is charged into OVH: resilience has a cost.
+        let submit_s = sw.elapsed_secs() + endpoint.backoff_s();
         registry.transition_all(&ids, TaskState::Submitted)?;
 
         let report = sim.run();
@@ -158,9 +186,14 @@ impl FaasManager {
             metrics,
             bytes_serialized,
             bulk_bytes,
-            // The simulated function service retries internally; no
-            // fault accounting surfaces yet.
-            faults: FaultTally::default(),
+            // The simulated function service retries invocations
+            // internally; the control-plane submit accounting is real.
+            faults: FaultTally {
+                submit_retries: endpoint.submit_retries(),
+                backoff_ms: endpoint.backoff_ms(),
+                circuit_opens: endpoint.circuit_opens(),
+                ..FaultTally::default()
+            },
             detail: RunDetail::Faas { sim: report },
         })
     }
@@ -250,6 +283,35 @@ mod tests {
             0
         )
         .is_err());
+    }
+
+    #[test]
+    fn faas_submits_are_fallible_and_tallied() {
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 64);
+        let mut m = manager();
+        m.provider_fault = ProviderFaultSpec {
+            outage_window: Some((0.0, 0.12)),
+            ..ProviderFaultSpec::none()
+        };
+        let r = m.execute(&tasks, &reg).unwrap();
+        assert_eq!(r.faults.submit_retries, 2, "two backoffs ride out a 0.12s outage");
+        assert!(r.faults.backoff_ms > 0, "FaultTally is no longer structurally zero on FaaS");
+        assert!(reg.all_final());
+
+        // A hard outage errors before the Submitted transition.
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 8);
+        let mut m = manager();
+        m.provider_fault = ProviderFaultSpec {
+            outage_window: Some((0.0, 1e9)),
+            ..ProviderFaultSpec::none()
+        };
+        let e = m.execute(&tasks, &reg).unwrap_err();
+        assert!(e.retryable());
+        for (id, _) in &tasks {
+            assert_eq!(reg.state_of(*id), Some(TaskState::Partitioned));
+        }
     }
 
     #[test]

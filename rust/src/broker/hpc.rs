@@ -37,10 +37,11 @@ use crate::api::resource::ResourceRequest;
 use crate::api::task::{Payload, TaskDescription, TaskId, TaskState};
 use crate::api::ProviderConfig;
 use crate::broker::data::{
-    expected_framed_len, frame_bulk, serialize_sharded, shard_ranges, submit_bulk,
-    ManifestShard, SerializeOptions,
+    expected_framed_len, frame_bulk, serialize_sharded, shard_ranges, ManifestShard,
+    ProviderEndpoint, SerializeOptions,
 };
 use crate::broker::manager::{FaultTally, ManagerError, ManagerRun, RunDetail};
+use crate::broker::provider_proxy::CircuitBreaker;
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
 use crate::sim::hpc::{HpcTaskSpec, MultiPilotSim};
@@ -105,6 +106,8 @@ pub struct HpcManager {
     pub cancel_on_failure: bool,
     /// Serialize-phase fan-out; defaults to available parallelism.
     pub serialize: SerializeOptions,
+    /// Per-provider circuit breaker shared with the provider handle.
+    pub breaker: CircuitBreaker,
 }
 
 impl HpcManager {
@@ -122,6 +125,7 @@ impl HpcManager {
             failure_rate,
             cancel_on_failure: false,
             serialize: SerializeOptions::default(),
+            breaker: CircuitBreaker::default(),
         })
     }
 
@@ -133,6 +137,12 @@ impl HpcManager {
 
     pub fn with_serialize(mut self, serialize: SerializeOptions) -> Self {
         self.serialize = serialize;
+        self
+    }
+
+    /// Share an existing per-provider circuit breaker.
+    pub fn with_breaker(mut self, breaker: CircuitBreaker) -> Self {
+        self.breaker = breaker;
         self
     }
 
@@ -186,11 +196,17 @@ impl HpcManager {
             .map(ManifestShard::item_bytes)
             .sum();
         let sw = Stopwatch::start();
+        let mut endpoint = ProviderEndpoint::new(
+            self.resource.provider_fault,
+            self.resource.retry,
+            self.breaker.clone(),
+            self.seed,
+        );
         let mut expected_bulk = 0usize;
         let mut bulk_bytes = 0usize;
         for shards in &per_pilot {
             expected_bulk += expected_framed_len(shards);
-            bulk_bytes += submit_bulk(&frame_bulk(shards, self.serialize));
+            bulk_bytes += endpoint.submit(&frame_bulk(shards, self.serialize))?;
         }
         assert_eq!(bulk_bytes, expected_bulk, "bulk framing lost bytes");
         let mut sim =
@@ -221,7 +237,7 @@ impl HpcManager {
                 task_dict(tasks[idx].0, tasks[idx].1.borrow(), &specs[idx]).write_into(&mut doc);
             }
             doc.push(b']');
-            retry_bulk_bytes += submit_bulk(&doc);
+            retry_bulk_bytes += endpoint.submit(&doc)?;
             retried += wave.tasks.len();
         }
 
@@ -278,7 +294,13 @@ impl HpcManager {
             tasks: tasks.len(),
             // "pods" on the HPC path counts connector task descriptions.
             pods: tasks.len(),
-            ovh: Overhead { partition_s, serialize_s, submit_s },
+            // Simulated backoff (initial + retry-wave submits) is charged
+            // into the submit-phase OVH: resilience has a cost.
+            ovh: Overhead {
+                partition_s,
+                serialize_s,
+                submit_s: submit_s + endpoint.backoff_s(),
+            },
             tpt_s: report.makespan_s,
             ttx_s: report.makespan_s,
         };
@@ -288,6 +310,10 @@ impl HpcManager {
             abandoned: report.abandoned.len(),
             retry_waves: report.retry_waves.len(),
             retry_bulk_bytes,
+            submit_retries: endpoint.submit_retries(),
+            backoff_ms: endpoint.backoff_ms(),
+            circuit_opens: endpoint.circuit_opens(),
+            failed_over: 0,
         };
         Ok(ManagerRun {
             metrics,
@@ -542,6 +568,40 @@ mod tests {
             "{counts:?}"
         );
         assert!(reg.all_final());
+    }
+
+    #[test]
+    fn control_plane_outage_is_ridden_out_and_tallied() {
+        use crate::api::resource::ProviderFaultSpec;
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 100, 1.0);
+        let resource =
+            ResourceRequest::hpc(ProviderId::Bridges2, 1, 1).with_provider_faults(
+                ProviderFaultSpec { outage_window: Some((0.0, 0.12)), ..ProviderFaultSpec::none() },
+            );
+        let m = HpcManager::new(ProviderConfig::simulated(ProviderId::Bridges2), resource, 11)
+            .unwrap();
+        let r = m.execute(&tasks, &reg).unwrap();
+        assert_eq!(r.faults.submit_retries, 2, "two backoffs ride out a 0.12s outage");
+        assert!(r.faults.backoff_ms > 0);
+        assert!(r.metrics.ovh.submit_s > 0.13, "backoff charged into OVH");
+        assert_eq!(r.faults.circuit_opens, 0);
+        assert!(reg.all_final());
+
+        // A hard outage errors before any task reaches a final state.
+        let reg = TaskRegistry::new();
+        let tasks = workload(&reg, 20, 1.0);
+        let resource =
+            ResourceRequest::hpc(ProviderId::Bridges2, 1, 1).with_provider_faults(
+                ProviderFaultSpec { outage_window: Some((0.0, 1e9)), ..ProviderFaultSpec::none() },
+            );
+        let m = HpcManager::new(ProviderConfig::simulated(ProviderId::Bridges2), resource, 11)
+            .unwrap();
+        let e = m.execute(&tasks, &reg).unwrap_err();
+        assert!(e.retryable());
+        for (id, _) in &tasks {
+            assert_eq!(reg.state_of(*id), Some(TaskState::Partitioned));
+        }
     }
 
     #[test]

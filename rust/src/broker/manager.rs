@@ -26,8 +26,9 @@ use crate::api::resource::{ResourceRequest, ServiceKind};
 use crate::api::task::{TaskDescription, TaskId};
 use crate::api::ProviderConfig;
 use crate::broker::caas::CaasManager;
-use crate::broker::data::SerializeOptions;
+use crate::broker::data::{SerializeOptions, SubmitError};
 use crate::broker::faas::FaasManager;
+use crate::broker::provider_proxy::CircuitBreaker;
 use crate::broker::hpc::HpcManager;
 use crate::broker::partitioner::{PartitionError, PartitionModel, Partitioner, PodBuildMode};
 use crate::broker::state::{StateError, TaskRegistry};
@@ -49,6 +50,11 @@ pub enum ManagerError {
     InvalidResource(String),
     Partition(PartitionError),
     State(StateError),
+    /// The provider control plane rejected the bulk submit after the
+    /// retry policy was exhausted (ISSUE 7). `retryable` classifies the
+    /// failure for the broker: provider-local faults can be re-brokered
+    /// to a surviving provider, the rest are terminal.
+    Submit { message: String, retryable: bool, attempts: u32, backoff_ms: u64 },
 }
 
 impl std::fmt::Display for ManagerError {
@@ -58,11 +64,38 @@ impl std::fmt::Display for ManagerError {
             ManagerError::InvalidResource(m) => write!(f, "invalid resource: {m}"),
             ManagerError::Partition(e) => write!(f, "partitioning failed: {e}"),
             ManagerError::State(e) => write!(f, "state error: {e}"),
+            ManagerError::Submit { message, retryable, .. } => {
+                let class = if *retryable { "retryable" } else { "terminal" };
+                write!(f, "submit failed ({class}): {message}")
+            }
         }
     }
 }
 
 impl std::error::Error for ManagerError {}
+
+impl ManagerError {
+    /// May the broker re-broker the workload slice to another provider?
+    /// Only control-plane submit failures are provider-local; every
+    /// other manager error would reproduce identically elsewhere.
+    pub fn retryable(&self) -> bool {
+        match self {
+            ManagerError::Submit { retryable, .. } => *retryable,
+            _ => false,
+        }
+    }
+}
+
+impl From<SubmitError> for ManagerError {
+    fn from(e: SubmitError) -> Self {
+        ManagerError::Submit {
+            message: e.to_string(),
+            retryable: true,
+            attempts: e.attempts,
+            backoff_ms: (e.backoff_s * 1000.0).round() as u64,
+        }
+    }
+}
 
 impl From<PartitionError> for ManagerError {
     fn from(e: PartitionError) -> Self {
@@ -176,6 +209,17 @@ pub struct FaultTally {
     pub retry_waves: usize,
     /// Transport bytes of those resubmission bulks.
     pub retry_bulk_bytes: usize,
+    /// Bulk-submit attempts retried against the provider control plane
+    /// (ISSUE 7; populated by all three managers).
+    pub submit_retries: usize,
+    /// Simulated backoff charged into OVH while retrying, rounded to
+    /// whole milliseconds (kept integral so the tally stays `Eq`).
+    pub backoff_ms: u64,
+    /// Circuit-breaker open transitions observed during this execution.
+    pub circuit_opens: usize,
+    /// Tasks completed on this provider after failing over from another
+    /// (set by the broker on the failover leg, not by the manager).
+    pub failed_over: usize,
 }
 
 /// Unified report of one manager execution — the same shape for every
@@ -346,26 +390,43 @@ impl ManagerFactory {
 
     /// Instantiate the manager serving `resource.service` on the given
     /// provider connection — the single `ServiceKind` dispatch site.
+    /// Each call gets a fresh circuit breaker; the broker path threads
+    /// the provider handle's shared breaker through
+    /// [`ManagerFactory::create_with_breaker`] instead.
     pub fn create(
         &self,
         config: ProviderConfig,
         resource: ResourceRequest,
         seed: u64,
     ) -> Result<Box<dyn ServiceManager>, ManagerError> {
+        self.create_with_breaker(config, resource, seed, CircuitBreaker::default())
+    }
+
+    /// [`ManagerFactory::create`], but sharing an existing per-provider
+    /// circuit breaker (clones share state), so consecutive manager
+    /// executions against one connection observe the same circuit.
+    pub fn create_with_breaker(
+        &self,
+        config: ProviderConfig,
+        resource: ResourceRequest,
+        seed: u64,
+        breaker: CircuitBreaker,
+    ) -> Result<Box<dyn ServiceManager>, ManagerError> {
         match resource.service {
             ServiceKind::Caas => {
                 let partitioner =
                     Partitioner::new(self.partition_model, self.build_mode_for(resource.provider))
                         .with_serialize(self.serialize);
-                Ok(Box::new(CaasManager::new(config, resource, partitioner, seed)?))
+                let mgr = CaasManager::new(config, resource, partitioner, seed)?;
+                Ok(Box::new(mgr.with_breaker(breaker)))
             }
             ServiceKind::Batch => {
                 let mgr = HpcManager::new(config, resource, seed)?;
-                Ok(Box::new(mgr.with_serialize(self.serialize)))
+                Ok(Box::new(mgr.with_serialize(self.serialize).with_breaker(breaker)))
             }
             ServiceKind::Faas => {
                 let mgr = FaasManager::new(config, resource, seed)?;
-                Ok(Box::new(mgr.with_serialize(self.serialize)))
+                Ok(Box::new(mgr.with_serialize(self.serialize).with_breaker(breaker)))
             }
         }
     }

@@ -24,11 +24,41 @@
 //! * [`faas`] — FaaS Manager (functions with cold starts + concurrency
 //!   limits).
 //! * [`data`] — Data Manager (copy/move/link/delete/list, staging) and
-//!   the bulk serialization data path (shards, framing, submit sink).
+//!   the bulk serialization data path (shards, framing, and the
+//!   fallible [`ProviderEndpoint`] submit path: outages, transient
+//!   errors, throttling, retry/backoff).
 //! * [`partitioner`] — MCPP/SCPP pod partitioning + manifest building.
 //! * [`policy`] — task→provider binding policies (kind-aware routing
-//!   across CaaS/Batch/FaaS services).
+//!   across CaaS/Batch/FaaS services) and failover target selection.
 //! * [`state`] — task registry, state machine, tracing.
+//!
+//! # Failure model: provider layer
+//!
+//! Mirroring the pilot-layer failure model in `sim/hpc.rs` (ISSUE 6),
+//! the *provider control plane* is fallible too (ISSUE 7):
+//!
+//! * **Faults** — a [`ProviderFaultSpec`] carried on the acquired
+//!   `ResourceRequest` arms an outage window, a per-attempt transient
+//!   error probability, and a byte-budget throttle on the provider's
+//!   bulk-submit endpoint. Fault draws come from a dedicated PRNG
+//!   stream (`PROVIDER_FAULT_STREAM_SALT`) so the healthy path
+//!   (`ProviderFaultSpec::none()`) consumes nothing and stays
+//!   byte-identical to the pre-fault broker.
+//! * **Retry/backoff** — every manager drives its submits through a
+//!   [`ProviderEndpoint`] governed by a [`RetryPolicy`]: exponential
+//!   backoff with seeded jitter, an attempt cap, and a total-backoff
+//!   deadline. Simulated backoff time is charged into the run's OVH.
+//! * **Circuit breaker** — each connected `ProviderHandle` carries a
+//!   shared [`CircuitBreaker`] (closed → open after K consecutive
+//!   failures → half-open probe). While open, submits fast-fail
+//!   instead of burning attempts.
+//! * **Failover** — on a terminal submit error the `ServiceProxy`
+//!   rewinds the stranded slice and re-brokers it to a surviving
+//!   provider of the same service kind, guarded by a broker-level
+//!   exactly-once ledger; slices with no survivor are canceled and
+//!   reported as abandoned. Per-run accounting lands in
+//!   `ManagerRun::faults` (`submit_retries` / `backoff_ms` /
+//!   `circuit_opens` / `failed_over`).
 //!
 //! [`Hydra`] is the user-facing facade combining all of the above.
 
@@ -47,13 +77,14 @@ use crate::api::resource::ResourceRequest;
 use crate::api::task::TaskDescription;
 use crate::api::ProviderConfig;
 use crate::sim::provider::ProviderId;
-pub use data::SerializeOptions;
+pub use data::{ProviderEndpoint, ProviderFaultSpec, RetryPolicy, SerializeOptions};
 pub use manager::{
     ManagerError, ManagerFactory, ManagerReport, ManagerRun, RunDetail, ServiceManager,
 };
 pub use partitioner::{PartitionModel, PodBuildMode};
 pub use policy::BrokerPolicy;
-pub use service_proxy::{BrokerError, BrokerRun, ServiceProxy};
+pub use provider_proxy::{CircuitBreaker, CircuitState};
+pub use service_proxy::{BrokerError, BrokerRun, Failover, ServiceProxy};
 
 /// User-facing facade: configure providers + resources, then submit
 /// workloads.

@@ -194,6 +194,22 @@ pub fn assign<T: std::borrow::Borrow<TaskDescription>>(
     Ok(out)
 }
 
+/// Surviving providers a failed provider's slice can fail over to: same
+/// acquired service kind (containers → another CaaS, executables →
+/// another Batch provider), in acquisition order, the failed provider
+/// excluded (ISSUE 7 cross-provider failover).
+pub fn failover_targets(
+    failed: ProviderId,
+    kind: ServiceKind,
+    providers: &[(ProviderId, ServiceKind)],
+) -> Vec<ProviderId> {
+    providers
+        .iter()
+        .filter(|(p, s)| *p != failed && *s == kind)
+        .map(|(p, _)| *p)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -344,6 +360,29 @@ mod tests {
         // Bridges2 rate = 11*128 = 1408 vs AWS 16: ~99% of tasks.
         assert!(a[&ProviderId::Bridges2].len() > 120, "{}", a[&ProviderId::Bridges2].len());
         assert_eq!(a[&ProviderId::Aws].len() + a[&ProviderId::Bridges2].len(), 130);
+    }
+
+    #[test]
+    fn failover_targets_match_service_kind_and_skip_the_failed_provider() {
+        let provs = [
+            (ProviderId::Jetstream2, ServiceKind::Caas),
+            (ProviderId::Chameleon, ServiceKind::Caas),
+            (ProviderId::Bridges2, ServiceKind::Batch),
+            (ProviderId::Aws, ServiceKind::Faas),
+        ];
+        assert_eq!(
+            failover_targets(ProviderId::Chameleon, ServiceKind::Caas, &provs),
+            vec![ProviderId::Jetstream2]
+        );
+        assert_eq!(
+            failover_targets(ProviderId::Jetstream2, ServiceKind::Caas, &provs),
+            vec![ProviderId::Chameleon]
+        );
+        // The only Batch provider failing leaves nowhere to go.
+        assert!(failover_targets(ProviderId::Bridges2, ServiceKind::Batch, &provs).is_empty());
+        // Kind mismatches never cross: a dead CaaS never fails over to FaaS.
+        assert!(!failover_targets(ProviderId::Chameleon, ServiceKind::Caas, &provs)
+            .contains(&ProviderId::Aws));
     }
 
     #[test]

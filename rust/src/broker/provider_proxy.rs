@@ -8,6 +8,7 @@ use crate::api::provider::ProviderConfig;
 use crate::sim::provider::ProviderId;
 use crate::util::toml_lite;
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 /// A validated, ready-to-use provider connection.
 #[derive(Debug, Clone)]
@@ -15,6 +16,146 @@ pub struct ProviderHandle {
     pub config: ProviderConfig,
     /// Deterministic token from the simulated auth handshake.
     pub session_token: u64,
+    /// Per-provider circuit breaker shared by every manager execution
+    /// against this connection (clones share state).
+    pub breaker: CircuitBreaker,
+}
+
+/// Circuit breaker state (classic three-state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CircuitState {
+    /// Normal operation; submits flow through.
+    Closed,
+    /// Tripped after K consecutive failures; submits fast-fail.
+    Open,
+    /// Cooled down; the next submit is a probe that closes (success)
+    /// or re-opens (failure) the circuit.
+    HalfOpen,
+}
+
+impl std::fmt::Display for CircuitState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CircuitState::Closed => write!(f, "closed"),
+            CircuitState::Open => write!(f, "open"),
+            CircuitState::HalfOpen => write!(f, "half-open"),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct BreakerCore {
+    state: CircuitState,
+    consecutive_failures: u32,
+    threshold: u32,
+    /// Fast-fail denials served while open; stands in for a cooldown
+    /// clock so the breaker stays deterministic.
+    denied: u32,
+    opens: usize,
+}
+
+/// Per-provider circuit breaker: closed → open after `threshold`
+/// consecutive submit failures → half-open probe after a deterministic
+/// cooldown (one fast-fail denial stands in for elapsed time).
+///
+/// `Clone` shares the underlying state, so the handle's breaker and the
+/// endpoints created from it observe the same circuit.
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker {
+    inner: Arc<Mutex<BreakerCore>>,
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> CircuitBreaker {
+        CircuitBreaker::new()
+    }
+}
+
+impl CircuitBreaker {
+    pub const DEFAULT_THRESHOLD: u32 = 5;
+
+    pub fn new() -> CircuitBreaker {
+        CircuitBreaker::with_threshold(Self::DEFAULT_THRESHOLD)
+    }
+
+    pub fn with_threshold(threshold: u32) -> CircuitBreaker {
+        assert!(threshold >= 1, "breaker threshold must be >= 1");
+        CircuitBreaker {
+            inner: Arc::new(Mutex::new(BreakerCore {
+                state: CircuitState::Closed,
+                consecutive_failures: 0,
+                threshold,
+                denied: 0,
+                opens: 0,
+            })),
+        }
+    }
+
+    /// May a submit attempt proceed? While open, the first call
+    /// fast-fails and the second transitions to half-open (the probe).
+    pub fn allow(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            CircuitState::Closed | CircuitState::HalfOpen => true,
+            CircuitState::Open => {
+                g.denied += 1;
+                if g.denied >= 2 {
+                    g.state = CircuitState::HalfOpen;
+                    g.denied = 0;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A submit landed: close the circuit and reset failure counting.
+    pub fn record_success(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.state = CircuitState::Closed;
+        g.consecutive_failures = 0;
+        g.denied = 0;
+    }
+
+    /// A submit failed. Returns `true` iff this failure just opened the
+    /// circuit (callers count `circuit_opens` off that edge).
+    pub fn record_failure(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            CircuitState::HalfOpen => {
+                g.state = CircuitState::Open;
+                g.denied = 0;
+                g.opens += 1;
+                true
+            }
+            CircuitState::Closed => {
+                g.consecutive_failures += 1;
+                if g.consecutive_failures >= g.threshold {
+                    g.state = CircuitState::Open;
+                    g.denied = 0;
+                    g.opens += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            CircuitState::Open => false,
+        }
+    }
+
+    pub fn state(&self) -> CircuitState {
+        self.inner.lock().unwrap().state
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.state() == CircuitState::Open
+    }
+
+    /// Lifetime count of closed/half-open → open transitions.
+    pub fn opens(&self) -> usize {
+        self.inner.lock().unwrap().opens
+    }
 }
 
 #[derive(Debug)]
@@ -67,7 +208,10 @@ impl ProviderProxy {
                 reason,
             })?;
             let session_token = cfg.credentials.handshake_token();
-            proxy.handles.insert(cfg.id, ProviderHandle { config: cfg, session_token });
+            proxy.handles.insert(
+                cfg.id,
+                ProviderHandle { config: cfg, session_token, breaker: CircuitBreaker::new() },
+            );
         }
         if proxy.handles.is_empty() {
             return Err(ProxyError::NoneEnabled);
@@ -164,6 +308,58 @@ secret_key = "0123456789abcdef"
         )
         .unwrap();
         assert_eq!(p.providers(), vec![ProviderId::Jetstream2, ProviderId::Bridges2]);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_probes_half_open() {
+        let b = CircuitBreaker::with_threshold(3);
+        assert_eq!(b.state(), CircuitState::Closed);
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert!(b.record_failure(), "third consecutive failure opens");
+        assert_eq!(b.state(), CircuitState::Open);
+        assert_eq!(b.opens(), 1);
+        // One fast-fail denial, then the half-open probe is allowed.
+        assert!(!b.allow());
+        assert!(b.allow());
+        assert_eq!(b.state(), CircuitState::HalfOpen);
+        // Probe failure re-opens immediately.
+        assert!(b.record_failure());
+        assert_eq!(b.state(), CircuitState::Open);
+        assert_eq!(b.opens(), 2);
+        // Probe success closes and resets failure counting.
+        assert!(!b.allow());
+        assert!(b.allow());
+        b.record_success();
+        assert_eq!(b.state(), CircuitState::Closed);
+        assert!(!b.record_failure(), "counter was reset by the success");
+    }
+
+    #[test]
+    fn breaker_clones_share_state() {
+        let b = CircuitBreaker::with_threshold(1);
+        let c = b.clone();
+        assert!(c.record_failure());
+        assert!(b.is_open());
+        assert_eq!(b.opens(), 1);
+    }
+
+    #[test]
+    fn success_interleaved_resets_the_streak() {
+        let b = CircuitBreaker::with_threshold(2);
+        assert!(!b.record_failure());
+        b.record_success();
+        assert!(!b.record_failure());
+        assert!(b.record_failure());
+        assert!(b.is_open());
+    }
+
+    #[test]
+    fn connected_handles_carry_closed_breakers() {
+        let p = ProviderProxy::simulated(&[ProviderId::Aws]);
+        let h = p.handle(ProviderId::Aws).unwrap();
+        assert_eq!(h.breaker.state(), CircuitState::Closed);
+        assert_eq!(h.breaker.opens(), 0);
     }
 
     #[test]

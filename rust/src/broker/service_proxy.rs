@@ -13,13 +13,24 @@
 //! over a channel; the proxy aggregates them into the paper's
 //! per-provider and aggregate metrics. The proxy itself is
 //! manager-agnostic: it never matches on the service kind.
+//!
+//! Cross-provider failover (ISSUE 7): when a manager run fails with a
+//! *retryable* error — the provider control plane rejected the bulk
+//! submit after retries, or its circuit breaker opened — the proxy
+//! rewinds the stranded slice ([`TaskRegistry::requeue_for_failover`])
+//! and re-brokers it to a surviving provider offering the same service
+//! kind ([`failover_targets`]), through the normal factory path. A
+//! broker-level exactly-once ledger books which provider resolved each
+//! task; a double booking is a broker bug surfaced as
+//! [`BrokerError::DoubleCompletion`]. Slices with no surviving target
+//! are canceled and reported in [`BrokerRun::abandoned`].
 
 use crate::api::resource::{ResourceRequest, ServiceKind};
-use crate::api::task::{TaskDescription, TaskId};
+use crate::api::task::{TaskDescription, TaskId, TaskState};
 use crate::broker::data::SerializeOptions;
-use crate::broker::manager::{ManagerFactory, ManagerReport};
+use crate::broker::manager::{ManagerError, ManagerFactory, ManagerReport};
 use crate::broker::partitioner::{PartitionModel, PodBuildMode};
-use crate::broker::policy::{assign, Assignment, BrokerPolicy};
+use crate::broker::policy::{assign, failover_targets, Assignment, BrokerPolicy};
 use crate::broker::provider_proxy::{ProviderProxy, ProxyError};
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{aggregate, AggregateMetrics, RunMetrics};
@@ -28,17 +39,42 @@ use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 
+/// Seed salt for a failover leg: the re-brokered slice draws a stream
+/// decorrelated from the target's primary run on the same broker seed.
+const FAILOVER_SEED_SALT: u64 = 0x0F_A1_10_7E;
+
+/// One completed failover leg: `tasks` tasks moved `from` → `to`, with
+/// the target's full manager report (its `faults.failed_over` counts the
+/// re-brokered tasks).
+#[derive(Debug)]
+pub struct Failover {
+    pub from: ProviderId,
+    pub to: ProviderId,
+    pub tasks: usize,
+    pub report: ManagerReport,
+}
+
 /// Outcome of one brokered workload execution.
 #[derive(Debug)]
 pub struct BrokerRun {
     pub assignment: Assignment,
     pub reports: BTreeMap<ProviderId, ManagerReport>,
+    /// Slices re-brokered off failed providers (ISSUE 7), in order.
+    pub failovers: Vec<Failover>,
+    /// Tasks canceled because no surviving compatible provider could
+    /// take their slice.
+    pub abandoned: Vec<TaskId>,
     pub aggregate: AggregateMetrics,
 }
 
 impl BrokerRun {
+    /// Per-provider metrics: primary runs first, then failover legs.
     pub fn per_provider(&self) -> Vec<&RunMetrics> {
-        self.reports.values().map(|r| r.metrics()).collect()
+        self.reports
+            .values()
+            .map(|r| r.metrics())
+            .chain(self.failovers.iter().map(|f| f.report.metrics()))
+            .collect()
     }
 }
 
@@ -51,8 +87,13 @@ pub enum BrokerError {
     /// Provider bring-up failed (credentials, duplicate/disabled config).
     Provider(ProxyError),
     Resource(String),
-    Manager { provider: ProviderId, message: String },
+    /// A manager run failed terminally (the typed [`ManagerError`] rides
+    /// along so callers can inspect `retryable()` / submit accounting).
+    Manager { provider: ProviderId, error: ManagerError },
     Thread(String),
+    /// Exactly-once violation: one task booked as resolved on two
+    /// providers. Never expected — a broker bug made loud.
+    DoubleCompletion { task: TaskId, first: ProviderId, second: ProviderId },
 }
 
 impl std::fmt::Display for BrokerError {
@@ -61,10 +102,13 @@ impl std::fmt::Display for BrokerError {
             BrokerError::Policy(e) => write!(f, "policy error: {e}"),
             BrokerError::Provider(e) => write!(f, "provider error: {e}"),
             BrokerError::Resource(m) => write!(f, "resource error: {m}"),
-            BrokerError::Manager { provider, message } => {
-                write!(f, "{provider} manager failed: {message}")
+            BrokerError::Manager { provider, error } => {
+                write!(f, "{provider} manager failed: {error}")
             }
             BrokerError::Thread(m) => write!(f, "manager thread panicked: {m}"),
+            BrokerError::DoubleCompletion { task, first, second } => {
+                write!(f, "{task} completed on both {first} and {second}")
+            }
         }
     }
 }
@@ -186,7 +230,7 @@ impl ServiceProxy {
         let factory =
             ManagerFactory::new(self.partition_model, self.build_mode.clone(), serialize);
 
-        let (tx, rx) = mpsc::channel::<(ProviderId, Result<ManagerReport, String>)>();
+        let (tx, rx) = mpsc::channel::<(ProviderId, Result<ManagerReport, ManagerError>)>();
         let mut threads = Vec::new();
         let mut expected = 0usize;
 
@@ -200,32 +244,58 @@ impl ServiceProxy {
                 .map(|id| (*id, Arc::clone(by_id.get(&id.0).unwrap())))
                 .collect();
             let req = self.resources.get(&provider).unwrap().clone();
-            let cfg = self.providers.handle(provider).unwrap().config.clone();
+            let handle = self.providers.handle(provider).unwrap();
+            let cfg = handle.config.clone();
+            // Shared with the ProviderHandle: trips accumulated here are
+            // visible to the failover target-selection below.
+            let breaker = handle.breaker.clone();
             let registry = self.registry.clone();
             let factory = factory.clone();
             let seed = self.seed ^ (provider as u64).wrapping_mul(0x9E3779B97F4A7C15);
             let tx = tx.clone();
             threads.push(std::thread::spawn(move || {
                 let result = factory
-                    .create(cfg, req, seed)
+                    .create_with_breaker(cfg, req, seed, breaker)
                     .and_then(|m| m.execute(&slice, &registry))
-                    .map(ManagerReport::from)
-                    .map_err(|e| e.to_string());
+                    .map(ManagerReport::from);
                 let _ = tx.send((provider, result));
             }));
         }
         drop(tx);
 
+        // Exactly-once ledger: which provider resolved each task. Every
+        // booking must be the first — a second is a broker bug.
+        let mut ledger: BTreeMap<u64, ProviderId> = BTreeMap::new();
+        let book = |ledger: &mut BTreeMap<u64, ProviderId>,
+                        ids: &[TaskId],
+                        provider: ProviderId|
+         -> Result<(), BrokerError> {
+            for id in ids {
+                if let Some(first) = ledger.insert(id.0, provider) {
+                    return Err(BrokerError::DoubleCompletion {
+                        task: *id,
+                        first,
+                        second: provider,
+                    });
+                }
+            }
+            Ok(())
+        };
+
         let mut reports = BTreeMap::new();
+        let mut failed_runs: Vec<(ProviderId, ManagerError)> = Vec::new();
         let mut first_error: Option<BrokerError> = None;
         for _ in 0..expected {
             match rx.recv() {
                 Ok((provider, Ok(report))) => {
+                    book(&mut ledger, &assignment[&provider], provider)?;
                     reports.insert(provider, report);
                 }
-                Ok((provider, Err(message))) => {
-                    first_error
-                        .get_or_insert(BrokerError::Manager { provider, message });
+                Ok((provider, Err(error))) if error.retryable() => {
+                    failed_runs.push((provider, error));
+                }
+                Ok((provider, Err(error))) => {
+                    first_error.get_or_insert(BrokerError::Manager { provider, error });
                 }
                 Err(e) => {
                     first_error.get_or_insert(BrokerError::Thread(e.to_string()));
@@ -239,11 +309,86 @@ impl ServiceProxy {
             return Err(e);
         }
 
-        let metrics: Vec<RunMetrics> = reports.values().map(|r| r.metrics().clone()).collect();
+        // §Failover: re-broker each stranded slice to a surviving provider
+        // of the same service kind, through the normal factory path.
+        failed_runs.sort_by_key(|(p, _)| *p);
+        let failed_set: Vec<ProviderId> = failed_runs.iter().map(|(p, _)| *p).collect();
+        let mut failovers: Vec<Failover> = Vec::new();
+        let mut abandoned: Vec<TaskId> = Vec::new();
+        for (failed, _error) in &failed_runs {
+            let ids = &assignment[failed];
+            // Manager submit errors fire before any task reaches a final
+            // state, so the whole slice is rewindable; a final task here
+            // would mean a double execution and fails the batch loudly.
+            self.registry
+                .requeue_for_failover(ids)
+                .map_err(|e| BrokerError::Resource(e.to_string()))?;
+            let slice: Vec<(TaskId, Arc<TaskDescription>)> = ids
+                .iter()
+                .map(|id| (*id, Arc::clone(by_id.get(&id.0).unwrap())))
+                .collect();
+            let kind = self.resources[failed].service;
+            let mut landed = false;
+            for target in failover_targets(*failed, kind, &acquired) {
+                let handle = self.providers.handle(target).unwrap();
+                if failed_set.contains(&target) || handle.breaker.is_open() {
+                    continue;
+                }
+                let cfg = handle.config.clone();
+                let breaker = handle.breaker.clone();
+                let req = self.resources[&target].clone();
+                let seed = self.seed
+                    ^ (target as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                    ^ FAILOVER_SEED_SALT;
+                match factory
+                    .create_with_breaker(cfg, req, seed, breaker)
+                    .and_then(|m| m.execute(&slice, &self.registry))
+                {
+                    Ok(mut run) => {
+                        run.faults.failed_over = slice.len();
+                        book(&mut ledger, ids, target)?;
+                        failovers.push(Failover {
+                            from: *failed,
+                            to: target,
+                            tasks: slice.len(),
+                            report: ManagerReport::from(run),
+                        });
+                        landed = true;
+                        break;
+                    }
+                    Err(e) if e.retryable() => {
+                        // Target's control plane failed too; rewind and
+                        // try the next compatible provider.
+                        self.registry
+                            .requeue_for_failover(ids)
+                            .map_err(|e| BrokerError::Resource(e.to_string()))?;
+                    }
+                    Err(error) => {
+                        return Err(BrokerError::Manager { provider: target, error });
+                    }
+                }
+            }
+            if !landed {
+                self.registry
+                    .transition_all(ids, TaskState::Canceled)
+                    .map_err(|e| BrokerError::Resource(e.to_string()))?;
+                abandoned.extend(ids.iter().copied());
+            }
+        }
+
+        let metrics: Vec<RunMetrics> = reports
+            .values()
+            .map(|r| r.metrics().clone())
+            .chain(failovers.iter().map(|f| f.report.metrics().clone()))
+            .collect();
         let agg = aggregate(&metrics).ok_or_else(|| {
-            BrokerError::Resource("workload assigned to zero providers".into())
+            BrokerError::Resource(if abandoned.is_empty() {
+                "workload assigned to zero providers".into()
+            } else {
+                "every provider failed; workload abandoned".into()
+            })
         })?;
-        Ok(BrokerRun { assignment, reports, aggregate: agg })
+        Ok(BrokerRun { assignment, reports, failovers, abandoned, aggregate: agg })
     }
 }
 
@@ -401,5 +546,78 @@ mod tests {
         let sp = proxy_clouds();
         let e = sp.run(containers(1), &BrokerPolicy::ExplicitOnly).unwrap_err();
         assert!(matches!(e, BrokerError::Policy(_)));
+    }
+
+    #[test]
+    fn dead_provider_fails_over_to_a_surviving_caas() {
+        use crate::broker::data::{ProviderFaultSpec, RetryPolicy};
+        // Azure's control plane is down for the whole run; its slice must
+        // land on Aws exactly once.
+        let mut sp = ServiceProxy::new(ProviderProxy::simulated(&[
+            ProviderId::Aws,
+            ProviderId::Azure,
+        ]));
+        sp.acquire(ResourceRequest::kubernetes(ProviderId::Aws, 1, 16)).unwrap();
+        sp.acquire(
+            ResourceRequest::kubernetes(ProviderId::Azure, 1, 16)
+                .with_provider_faults(ProviderFaultSpec {
+                    outage_window: Some((0.0, 1e9)),
+                    ..ProviderFaultSpec::none()
+                })
+                .with_retry_policy(RetryPolicy { max_attempts: 2, ..RetryPolicy::default() }),
+        )
+        .unwrap();
+        let run = sp.run(containers(40), &BrokerPolicy::RoundRobin).unwrap();
+
+        assert_eq!(run.failovers.len(), 1);
+        let fo = &run.failovers[0];
+        assert_eq!((fo.from, fo.to), (ProviderId::Azure, ProviderId::Aws));
+        assert_eq!(fo.tasks, 20);
+        assert_eq!(fo.report.run().faults.failed_over, 20);
+        assert!(run.abandoned.is_empty());
+        // Primary reports: only Aws completed its own slice.
+        assert_eq!(run.reports.len(), 1);
+        assert!(run.reports.contains_key(&ProviderId::Aws));
+        // Every task resolved exactly once, none stranded.
+        assert_eq!(run.aggregate.tasks, 40);
+        assert!(sp.registry.all_final());
+        for id in run.assignment.values().flatten() {
+            assert_eq!(sp.registry.state_of(*id), Some(crate::api::task::TaskState::Done));
+        }
+    }
+
+    #[test]
+    fn no_compatible_survivor_abandons_the_slice() {
+        use crate::broker::data::{ProviderFaultSpec, RetryPolicy};
+        // The only CaaS provider is down and the FaaS survivor is not a
+        // compatible target: the container slice is canceled, the
+        // function slice completes, and the run still returns.
+        let mut sp = ServiceProxy::new(ProviderProxy::simulated(&[
+            ProviderId::Aws,
+            ProviderId::Azure,
+        ]));
+        sp.acquire(
+            ResourceRequest::kubernetes(ProviderId::Azure, 1, 16)
+                .with_provider_faults(ProviderFaultSpec {
+                    outage_window: Some((0.0, 1e9)),
+                    ..ProviderFaultSpec::none()
+                })
+                .with_retry_policy(RetryPolicy { max_attempts: 2, ..RetryPolicy::default() }),
+        )
+        .unwrap();
+        sp.acquire(ResourceRequest::faas(ProviderId::Aws, 64)).unwrap();
+        let mut tasks = containers(30);
+        tasks.extend(
+            (0..30).map(|i| TaskDescription::function(format!("f{i}"), "pkg.handler")),
+        );
+        let run = sp.run(tasks, &BrokerPolicy::ByTaskKind).unwrap();
+
+        assert!(run.failovers.is_empty());
+        assert_eq!(run.abandoned.len(), 30);
+        for id in &run.abandoned {
+            assert_eq!(sp.registry.state_of(*id), Some(crate::api::task::TaskState::Canceled));
+        }
+        assert_eq!(run.aggregate.tasks, 30); // the surviving FaaS slice
+        assert!(sp.registry.all_final());
     }
 }

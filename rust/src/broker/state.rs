@@ -146,6 +146,37 @@ impl TaskRegistry {
         Ok(())
     }
 
+    /// Reset a failed provider's unfinished slice to `New` so it can be
+    /// re-brokered to a surviving provider (ISSUE 7 failover path).
+    ///
+    /// This is the one deliberate exception to the forward-only state
+    /// machine: a provider-local submit failure leaves its tasks stranded
+    /// mid-pipeline (`Validated`/`Partitioned`/`Submitted`), and the
+    /// failover leg re-runs them through a fresh manager from the top.
+    /// Final states are never rewound — any final task in `ids` fails the
+    /// whole batch before anything moves (exactly-once: a completed task
+    /// cannot be re-queued onto a second provider).
+    pub fn requeue_for_failover(&self, ids: &[TaskId]) -> Result<(), StateError> {
+        let mut g = self.inner.lock().unwrap();
+        for id in ids {
+            let entry = g.tasks.get(&id.0).ok_or(StateError::UnknownTask(*id))?;
+            if entry.state.is_final() {
+                return Err(StateError::IllegalTransition {
+                    task: *id,
+                    from: entry.state,
+                    to: TaskState::New,
+                });
+            }
+        }
+        for id in ids {
+            g.tasks.get_mut(&id.0).unwrap().state = TaskState::New;
+            if let Some(t) = g.trace.as_mut() {
+                t.record(*id, TaskState::New);
+            }
+        }
+        Ok(())
+    }
+
     pub fn state_of(&self, id: TaskId) -> Option<TaskState> {
         self.inner.lock().unwrap().tasks.get(&id.0).map(|e| e.state)
     }
@@ -273,6 +304,35 @@ mod tests {
         let e = reg.transition_all(&ids, TaskState::Validated).unwrap_err();
         assert!(matches!(e, StateError::IllegalTransition { .. }));
         assert_eq!(reg.state_of(ids[0]), Some(TaskState::New));
+    }
+
+    #[test]
+    fn requeue_for_failover_rewinds_non_final_tasks_only() {
+        let reg = TaskRegistry::new();
+        let ids = reg.register_all(vec![desc(), desc(), desc()]);
+        reg.transition_all(&ids, TaskState::Validated).unwrap();
+        reg.transition_all(&ids, TaskState::Partitioned).unwrap();
+        // The whole stranded slice rewinds to New and can run again.
+        reg.requeue_for_failover(&ids).unwrap();
+        for id in &ids {
+            assert_eq!(reg.state_of(*id), Some(TaskState::New));
+        }
+        reg.transition_all(&ids, TaskState::Validated).unwrap();
+
+        // A final task in the batch fails it atomically: exactly-once
+        // means a Done task is never re-queued onto another provider.
+        for s in [TaskState::Partitioned, TaskState::Submitted, TaskState::Running,
+                  TaskState::Done] {
+            reg.transition(ids[0], s).unwrap();
+        }
+        let e = reg.requeue_for_failover(&ids).unwrap_err();
+        assert!(matches!(e, StateError::IllegalTransition { .. }));
+        assert_eq!(reg.state_of(ids[1]), Some(TaskState::Validated), "nothing moved");
+        // Unknown ids are rejected too.
+        assert_eq!(
+            reg.requeue_for_failover(&[TaskId(99)]),
+            Err(StateError::UnknownTask(TaskId(99)))
+        );
     }
 
     #[test]

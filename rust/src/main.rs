@@ -10,7 +10,9 @@
 use hydra::api::resource::FaultSpec;
 use hydra::api::task::{Payload, TaskDescription};
 use hydra::api::ResourceRequest;
-use hydra::broker::{BrokerPolicy, Hydra, PartitionModel, PodBuildMode};
+use hydra::broker::{
+    BrokerPolicy, Hydra, PartitionModel, PodBuildMode, ProviderFaultSpec, RetryPolicy,
+};
 use hydra::facts::{self, data, pipeline::FactsPipeline, FactsSize};
 use hydra::runtime::{default_artifacts_dir, PjRtRuntime};
 use hydra::sim::provider::ProviderId;
@@ -30,13 +32,24 @@ fn app() -> App {
                 .opt("pilots", "1", "concurrent pilot jobs (HPC providers)")
                 .opt(
                     "pilot-nodes",
-                    "",
-                    "heterogeneous pilot widths, e.g. 2,4,8 (HPC; overrides nodes/pilots)",
+                    "-",
+                    "heterogeneous pilot widths, e.g. 2,4,8 (HPC; overrides nodes/pilots; '-' = off)",
                 )
                 .opt("task-failure-rate", "0", "per-task failure probability in [0,1]")
                 .opt("pilot-walltime", "0", "pilot walltime seconds, 0 = off (HPC)")
                 .opt("pilot-mtbf", "0", "pilot mean time between failures seconds, 0 = off (HPC)")
                 .opt("retry-budget", "3", "re-queues per task before abandoning it (HPC)")
+                .opt(
+                    "provider-outage",
+                    "-",
+                    "control-plane outage <provider>:<t0>:<t1> on the submit clock ('-' = off)",
+                )
+                .opt(
+                    "submit-error-rate",
+                    "0",
+                    "per-attempt transient submit error probability in [0,1] (all providers)",
+                )
+                .opt("max-submit-attempts", "5", "submit attempts before a slice fails over")
                 .opt("sleep", "0", "per-task sleep seconds (0 = noop)")
                 .opt("seed", "42", "simulation seed")
                 .opt(
@@ -128,13 +141,39 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
     let vcpus = m.u64("vcpus")? as u32;
     let nodes = m.u64("nodes")? as u32;
     let pilots = m.u64("pilots")? as u32;
-    let pilot_nodes: Vec<u32> = m.u64_list("pilot-nodes")?.into_iter().map(|w| w as u32).collect();
+    let pilot_nodes: Vec<u32> = if m.str("pilot-nodes") == "-" {
+        Vec::new()
+    } else {
+        m.u64_list("pilot-nodes")?.into_iter().map(|w| w as u32).collect()
+    };
     let task_failure_rate = m.f64("task-failure-rate")?;
     let fault = FaultSpec {
         walltime_s: m.f64("pilot-walltime")?,
         mtbf_s: m.f64("pilot-mtbf")?,
         retry_budget: m.u64("retry-budget")? as u32,
         ..FaultSpec::none()
+    };
+    let outage: Option<(ProviderId, f64, f64)> = match m.str("provider-outage") {
+        "-" => None,
+        s => {
+            let parts: Vec<&str> = s.split(':').collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "--provider-outage: expected <provider>:<t0>:<t1>, got '{s}'"
+                )
+                .into());
+            }
+            let p = ProviderId::parse(parts[0])
+                .ok_or_else(|| format!("--provider-outage: unknown provider '{}'", parts[0]))?;
+            let t0: f64 = parts[1].parse().map_err(|_| format!("bad t0 '{}'", parts[1]))?;
+            let t1: f64 = parts[2].parse().map_err(|_| format!("bad t1 '{}'", parts[2]))?;
+            Some((p, t0, t1))
+        }
+    };
+    let submit_error_rate = m.f64("submit-error-rate")?;
+    let retry = RetryPolicy {
+        max_attempts: m.u64("max-submit-attempts")? as u32,
+        ..RetryPolicy::default()
     };
     let sleep = m.f64("sleep")?;
     let model = if m.flag("scpp") {
@@ -167,7 +206,16 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
         } else {
             ResourceRequest::kubernetes(p, nodes, vcpus)
         };
-        b = b.resource(req);
+        let mut pf = ProviderFaultSpec {
+            transient_error_p: submit_error_rate,
+            ..ProviderFaultSpec::none()
+        };
+        if let Some((op, t0, t1)) = outage {
+            if op == p {
+                pf.outage_window = Some((t0, t1));
+            }
+        }
+        b = b.resource(req.with_provider_faults(pf).with_retry_policy(retry));
     }
     let hydra = b.build()?;
 
@@ -248,6 +296,59 @@ fn cmd_run(m: &Matches) -> Result<(), Box<dyn std::error::Error>> {
                 f.abandoned,
             );
         }
+    }
+    // Provider-layer resilience: primary runs plus failover legs landed
+    // on each provider, and the live circuit state off its handle.
+    let mut resilience: std::collections::BTreeMap<ProviderId, (usize, u64, usize, usize)> =
+        std::collections::BTreeMap::new();
+    for (id, rep) in &run.reports {
+        let f = rep.run().faults;
+        let e = resilience.entry(*id).or_default();
+        e.0 += f.submit_retries;
+        e.1 += f.backoff_ms;
+        e.2 += f.circuit_opens;
+        e.3 += f.failed_over;
+    }
+    for fo in &run.failovers {
+        let f = fo.report.run().faults;
+        let e = resilience.entry(fo.to).or_default();
+        e.0 += f.submit_retries;
+        e.1 += f.backoff_ms;
+        e.2 += f.circuit_opens;
+        e.3 += f.failed_over;
+        resilience.entry(fo.from).or_default();
+    }
+    for (id, (retries, backoff_ms, opens, failed_over)) in &resilience {
+        let circuit = hydra
+            .service_proxy()
+            .providers
+            .handle(*id)
+            .map(|h| format!("{}", h.breaker.state()))
+            .unwrap_or_else(|| "unknown".into());
+        println!(
+            "  {} resilience: submit retries {} | backoff {} ms | circuit {} (opened {}x) | \
+             tasks failed over {}",
+            id.short_name(),
+            retries,
+            backoff_ms,
+            circuit,
+            opens,
+            failed_over,
+        );
+    }
+    for fo in &run.failovers {
+        println!(
+            "  failover: {} -> {} ({} tasks re-brokered)",
+            fo.from.short_name(),
+            fo.to.short_name(),
+            fo.tasks,
+        );
+    }
+    if !run.abandoned.is_empty() {
+        println!(
+            "  abandoned: {} tasks (no surviving compatible provider)",
+            run.abandoned.len()
+        );
     }
     Ok(())
 }

@@ -15,11 +15,17 @@
 //! * `FaultSpec::none()` is a true no-op (ISSUE 6): the fault machinery
 //!   draws nothing and schedules nothing, so the P ∈ {1, 4} schedules
 //!   stay byte-identical to the fault-free runs.
+//! * `ProviderFaultSpec::none()` + the default `RetryPolicy` are a true
+//!   no-op too (ISSUE 7): the fallible provider endpoint constructs no
+//!   PRNG, backs off zero seconds, and leaves the circuit breaker
+//!   untouched, so the manager path stays byte-identical to the
+//!   pre-fault broker.
 
 use hydra::api::task::{Payload, TaskDescription, TaskId};
 use hydra::api::{ProviderConfig, ResourceRequest};
 use hydra::broker::hpc::{pilot_specs, HpcManager};
 use hydra::broker::state::TaskRegistry;
+use hydra::broker::{ProviderFaultSpec, RetryPolicy};
 use hydra::sim::hpc::{FaultSpec, HpcSim, HpcTaskSpec, MultiPilotSim, PilotSpec};
 use hydra::sim::provider::{PlatformProfile, ProviderId};
 
@@ -193,15 +199,10 @@ fn fault_spec_none_is_a_true_noop() {
     }
 }
 
-#[test]
-fn manager_pilots_1_reproduces_the_reference_end_to_end() {
-    // The production path: HpcManager always drives the multi-pilot
-    // scheduler; with pilots = 1 its records must be the serial
-    // reference's, byte for byte, through validation, sharded
-    // serialization, and submission.
-    let seed = 11u64;
-    let reg = TaskRegistry::new();
-    let tasks: Vec<(TaskId, TaskDescription)> = (0..600)
+/// The mixed-payload executable workload the manager-path tests share,
+/// registered into `reg`.
+fn step_tasks(reg: &TaskRegistry) -> Vec<(TaskId, TaskDescription)> {
+    (0..600)
         .map(|i| {
             let d = TaskDescription::executable(format!("e{i}"), "/bin/step")
                 .with_cpus(1 + (i as u32 % 8))
@@ -212,7 +213,18 @@ fn manager_pilots_1_reproduces_the_reference_end_to_end() {
                 });
             (reg.register(d.clone()), d)
         })
-        .collect();
+        .collect()
+}
+
+#[test]
+fn manager_pilots_1_reproduces_the_reference_end_to_end() {
+    // The production path: HpcManager always drives the multi-pilot
+    // scheduler; with pilots = 1 its records must be the serial
+    // reference's, byte for byte, through validation, sharded
+    // serialization, and submission.
+    let seed = 11u64;
+    let reg = TaskRegistry::new();
+    let tasks = step_tasks(&reg);
     let manager = HpcManager::new(
         ProviderConfig::simulated(ProviderId::Bridges2),
         ResourceRequest::pilot(ProviderId::Bridges2, 2),
@@ -227,4 +239,68 @@ fn manager_pilots_1_reproduces_the_reference_end_to_end() {
     let want = reference.run().tasks;
     assert_eq!(got, &want, "manager path diverged from the serial reference");
     assert!(reg.all_final());
+}
+
+#[test]
+fn provider_fault_spec_none_is_a_true_noop() {
+    // ISSUE 7 acceptance: an explicit `ProviderFaultSpec::none()` +
+    // default `RetryPolicy` must be indistinguishable from the manager
+    // with untouched defaults (the PR 6 broker) — no fault PRNG, zero
+    // backoff, no breaker activity — and both must still reproduce the
+    // raw serial reference, down to the f64 bit patterns.
+    let seed = 11u64;
+    let run_manager = |explicit: bool| {
+        let reg = TaskRegistry::new();
+        let tasks = step_tasks(&reg);
+        let mut req = ResourceRequest::pilot(ProviderId::Bridges2, 2);
+        if explicit {
+            req = req
+                .with_provider_faults(ProviderFaultSpec::none())
+                .with_retry_policy(RetryPolicy::default());
+        }
+        let manager =
+            HpcManager::new(ProviderConfig::simulated(ProviderId::Bridges2), req, seed).unwrap();
+        let run = manager.execute(&tasks, &reg).unwrap();
+        assert!(reg.all_final());
+        assert!(manager.breaker.allow(), "healthy path must leave the breaker closed");
+        assert_eq!(manager.breaker.opens(), 0);
+        run
+    };
+    let defaulted = run_manager(false);
+    let explicit = run_manager(true);
+
+    // The ISSUE 7 resilience counters are structurally zero when healthy.
+    for run in [&defaulted, &explicit] {
+        assert_eq!(run.faults.submit_retries, 0);
+        assert_eq!(run.faults.backoff_ms, 0);
+        assert_eq!(run.faults.circuit_opens, 0);
+        assert_eq!(run.faults.failed_over, 0);
+    }
+    assert_eq!(defaulted.bytes_serialized, explicit.bytes_serialized);
+    assert_eq!(defaulted.bulk_bytes, explicit.bulk_bytes);
+
+    let a = &defaulted.detail.hpc_sim().unwrap().tasks;
+    let b = &explicit.detail.hpc_sim().unwrap().tasks;
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.task_id, y.task_id);
+        assert_eq!(x.launched_s.to_bits(), y.launched_s.to_bits());
+        assert_eq!(x.finished_s.to_bits(), y.finished_s.to_bits());
+        assert_eq!(x.failed, y.failed);
+    }
+
+    // Anchor both against the raw serial reference (pilots = 1 shape):
+    // the fallible endpoint did not perturb the schedule at all.
+    let reg = TaskRegistry::new();
+    let tasks = step_tasks(&reg);
+    let mut reference = HpcSim::new(b2(), PilotSpec { nodes: 2 }, seed);
+    reference.submit(pilot_specs(&tasks));
+    let want = reference.run().tasks;
+    assert_eq!(a.len(), want.len());
+    for (x, y) in a.iter().zip(want.iter()) {
+        assert_eq!(x.task_id, y.task_id);
+        assert_eq!(x.launched_s.to_bits(), y.launched_s.to_bits());
+        assert_eq!(x.finished_s.to_bits(), y.finished_s.to_bits());
+        assert_eq!(x.failed, y.failed);
+    }
 }

@@ -372,6 +372,96 @@ fn prop_exactly_once_under_pilot_faults() {
 }
 
 #[test]
+fn prop_exactly_once_under_provider_faults() {
+    // ISSUE 7: under any mix of provider control-plane faults — outage
+    // windows, transient submit error rates, byte throttles, any attempt
+    // budget — every submitted task ends exactly once: driven to `Done`
+    // by exactly one provider (its primary or a failover target), or
+    // canceled in `abandoned`. Never both, never twice, never dropped.
+    use hydra::api::ResourceRequest;
+    use hydra::broker::{BrokerError, Hydra, ProviderFaultSpec, RetryPolicy};
+
+    forall("exactly-once completion under provider faults", 25, |g| {
+        let fault = |g: &mut Gen| ProviderFaultSpec {
+            outage_window: if g.u64(0, 3) == 0 { Some((0.0, g.f64(0.0, 1e5))) } else { None },
+            transient_error_p: if g.u64(0, 3) == 0 { g.f64(0.0, 1.0) } else { 0.0 },
+            throttle_after_bytes: if g.u64(0, 5) == 0 { g.usize(1, 20_000) } else { 0 },
+        };
+        let retry = |g: &mut Gen| RetryPolicy {
+            max_attempts: g.u64(1, 6) as u32,
+            base_backoff_s: g.f64(0.01, 0.2),
+            ..RetryPolicy::default()
+        };
+        // Two CaaS providers (so container slices have a failover
+        // target), one Batch, one FaaS — all with independent faults.
+        let mut b = Hydra::builder().seed(g.u64(0, u64::MAX / 2));
+        for p in [ProviderId::Jetstream2, ProviderId::Chameleon] {
+            b = b.simulated_provider(p).resource(
+                ResourceRequest::kubernetes(p, 1, 16)
+                    .with_provider_faults(fault(g))
+                    .with_retry_policy(retry(g)),
+            );
+        }
+        b = b.simulated_provider(ProviderId::Bridges2).resource(
+            ResourceRequest::pilot(ProviderId::Bridges2, 1)
+                .with_provider_faults(fault(g))
+                .with_retry_policy(retry(g)),
+        );
+        b = b.simulated_provider(ProviderId::Aws).resource(
+            ResourceRequest::faas(ProviderId::Aws, 64)
+                .with_provider_faults(fault(g))
+                .with_retry_policy(retry(g)),
+        );
+        let hydra = b.build().unwrap();
+
+        let n = g.usize(1, 60);
+        let tasks: Vec<TaskDescription> = (0..n)
+            .map(|i| match g.u64(0, 2) {
+                0 => TaskDescription::container(format!("c{i}"), "img:latest"),
+                1 => TaskDescription::executable(format!("e{i}"), "exe"),
+                _ => TaskDescription::function(format!("f{i}"), "pkg.handler"),
+            })
+            .collect();
+
+        match hydra.submit(tasks, &hydra::broker::BrokerPolicy::ByTaskKind) {
+            Ok(run) => {
+                // `Done` ids plus abandoned ids partition the submission.
+                let mut ids: Vec<u64> = run
+                    .assignment
+                    .values()
+                    .flatten()
+                    .filter(|id| hydra.registry().state_of(**id) == Some(TaskState::Done))
+                    .map(|id| id.0)
+                    .collect();
+                ids.extend(run.abandoned.iter().map(|id| id.0));
+                ids.sort_unstable();
+                assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "exactly-once partition");
+                // Abandoned tasks really were canceled, not silently run.
+                for id in &run.abandoned {
+                    assert_eq!(hydra.registry().state_of(*id), Some(TaskState::Canceled));
+                }
+                // Failover accounting agrees with the recorded legs.
+                let tallied: usize =
+                    run.failovers.iter().map(|f| f.report.run().faults.failed_over).sum();
+                assert_eq!(
+                    tallied,
+                    run.failovers.iter().map(|f| f.tasks).sum::<usize>(),
+                    "failover tally out of sync with the legs"
+                );
+                assert!(hydra.registry().all_final());
+            }
+            Err(BrokerError::Resource(msg)) => {
+                // Every provider's control plane failed: the whole
+                // workload must end canceled, nothing half-run.
+                assert!(msg.contains("every provider failed"), "unexpected: {msg}");
+                assert!(hydra.registry().all_final());
+            }
+            Err(e) => panic!("broker must absorb provider faults, got: {e}"),
+        }
+    });
+}
+
+#[test]
 fn oversized_task_clamps_to_pilot_width_serial_reference() {
     // Direct unit coverage for the serial path's clamp (hpc.rs
     // `try_launch`: `t.cores.min(self.total_cores)`), which previously
