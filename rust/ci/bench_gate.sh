@@ -1,33 +1,44 @@
 #!/usr/bin/env bash
-# bench_gate.sh — perf-regression gate over the BENCH_quick trajectory
-# (ISSUE 3 satellite; wired into .github/workflows/ci.yml as a
-# non-blocking step until two PRs of trajectory data exist).
+# bench_gate.sh — perf-regression gate over the bench trajectory
+# (ISSUE 3 satellite, extended by ISSUE 8 to the scale tier; wired into
+# .github/workflows/ci.yml).
 #
-#   ./ci/bench_gate.sh [fresh.json] [baseline.json]   # compare (default:
-#                                                     # BENCH_quick.json vs
-#                                                     # BENCH_baseline.json)
-#   ./ci/bench_gate.sh --refresh                      # promote the fresh
-#                                                     # run to baseline
+#   ./ci/bench_gate.sh [fresh.json] [baseline.json]
+#       Compare fresh against baseline. Defaults: BENCH_quick.json vs
+#       BENCH_baseline.json. The *fresh* file's schema selects the row
+#       flattener — both the quick tier (hydra-bench-quick/v1) and the
+#       scale tier (hydra-bench-scale/v1, from bench_scale) are
+#       understood, so the nightly bench-scale CI job can gate with:
+#         ./ci/bench_gate.sh BENCH_scale.json BENCH_scale_baseline.json
+#   ./ci/bench_gate.sh --refresh [fresh.json] [baseline.json]
+#       Promote the fresh run to the baseline (same defaults), e.g.:
+#         ./ci/bench_gate.sh --refresh                  # quick tier
+#         ./ci/bench_gate.sh --refresh BENCH_scale.json BENCH_scale_baseline.json
 #
 # Exit 1 when any row shared by both files regresses by more than
 # BENCH_GATE_TOLERANCE (default 0.25 = 25%):
-#   * events/s rows (sched microbench) must not drop;
+#   * events/s rows (sched microbench incl. queue_heap/queue_calendar,
+#     and the scale points' heap/calendar) must not drop;
 #   * OVH and serialize_ms rows (broker points) must not rise.
 # Rows present in only one of baseline/fresh (e.g. a bench point added by
-# the current PR, like exp_faas_4k, exp_hpc_multipilot_4k, or this PR's
-# exp_failover_4k) WARN but never fail the gate — the schema is expected
+# the current PR) WARN but never fail the gate — the schema is expected
 # to grow a row per PR, and adding a point must not trip the diff. Only
 # shared-row regressions fail. A freshly added row therefore stays
 # WARN-only until a measured run is promoted to the committed baseline
-# with `./ci/bench_gate.sh --refresh`; from then on it gates like any
-# other row (exp_failover_4k included, once a baseline carrying it
-# lands).
+# with --refresh; from then on it gates like any other row.
+#
+# Schema policy: a bad/unknown schema in the *fresh* file fails the gate
+# (broken bench output must not silently disable gating); a baseline
+# whose schema doesn't match the fresh file's (e.g. an old baseline after
+# a schema bump, or no scale baseline committed yet) is a clean skip.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if [[ "${1:-}" == "--refresh" ]]; then
-  cp BENCH_quick.json BENCH_baseline.json
-  echo "bench_gate: baseline refreshed from BENCH_quick.json"
+  src="${2:-BENCH_quick.json}"
+  dst="${3:-BENCH_baseline.json}"
+  cp "$src" "$dst"
+  echo "bench_gate: baseline $dst refreshed from $src"
   exit 0
 fi
 
@@ -36,7 +47,7 @@ base="${2:-BENCH_baseline.json}"
 tol="${BENCH_GATE_TOLERANCE:-0.25}"
 
 if [[ ! -f "$fresh" ]]; then
-  echo "bench_gate: no fresh bench at $fresh (run ./smoke.sh first)" >&2
+  echo "bench_gate: no fresh bench at $fresh (run ./smoke.sh or bench_scale first)" >&2
   exit 1
 fi
 if [[ ! -f "$base" ]]; then
@@ -52,24 +63,9 @@ fresh_path, base_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
 fresh = json.load(open(fresh_path))
 base = json.load(open(base_path))
 
-# A bad schema in the *fresh* file is a failure — otherwise a PR that
-# breaks bench_quick's output silently disables the gate. Only a
-# baseline-side mismatch (e.g. an old baseline after a schema bump) is
-# a clean skip.
-fresh_schema = fresh.get("schema")
-if fresh_schema != "hydra-bench-quick/v1":
-    print(f"bench_gate: {fresh_path}: unexpected schema {fresh_schema!r}; "
-          "bench output is broken — failing the gate")
-    sys.exit(1)
-base_schema = base.get("schema")
-if base_schema != "hydra-bench-quick/v1":
-    print(f"bench_gate: {base_path}: baseline schema {base_schema!r} predates "
-          "the current format; skipping gate (refresh the baseline)")
-    sys.exit(0)
 
-
-def rows(doc):
-    """Flatten a bench document into {row_name: (value, higher_is_better)}."""
+def quick_rows(doc):
+    """Flatten a quick-tier document into {row_name: (value, higher_is_better)}."""
     out = {}
     for p in doc.get("points", []):
         name = p.get("name", "?")
@@ -81,13 +77,46 @@ def rows(doc):
     if isinstance(micro.get("serialize_ms_parallel"), (int, float)):
         out["serialize_micro.parallel_ms"] = (micro["serialize_ms_parallel"], False)
     sched = doc.get("sched_microbench") or {}
-    for kind in ("linear", "indexed"):
+    for kind in ("linear", "indexed", "queue_heap", "queue_calendar"):
         eps = (sched.get(kind) or {}).get("events_per_s")
         if isinstance(eps, (int, float)):
             out[f"sched.{kind}.events_per_s"] = (eps, True)
     return out
 
 
+def scale_rows(doc):
+    """Flatten a scale-tier document (bench_scale's BENCH_scale.json)."""
+    out = {}
+    for p in doc.get("points", []):
+        name = p.get("name", "?")
+        for kind in ("heap", "calendar"):
+            eps = (p.get(kind) or {}).get("events_per_s")
+            if isinstance(eps, (int, float)):
+                out[f"{name}.{kind}.events_per_s"] = (eps, True)
+    return out
+
+
+FLATTENERS = {
+    "hydra-bench-quick/v1": quick_rows,
+    "hydra-bench-scale/v1": scale_rows,
+}
+
+# A bad schema in the *fresh* file is a failure — otherwise a PR that
+# breaks the bench output silently disables the gate. Only a
+# baseline-side mismatch (e.g. an old baseline after a schema bump, or
+# no scale baseline committed yet) is a clean skip.
+fresh_schema = fresh.get("schema")
+if fresh_schema not in FLATTENERS:
+    print(f"bench_gate: {fresh_path}: unexpected schema {fresh_schema!r}; "
+          "bench output is broken — failing the gate")
+    sys.exit(1)
+base_schema = base.get("schema")
+if base_schema != fresh_schema:
+    print(f"bench_gate: {base_path}: baseline schema {base_schema!r} does not "
+          f"match fresh {fresh_schema!r}; skipping gate (refresh the baseline)")
+    sys.exit(0)
+
+rows = FLATTENERS[fresh_schema]
 fresh_rows, base_rows = rows(fresh), rows(base)
 if not base_rows:
     print(f"bench_gate: {base_path} has no comparable rows (placeholder baseline); "
@@ -116,8 +145,8 @@ for key in sorted(base_rows):
     if regressed:
         failures.append(key)
 for key in sorted(set(fresh_rows) - set(base_rows)):
-    # Warn, never fail: new bench points (e.g. exp_faas_4k) enter the
-    # baseline on the next --refresh.
+    # Warn, never fail: new bench points (e.g. this PR's queue rows)
+    # enter the baseline on the next --refresh.
     print(f"bench_gate: WARN {key}: new row (no baseline yet)")
     warnings += 1
 

@@ -15,9 +15,17 @@ usage: ./smoke.sh
 
 Runs the tier-1 verify plus the perf smoke, in order:
   1. cargo build --release
-  2. cargo test -q
+  2. cargo test -q                           (includes the equivalence
+     suites: sched_equivalence, pilot_equivalence, queue_equivalence —
+     the calendar-vs-heap event-queue lock from ISSUE 8)
   3. cargo run --release --bin bench_quick   (writes BENCH_quick.json,
-     schema hydra-bench-quick/v1 — the ROADMAP perf-trajectory record)
+     schema hydra-bench-quick/v1 — the ROADMAP perf-trajectory record;
+     includes the heap-vs-calendar queue rows on the 16K-pod point)
+
+Deliberately NOT run here: the bench_scale tier (100K/1M-pod points,
+schema hydra-bench-scale/v1) — it takes minutes, so tier-1 stays fast.
+Run it explicitly with 'cargo run --release --bin bench_scale', or let
+the nightly/workflow_dispatch bench-scale CI job run the 100K point.
 
 CI runs this same script: the smoke-bench job in
 .github/workflows/ci.yml invokes ./smoke.sh, diffs the fresh

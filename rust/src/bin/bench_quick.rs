@@ -32,7 +32,10 @@
 //! * **events/s** — simulator event throughput for the 16K-pod
 //!   scheduling microbench, for the indexed scheduler and the seed's
 //!   linear scan, with the speedup and a determinism cross-check
-//!   (identical `TaskRecord`s from both schedulers).
+//!   (identical `TaskRecord`s from both schedulers). The same point is
+//!   then re-run heap-queue vs calendar-queue (ISSUE 8: the event-queue
+//!   backends of `sim::event`) with its own speedup + identity check;
+//!   the 100K/1M-task deep end of that axis lives in `bench_scale`.
 
 use hydra::api::resource::FaultSpec;
 use hydra::api::task::{TaskId, TaskState};
@@ -42,6 +45,7 @@ use hydra::broker::{
     BrokerPolicy, BrokerRun, Hydra, PartitionModel, PodBuildMode, ProviderFaultSpec, RetryPolicy,
     SerializeOptions,
 };
+use hydra::sim::event::EventQueueKind;
 use hydra::sim::kubernetes::{ClusterSpec, ContainerSpec, KubernetesSim, PodSpec, SchedulerKind};
 use hydra::sim::provider::ProviderId;
 use hydra::util::json::Json;
@@ -426,10 +430,15 @@ struct MicroRun {
     makespan_s: f64,
 }
 
-fn run_micro(kind: SchedulerKind) -> (MicroRun, Vec<hydra::sim::kubernetes::TaskRecord>) {
+fn run_micro(
+    kind: SchedulerKind,
+    queue: EventQueueKind,
+) -> (MicroRun, Vec<hydra::sim::kubernetes::TaskRecord>) {
     let profile = hydra::sim::provider::PlatformProfile::of(ProviderId::Jetstream2);
     let cluster = ClusterSpec::uniform(MICRO_NODES, MICRO_VCPUS);
-    let mut sim = KubernetesSim::new(profile, cluster, MICRO_SEED).with_scheduler(kind);
+    let mut sim = KubernetesSim::new(profile, cluster, MICRO_SEED)
+        .with_scheduler(kind)
+        .with_event_queue(queue);
     sim.submit(micro_pods(), 0.0);
     let sw = Stopwatch::start();
     let report = sim.run();
@@ -577,8 +586,8 @@ fn main() {
         "\n--- scheduling microbench ({MICRO_PODS} pods, {MICRO_NODES} nodes x \
          {MICRO_VCPUS} vCPUs, seed {MICRO_SEED}) ---"
     );
-    let (linear, linear_records) = run_micro(SchedulerKind::LinearScan);
-    let (indexed, indexed_records) = run_micro(SchedulerKind::Indexed);
+    let (linear, linear_records) = run_micro(SchedulerKind::LinearScan, EventQueueKind::default());
+    let (indexed, indexed_records) = run_micro(SchedulerKind::Indexed, EventQueueKind::default());
     let records_identical = linear_records == indexed_records;
     let speedup = linear.wall_s / indexed.wall_s.max(1e-12);
     println!(
@@ -601,6 +610,30 @@ fn main() {
     assert!(
         records_identical,
         "indexed scheduler diverged from the linear-scan reference"
+    );
+
+    // ISSUE 8: the same point, indexed scheduler, heap queue (reference)
+    // vs calendar queue (default) — the quick-tier view of the axis
+    // bench_scale pushes to 1M tasks.
+    let (q_heap, q_heap_records) = run_micro(SchedulerKind::Indexed, EventQueueKind::Heap);
+    let (q_cal, q_cal_records) = run_micro(SchedulerKind::Indexed, EventQueueKind::Calendar);
+    let queue_records_identical = q_heap_records == q_cal_records;
+    let queue_speedup = q_cal.events_per_s / q_heap.events_per_s.max(1e-12);
+    println!(
+        "{:<12} {:>10.3} {:>12} {:>14.0}",
+        "queue:heap", q_heap.wall_s, q_heap.events, q_heap.events_per_s
+    );
+    println!(
+        "{:<12} {:>10.3} {:>12} {:>14.0}",
+        "queue:cal", q_cal.wall_s, q_cal.events, q_cal.events_per_s
+    );
+    println!(
+        "queue speedup (events/s): {queue_speedup:.2}x | identical TaskRecords: \
+         {queue_records_identical}"
+    );
+    assert!(
+        queue_records_identical,
+        "calendar event queue diverged from the heap reference"
     );
 
     let doc = Json::obj()
@@ -665,7 +698,11 @@ fn main() {
                 .set("linear", micro_json(&linear))
                 .set("indexed", micro_json(&indexed))
                 .set("speedup", speedup)
-                .set("records_identical", records_identical),
+                .set("records_identical", records_identical)
+                .set("queue_heap", micro_json(&q_heap))
+                .set("queue_calendar", micro_json(&q_cal))
+                .set("queue_speedup", queue_speedup)
+                .set("queue_records_identical", queue_records_identical),
         );
     let path = "BENCH_quick.json";
     std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_quick.json");

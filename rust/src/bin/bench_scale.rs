@@ -1,0 +1,221 @@
+//! bench_scale — the 100K/1M-task scale tier (ISSUE 8 tentpole).
+//!
+//! The quick trajectory (`bench_quick`, run by `smoke.sh` on every PR)
+//! stops at 4K tasks and 16K pods; the paper's core claim is scale, so
+//! this harness pushes the simulator two orders of magnitude further:
+//! 100K- and 1M-pod workloads on a 4096-node × 16-vCPU cluster, measured
+//! once per event-queue backend (`EventQueueKind::Heap`, the reference,
+//! vs `EventQueueKind::Calendar`, the O(1)-amortized default — see
+//! `sim::event`). At this event count the queue is the expected hotspot,
+//! which is exactly what the tier exists to expose and guard.
+//!
+//! Deliberately **excluded from `smoke.sh`** so tier-1 stays fast: run it
+//! explicitly (`cargo run --release --bin bench_scale`), or let the
+//! nightly/workflow_dispatch `bench-scale` CI job run the 100K point.
+//! Writes machine-readable `BENCH_scale.json` (schema
+//! `hydra-bench-scale/v1`); `ci/bench_gate.sh` understands the schema
+//! when handed the file explicitly.
+//!
+//! Harness-level asserts (the tier gates itself even without a committed
+//! baseline):
+//! * every point completes all its pods under both backends;
+//! * the two backends produce byte-identical `TaskRecord`s;
+//! * on the 1M point the calendar queue's events/s must be ≥ the heap's
+//!   reported in the same file (the tentpole's reason to exist).
+
+use hydra::sim::event::EventQueueKind;
+use hydra::sim::kubernetes::{
+    ClusterSpec, ContainerSpec, KubernetesSim, PodSpec, SchedulerKind, TaskRecord,
+};
+use hydra::sim::provider::{PlatformProfile, ProviderId};
+use hydra::util::json::Json;
+use hydra::util::Stopwatch;
+
+const SCALE_NODES: u32 = 4096;
+const SCALE_VCPUS: u32 = 16;
+const SCALE_SEED: u64 = 7;
+
+struct ScalePoint {
+    name: &'static str,
+    pods: usize,
+    /// Wall-clock repeats per backend (best-of): noise protection for
+    /// the calendar-vs-heap assert.
+    best_of: usize,
+}
+
+const POINTS: [ScalePoint; 2] = [
+    ScalePoint { name: "scale_sched_100k", pods: 100_000, best_of: 3 },
+    ScalePoint { name: "scale_sched_1m", pods: 1_000_000, best_of: 2 },
+];
+
+const USAGE: &str = "usage: bench_scale [--only 100k|1m]
+
+Scale tier (ISSUE 8): 100K- and 1M-pod scheduling points on a 4096-node
+cluster, event-queue heap (reference) vs calendar (default), asserting
+byte-identical TaskRecords and, at 1M, calendar events/s >= heap.
+Writes BENCH_scale.json (schema hydra-bench-scale/v1). Excluded from
+smoke.sh; CI runs the 100K point nightly / on workflow_dispatch.
+
+  --only 100k   run only the 100K-pod point
+  --only 1m     run only the 1M-pod point";
+
+struct ScaleRun {
+    wall_s: f64,
+    events: u64,
+    events_per_s: f64,
+    makespan_s: f64,
+}
+
+fn scale_pods(n: usize) -> Vec<PodSpec> {
+    (0..n as u64)
+        .map(|i| PodSpec { id: i, containers: vec![ContainerSpec::noop(i + 1)] })
+        .collect()
+}
+
+/// One measured run: `pods` single-container noop pods through the
+/// indexed scheduler on the chosen queue backend. Returns the timing and
+/// the full record vector for the cross-backend identity check.
+fn run_once(pods: usize, queue: EventQueueKind) -> (ScaleRun, Vec<TaskRecord>) {
+    let profile = PlatformProfile::of(ProviderId::Jetstream2);
+    let cluster = ClusterSpec::uniform(SCALE_NODES, SCALE_VCPUS);
+    let mut sim = KubernetesSim::new(profile, cluster, SCALE_SEED)
+        .with_scheduler(SchedulerKind::Indexed)
+        .with_event_queue(queue);
+    sim.submit(scale_pods(pods), 0.0);
+    let sw = Stopwatch::start();
+    let report = sim.run();
+    let wall_s = sw.elapsed_secs();
+    assert_eq!(report.pods_completed, pods, "{queue:?}: pods lost at {pods}");
+    let events_per_s = if wall_s > 0.0 {
+        report.events_processed as f64 / wall_s
+    } else {
+        f64::INFINITY
+    };
+    (
+        ScaleRun {
+            wall_s,
+            events: report.events_processed,
+            events_per_s,
+            makespan_s: report.makespan_s,
+        },
+        report.tasks,
+    )
+}
+
+/// Best-of-`n` wall time (fixed seed: the simulated schedule is
+/// identical across repeats, only the wall clock varies).
+fn run_best(pods: usize, queue: EventQueueKind, best_of: usize) -> (ScaleRun, Vec<TaskRecord>) {
+    let (mut best, mut records) = run_once(pods, queue);
+    for _ in 1..best_of {
+        let (run, recs) = run_once(pods, queue);
+        if run.wall_s < best.wall_s {
+            best = run;
+            records = recs;
+        }
+    }
+    (best, records)
+}
+
+fn run_json(r: &ScaleRun) -> Json {
+    Json::obj()
+        .set("wall_s", r.wall_s)
+        .set("events", r.events)
+        .set("events_per_s", r.events_per_s)
+        .set("makespan_s", r.makespan_s)
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("bench_scale: {msg}\n\n{USAGE}");
+    std::process::exit(2);
+}
+
+fn main() {
+    let mut only: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return;
+            }
+            "--only" => match args.next().as_deref() {
+                Some(v @ ("100k" | "1m")) => only = Some(v.to_string()),
+                _ => die("--only takes 100k or 1m"),
+            },
+            other => die(&format!("unknown argument {other:?}")),
+        }
+    }
+
+    let selected: Vec<&ScalePoint> = POINTS
+        .iter()
+        .filter(|p| match only.as_deref() {
+            None => true,
+            Some("100k") => p.pods == 100_000,
+            Some("1m") => p.pods == 1_000_000,
+            Some(_) => false,
+        })
+        .collect();
+
+    println!(
+        "bench_scale: {} pods/point on {SCALE_NODES} nodes x {SCALE_VCPUS} vCPUs \
+         (seed {SCALE_SEED})",
+        selected.iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+    );
+    println!(
+        "{:<18} {:>10} {:>10} {:>12} {:>14} {:>9}",
+        "POINT", "QUEUE", "WALL (s)", "EVENTS", "EVENTS/s", "SPEEDUP"
+    );
+
+    let mut point_docs = Vec::new();
+    for p in &selected {
+        let (heap, heap_records) = run_best(p.pods, EventQueueKind::Heap, p.best_of);
+        let (cal, cal_records) = run_best(p.pods, EventQueueKind::Calendar, p.best_of);
+        let records_identical = heap_records == cal_records;
+        assert!(
+            records_identical,
+            "{}: calendar queue diverged from the heap reference",
+            p.name
+        );
+        let speedup = cal.events_per_s / heap.events_per_s.max(1e-12);
+        println!(
+            "{:<18} {:>10} {:>10.3} {:>12} {:>14.0} {:>9}",
+            p.name, "heap", heap.wall_s, heap.events, heap.events_per_s, ""
+        );
+        println!(
+            "{:<18} {:>10} {:>10.3} {:>12} {:>14.0} {:>8.2}x",
+            p.name, "calendar", cal.wall_s, cal.events, cal.events_per_s, speedup
+        );
+        if p.pods >= 1_000_000 {
+            // The tentpole's acceptance: at 1M tasks the calendar queue
+            // must not be slower than the heap it replaces.
+            assert!(
+                cal.events_per_s >= heap.events_per_s,
+                "{}: calendar {:.0} ev/s < heap {:.0} ev/s — the O(1) queue regressed",
+                p.name,
+                cal.events_per_s,
+                heap.events_per_s
+            );
+        }
+        point_docs.push(
+            Json::obj()
+                .set("name", p.name)
+                .set("pods", p.pods)
+                .set("tasks", p.pods)
+                .set("best_of", p.best_of)
+                .set("heap", run_json(&heap))
+                .set("calendar", run_json(&cal))
+                .set("speedup", speedup)
+                .set("records_identical", records_identical),
+        );
+    }
+
+    let doc = Json::obj()
+        .set("schema", "hydra-bench-scale/v1")
+        .set("nodes", SCALE_NODES as u64)
+        .set("vcpus_per_node", SCALE_VCPUS as u64)
+        .set("seed", SCALE_SEED)
+        .set("points", Json::Arr(point_docs));
+    let path = "BENCH_scale.json";
+    std::fs::write(path, doc.to_string_pretty()).expect("write BENCH_scale.json");
+    println!("\n(wrote {path})");
+}

@@ -1,13 +1,42 @@
 //! Discrete-event simulation core: virtual clock + ordered event queue.
 //!
-//! Every platform substrate (Kubernetes clusters, HPC batch queues, VM
-//! provisioning) runs on this engine. Virtual time is decoupled from wall
+//! Every platform substrate (Kubernetes clusters, HPC batch queues, FaaS
+//! services) runs on this engine. Virtual time is decoupled from wall
 //! time on purpose: the paper's platform-side metrics (TPT, TTX) are
 //! *simulated* here, while Hydra's broker-side metric (OVH) is measured in
 //! real wall-clock time — see DESIGN.md §1 for the substitution argument.
+//!
+//! # Two queue kinds (ISSUE 8 tentpole)
+//!
+//! [`EventQueue`] orders pending events by `(time, insertion seq)` and can
+//! be backed by either of two stores, selected with [`EventQueueKind`]:
+//!
+//! * [`EventQueueKind::Calendar`] (the default) — a calendar/bucket queue:
+//!   events hash into "day" buckets of a fixed time `width`, each bucket
+//!   kept sorted by `(time, seq)`, and a cursor walks the days in order.
+//!   Schedule and pop are **O(1) amortized**: the bucket count doubles
+//!   (and the day width is re-derived from the *observed* event horizon,
+//!   `span / live events`) whenever occupancy exceeds two events per
+//!   bucket, and shrinks when the queue drains, so buckets stay near-empty
+//!   and a pop touches a constant number of days in expectation. Sparse
+//!   schedules that would make the cursor crawl fall back to a direct
+//!   minimum scan after one bucket lap, which also re-anchors the cursor.
+//! * [`EventQueueKind::Heap`] — the original `BinaryHeap`, **O(log n)**
+//!   per operation. Kept as the *reference implementation*: the calendar
+//!   queue must reproduce its pop order byte for byte.
+//!
+//! This is the same landed pattern as `SchedulerKind::LinearScan` (the
+//! linear-scan placement reference for the segment-tree index) and the
+//! serial `HpcSim` (the pilots=1 reference for `MultiPilotSim`): the slow,
+//! obviously-correct implementation stays in-tree and equivalence suites
+//! (`tests/queue_equivalence.rs`, run by name in CI tier-1) lock the fast
+//! path to it — same `(time, seq)` pop order, same tie-breaking, same
+//! past-clamping, same `now`/`processed` bookkeeping. Both backends share
+//! this wrapper's clock, sequence counter, and clamping, so the contract
+//! can only diverge in *ordering*, which is exactly what the suite pins.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Virtual time in microseconds since simulation start.
 pub type SimTime = u64;
@@ -30,15 +59,35 @@ pub fn to_secs(t: SimTime) -> f64 {
     t as f64 / SECONDS as f64
 }
 
+/// Which backing store orders the pending events. Both kinds implement
+/// the identical `(time, seq)` contract; they differ only in cost. See
+/// the module docs for the reference-implementation pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EventQueueKind {
+    /// Calendar/bucket queue: O(1) amortized schedule/pop (default).
+    #[default]
+    Calendar,
+    /// Binary heap: O(log n) per operation; the byte-identical reference.
+    Heap,
+}
+
 struct Scheduled<E> {
     at: SimTime,
     seq: u64,
     event: E,
 }
 
+impl<E> Scheduled<E> {
+    /// The total order both backends agree on: earliest time first, ties
+    /// by insertion order.
+    fn key(&self) -> (SimTime, u64) {
+        (self.at, self.seq)
+    }
+}
+
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.key() == other.key()
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -51,19 +100,166 @@ impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse: BinaryHeap is a max-heap, we want earliest-first.
         // Ties break by insertion order (seq) for determinism.
-        other
-            .at
-            .cmp(&self.at)
-            .then_with(|| other.seq.cmp(&self.seq))
+        other.key().cmp(&self.key())
     }
+}
+
+/// Initial bucket count (power of two) and day width for a calendar that
+/// has not yet observed enough events to size itself.
+const MIN_BUCKETS: usize = 16;
+const INITIAL_WIDTH: SimTime = MILLIS;
+
+/// The calendar store. Bucket `(-at / width) mod nbuckets` holds every
+/// event of day `at / width`, sorted ascending by `(at, seq)`, so a
+/// bucket's front is its minimum. Events of later "years" (days that
+/// alias the same bucket) sit further back in the same bucket and are
+/// skipped by the day check in `pop`.
+struct Calendar<E> {
+    buckets: Vec<VecDeque<Scheduled<E>>>,
+    /// `buckets.len() - 1`; the length is a power of two.
+    mask: u64,
+    /// Virtual time span of one day bucket (>= 1 µs).
+    width: SimTime,
+    /// Day the pop cursor is in. Never behind `now / width`.
+    cur_day: u64,
+    len: usize,
+}
+
+impl<E> Calendar<E> {
+    fn new() -> Calendar<E> {
+        Calendar {
+            buckets: (0..MIN_BUCKETS).map(|_| VecDeque::new()).collect(),
+            mask: MIN_BUCKETS as u64 - 1,
+            width: INITIAL_WIDTH,
+            cur_day: 0,
+            len: 0,
+        }
+    }
+
+    fn bucket_of(&self, at: SimTime) -> usize {
+        ((at / self.width) & self.mask) as usize
+    }
+
+    /// Insert keeping the bucket sorted by `(at, seq)`. Indexed binary
+    /// search (VecDeque indexing is O(1)); the memmove cost of the insert
+    /// is bounded by the bucket size, which resizing keeps ~O(1).
+    fn schedule(&mut self, s: Scheduled<E>, now: SimTime) {
+        if self.len + 1 > self.buckets.len() * 2 {
+            self.rebuild(self.len + 1, now);
+        }
+        let b = self.bucket_of(s.at);
+        let bucket = &mut self.buckets[b];
+        let (mut lo, mut hi) = (0usize, bucket.len());
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if bucket[mid].key() < s.key() {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        bucket.insert(lo, s);
+        self.len += 1;
+    }
+
+    /// Pop the globally-earliest event. Walks day windows from the
+    /// cursor; every event is >= `now` (the wrapper clamps), so the first
+    /// day with a front inside its window holds the minimum, and the
+    /// sorted bucket's front is it. After one full lap without a hit the
+    /// schedule is sparse relative to the day width: fall back to a
+    /// direct scan of the bucket minima and re-anchor the cursor there.
+    fn pop(&mut self, now: SimTime) -> Option<Scheduled<E>> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.buckets.len() > MIN_BUCKETS && self.len * 8 < self.buckets.len() {
+            self.rebuild(self.len, now);
+        }
+        for _ in 0..self.buckets.len() {
+            let b = (self.cur_day & self.mask) as usize;
+            if let Some(front) = self.buckets[b].front() {
+                if front.at / self.width == self.cur_day {
+                    self.len -= 1;
+                    return self.buckets[b].pop_front();
+                }
+            }
+            self.cur_day += 1;
+        }
+        let mut best: Option<(SimTime, u64, usize)> = None;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            if let Some(front) = bucket.front() {
+                let better = match best {
+                    None => true,
+                    Some((at, seq, _)) => front.key() < (at, seq),
+                };
+                if better {
+                    best = Some((front.at, front.seq, i));
+                }
+            }
+        }
+        let (at, _, i) = best.expect("len > 0 implies a nonempty bucket");
+        self.cur_day = at / self.width;
+        self.len -= 1;
+        self.buckets[i].pop_front()
+    }
+
+    /// Earliest pending time without popping. O(buckets); only used by
+    /// the wrapper's `next_time` peek, never on the hot event loop.
+    fn peek_min(&self) -> Option<SimTime> {
+        self.buckets
+            .iter()
+            .filter_map(|b| b.front())
+            .map(Scheduled::key)
+            .min()
+            .map(|(at, _)| at)
+    }
+
+    /// Re-size to ~2 buckets per live event and re-derive the day width
+    /// from the observed horizon (remaining span / live events ≈ the mean
+    /// inter-event gap), then redistribute. O(len + buckets); amortized
+    /// O(1) per operation via the doubling/halving triggers.
+    fn rebuild(&mut self, target_len: usize, now: SimTime) {
+        let mut slots: Vec<Scheduled<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            slots.extend(b.drain(..));
+        }
+        let (mut lo, mut hi) = (SimTime::MAX, 0);
+        for s in &slots {
+            lo = lo.min(s.at);
+            hi = hi.max(s.at);
+        }
+        if slots.is_empty() {
+            lo = now;
+            hi = now;
+        }
+        let n = (target_len.max(1) * 2).next_power_of_two().max(MIN_BUCKETS);
+        self.width = ((hi - lo) / target_len.max(1) as u64).max(1);
+        self.mask = n as u64 - 1;
+        self.buckets = (0..n).map(|_| VecDeque::new()).collect();
+        self.cur_day = now / self.width;
+        for s in slots {
+            let b = self.bucket_of(s.at);
+            self.buckets[b].push_back(s);
+        }
+        for b in &mut self.buckets {
+            b.make_contiguous().sort_unstable_by_key(Scheduled::key);
+        }
+    }
+}
+
+enum Backend<E> {
+    Heap(BinaryHeap<Scheduled<E>>),
+    Calendar(Calendar<E>),
 }
 
 /// An event queue with a virtual clock.
 ///
 /// The owning simulator defines the event payload `E` and drives the loop:
 /// `while let Some((t, e)) = q.pop() { ... q.schedule_at(...) ... }`.
+/// The backing store defaults to the calendar queue; construct with
+/// [`EventQueue::with_kind`] to pin the heap reference (see module docs).
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    backend: Backend<E>,
     now: SimTime,
     seq: u64,
     processed: u64,
@@ -77,7 +273,24 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> EventQueue<E> {
-        EventQueue { heap: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
+        EventQueue::with_kind(EventQueueKind::default())
+    }
+
+    /// Construct with an explicit backing store.
+    pub fn with_kind(kind: EventQueueKind) -> EventQueue<E> {
+        let backend = match kind {
+            EventQueueKind::Heap => Backend::Heap(BinaryHeap::new()),
+            EventQueueKind::Calendar => Backend::Calendar(Calendar::new()),
+        };
+        EventQueue { backend, now: 0, seq: 0, processed: 0 }
+    }
+
+    /// Which backing store this queue runs on.
+    pub fn kind(&self) -> EventQueueKind {
+        match self.backend {
+            Backend::Heap(_) => EventQueueKind::Heap,
+            Backend::Calendar(_) => EventQueueKind::Calendar,
+        }
     }
 
     /// Current virtual time (time of the last popped event).
@@ -91,19 +304,29 @@ impl<E> EventQueue<E> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Calendar(c) => c.len,
+        }
     }
 
     /// Schedule `event` at absolute virtual time `at`. Scheduling in the
-    /// past is clamped to `now` (the event fires "immediately").
+    /// past is clamped to `now` (the event fires "immediately"). The
+    /// clamp lives here, shared by both backends, so no backend ever
+    /// holds an event earlier than `now` — the invariant the calendar's
+    /// cursor walk relies on.
     pub fn schedule_at(&mut self, at: SimTime, event: E) {
         let at = at.max(self.now);
-        self.heap.push(Scheduled { at, seq: self.seq, event });
+        let s = Scheduled { at, seq: self.seq, event };
         self.seq += 1;
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(s),
+            Backend::Calendar(c) => c.schedule(s, self.now),
+        }
     }
 
     /// Schedule `event` after a relative delay.
@@ -113,7 +336,13 @@ impl<E> EventQueue<E> {
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let s = self.heap.pop()?;
+        let s = match &mut self.backend {
+            Backend::Heap(h) => h.pop()?,
+            Backend::Calendar(c) => {
+                let now = self.now;
+                c.pop(now)?
+            }
+        };
         debug_assert!(s.at >= self.now, "virtual time went backwards");
         self.now = s.at;
         self.processed += 1;
@@ -122,7 +351,10 @@ impl<E> EventQueue<E> {
 
     /// Peek at the next event time without advancing.
     pub fn next_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|s| s.at)
+        match &self.backend {
+            Backend::Heap(h) => h.peek().map(|s| s.at),
+            Backend::Calendar(c) => c.peek_min(),
+        }
     }
 }
 
@@ -130,55 +362,76 @@ impl<E> EventQueue<E> {
 mod tests {
     use super::*;
 
+    const KINDS: [EventQueueKind; 2] = [EventQueueKind::Calendar, EventQueueKind::Heap];
+
+    #[test]
+    fn default_kind_is_calendar() {
+        let q: EventQueue<()> = EventQueue::new();
+        assert_eq!(q.kind(), EventQueueKind::Calendar);
+        assert_eq!(EventQueueKind::default(), EventQueueKind::Calendar);
+        let h: EventQueue<()> = EventQueue::with_kind(EventQueueKind::Heap);
+        assert_eq!(h.kind(), EventQueueKind::Heap);
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule_at(30, "c");
-        q.schedule_at(10, "a");
-        q.schedule_at(20, "b");
-        let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
-        assert_eq!(order, vec![(10, "a"), (20, "b"), (30, "c")]);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule_at(30, "c");
+            q.schedule_at(10, "a");
+            q.schedule_at(20, "b");
+            let order: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+            assert_eq!(order, vec![(10, "a"), (20, "b"), (30, "c")], "{kind:?}");
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut q = EventQueue::new();
-        q.schedule_at(5, 1);
-        q.schedule_at(5, 2);
-        q.schedule_at(5, 3);
-        let evs: Vec<i32> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
-        assert_eq!(evs, vec![1, 2, 3]);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule_at(5, 1);
+            q.schedule_at(5, 2);
+            q.schedule_at(5, 3);
+            let evs: Vec<i32> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+            assert_eq!(evs, vec![1, 2, 3], "{kind:?}");
+        }
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut q = EventQueue::new();
-        q.schedule_at(100, ());
-        q.schedule_at(50, ());
-        assert_eq!(q.now(), 0);
-        q.pop();
-        assert_eq!(q.now(), 50);
-        q.pop();
-        assert_eq!(q.now(), 100);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule_at(100, ());
+            q.schedule_at(50, ());
+            assert_eq!(q.now(), 0);
+            q.pop();
+            assert_eq!(q.now(), 50, "{kind:?}");
+            q.pop();
+            assert_eq!(q.now(), 100, "{kind:?}");
+        }
     }
 
     #[test]
     fn past_scheduling_clamps_to_now() {
-        let mut q = EventQueue::new();
-        q.schedule_at(100, "later");
-        q.pop();
-        q.schedule_at(10, "past"); // clamped to 100
-        let (t, e) = q.pop().unwrap();
-        assert_eq!((t, e), (100, "past"));
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule_at(100, "later");
+            q.pop();
+            q.schedule_at(10, "past"); // clamped to 100
+            let (t, e) = q.pop().unwrap();
+            assert_eq!((t, e), (100, "past"), "{kind:?}");
+        }
     }
 
     #[test]
     fn schedule_in_is_relative() {
-        let mut q = EventQueue::new();
-        q.schedule_at(40, ());
-        q.pop();
-        q.schedule_in(5, ());
-        assert_eq!(q.next_time(), Some(45));
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule_at(40, ());
+            q.pop();
+            q.schedule_in(5, ());
+            assert_eq!(q.next_time(), Some(45), "{kind:?}");
+        }
     }
 
     #[test]
@@ -192,12 +445,72 @@ mod tests {
 
     #[test]
     fn processed_counts_dispatches() {
-        let mut q = EventQueue::new();
-        for i in 0..10u64 {
-            q.schedule_at(i, i);
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            for i in 0..10u64 {
+                q.schedule_at(i, i);
+            }
+            while q.pop().is_some() {}
+            assert_eq!(q.processed(), 10, "{kind:?}");
+            assert!(q.is_empty(), "{kind:?}");
         }
-        while q.pop().is_some() {}
-        assert_eq!(q.processed(), 10);
+    }
+
+    #[test]
+    fn calendar_survives_growth_and_drain() {
+        // Push enough to force several rebuilds, then drain through the
+        // shrink path; order must stay exactly (time, seq).
+        let mut q = EventQueue::with_kind(EventQueueKind::Calendar);
+        let n = 10_000u64;
+        for i in 0..n {
+            // Deliberately adversarial spread: clustered lows + far highs.
+            let at = if i % 3 == 0 { i } else { i * 1_000_003 };
+            q.schedule_at(at, i);
+        }
+        assert_eq!(q.len(), n as usize);
+        let mut last = (0u64, 0u64);
+        let mut seen = 0;
+        let mut expected: Vec<(SimTime, u64)> = (0..n)
+            .map(|i| (if i % 3 == 0 { i } else { i * 1_000_003 }, i))
+            .collect();
+        expected.sort_unstable();
+        while let Some((t, i)) = q.pop() {
+            assert!((t, i) >= last, "order violated at {t}/{i}");
+            assert_eq!((t, i), expected[seen], "diverged from sorted reference");
+            last = (t, i);
+            seen += 1;
+        }
+        assert_eq!(seen, n as usize);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn calendar_sparse_schedule_uses_direct_search() {
+        // Events much further apart than a year of initial-width days:
+        // the cursor lap fails and the direct-search fallback must find
+        // each next event without walking the gap day by day.
+        let mut q = EventQueue::with_kind(EventQueueKind::Calendar);
+        for i in (0..64u64).rev() {
+            q.schedule_at(i * 10 * SECONDS * MIN_BUCKETS as u64, i);
+        }
+        for i in 0..64u64 {
+            let (t, e) = q.pop().unwrap();
+            assert_eq!(e, i);
+            assert_eq!(t, i * 10 * SECONDS * MIN_BUCKETS as u64);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn same_timestamp_mass_preserves_fifo() {
+        for kind in KINDS {
+            let mut q = EventQueue::with_kind(kind);
+            for i in 0..5_000u64 {
+                q.schedule_at(7, i);
+            }
+            for i in 0..5_000u64 {
+                assert_eq!(q.pop(), Some((7, i)), "{kind:?}");
+            }
+        }
     }
 }

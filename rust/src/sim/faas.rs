@@ -14,7 +14,7 @@
 //!
 //! Deterministic given the seed, like the other substrates.
 
-use super::event::{secs, to_secs, EventQueue};
+use super::event::{secs, to_secs, EventQueue, EventQueueKind};
 use super::provider::PlatformProfile;
 use crate::util::prng::Prng;
 
@@ -76,11 +76,25 @@ pub struct FaasSim {
     invocations: Vec<Invocation>,
     #[allow(dead_code)]
     rng: Prng,
+    queue_kind: EventQueueKind,
 }
 
 impl FaasSim {
     pub fn new(profile: PlatformProfile, spec: FaasSpec, seed: u64) -> FaasSim {
-        FaasSim { profile, spec, invocations: Vec::new(), rng: Prng::new(seed) }
+        FaasSim {
+            profile,
+            spec,
+            invocations: Vec::new(),
+            rng: Prng::new(seed),
+            queue_kind: EventQueueKind::default(),
+        }
+    }
+
+    /// Select the event-queue backing store (default: `Calendar`; see
+    /// `sim::event` for the heap reference pattern).
+    pub fn with_event_queue(mut self, kind: EventQueueKind) -> FaasSim {
+        self.queue_kind = kind;
+        self
     }
 
     pub fn submit(&mut self, invocations: Vec<Invocation>) {
@@ -88,7 +102,7 @@ impl FaasSim {
     }
 
     pub fn run(&mut self) -> FaasReport {
-        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut q: EventQueue<Ev> = EventQueue::with_kind(self.queue_kind);
         // API batch ingestion cost, as with the other services.
         let api = self.profile.api_batch_base_s
             + self.profile.api_per_object_s * self.invocations.len() as f64;
@@ -210,6 +224,32 @@ mod tests {
         };
         let r = run(12, 1.0, spec);
         assert_eq!(r.cold_starts, 12, "every invocation should be cold");
+    }
+
+    #[test]
+    fn calendar_queue_matches_heap_queue() {
+        // ISSUE 8: identical invocation schedule under both backends.
+        let run_q = |k: EventQueueKind| {
+            let profile = PlatformProfile::of(ProviderId::Aws);
+            let mut sim = FaasSim::new(profile, FaasSpec::default(), 1).with_event_queue(k);
+            sim.submit(
+                (0..500)
+                    .map(|i| Invocation { task_id: i, work_s: 0.5, sleep_s: 0.0 })
+                    .collect(),
+            );
+            sim.run()
+        };
+        let (a, b) = (run_q(EventQueueKind::Calendar), run_q(EventQueueKind::Heap));
+        assert_eq!(a.invocations.len(), b.invocations.len());
+        for (x, y) in a.invocations.iter().zip(&b.invocations) {
+            assert_eq!(x.task_id, y.task_id);
+            assert_eq!(x.started_s.to_bits(), y.started_s.to_bits());
+            assert_eq!(x.finished_s.to_bits(), y.finished_s.to_bits());
+            assert_eq!(x.cold, y.cold);
+        }
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.cold_starts, b.cold_starts);
+        assert_eq!(a.peak_concurrency, b.peak_concurrency);
     }
 
     #[test]

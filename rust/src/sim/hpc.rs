@@ -73,7 +73,7 @@
 use std::collections::VecDeque;
 
 use super::capacity::{Cap, CapacityIndex};
-use super::event::{secs, to_secs, EventQueue};
+use super::event::{secs, to_secs, EventQueue, EventQueueKind};
 use super::provider::PlatformProfile;
 use crate::util::prng::Prng;
 
@@ -197,16 +197,31 @@ pub struct HpcSim {
     tasks: Vec<HpcTaskSpec>,
     rng: Prng,
     failure_rate: f64,
+    queue_kind: EventQueueKind,
 }
 
 impl HpcSim {
     pub fn new(profile: PlatformProfile, pilot: PilotSpec, seed: u64) -> HpcSim {
-        HpcSim { profile, pilot, tasks: Vec::new(), rng: Prng::new(seed), failure_rate: 0.0 }
+        HpcSim {
+            profile,
+            pilot,
+            tasks: Vec::new(),
+            rng: Prng::new(seed),
+            failure_rate: 0.0,
+            queue_kind: EventQueueKind::default(),
+        }
     }
 
     /// Enable failure injection with per-task probability `p`.
     pub fn with_failure_rate(mut self, p: f64) -> HpcSim {
         self.failure_rate = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Select the event-queue backing store (default: `Calendar`; see
+    /// `sim::event` for the heap reference pattern).
+    pub fn with_event_queue(mut self, kind: EventQueueKind) -> HpcSim {
+        self.queue_kind = kind;
         self
     }
 
@@ -219,7 +234,7 @@ impl HpcSim {
     pub fn run(&mut self) -> HpcReport {
         let total_cores = self.pilot.cores(&self.profile);
         assert!(total_cores > 0, "pilot must request at least one node");
-        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut q: EventQueue<Ev> = EventQueue::with_kind(self.queue_kind);
 
         let queue_wait = if self.profile.queue_wait_mean_s > 0.0 {
             self.rng
@@ -520,6 +535,7 @@ pub struct MultiPilotSim {
     seed: u64,
     failure_rate: f64,
     fault: FaultSpec,
+    queue_kind: EventQueueKind,
     // Run state (populated by `run`, queryable afterwards).
     pilots: Vec<PilotState>,
     index: CapacityIndex,
@@ -544,6 +560,7 @@ impl MultiPilotSim {
             seed,
             failure_rate: 0.0,
             fault: FaultSpec::none(),
+            queue_kind: EventQueueKind::default(),
             pilots: Vec::new(),
             index: CapacityIndex::zeroed(0),
             next: 0,
@@ -574,6 +591,13 @@ impl MultiPilotSim {
     /// schedule stays byte-identical to the fault-free reference.
     pub fn with_faults(mut self, fault: FaultSpec) -> MultiPilotSim {
         self.fault = fault;
+        self
+    }
+
+    /// Select the event-queue backing store (default: `Calendar`; see
+    /// `sim::event` for the heap reference pattern).
+    pub fn with_event_queue(mut self, kind: EventQueueKind) -> MultiPilotSim {
+        self.queue_kind = kind;
         self
     }
 
@@ -665,7 +689,7 @@ impl MultiPilotSim {
         // enabled, so FaultSpec::none() consumes nothing anywhere.
         let mut frng =
             if faults_on { Some(Prng::new(self.seed ^ FAULT_STREAM_SALT)) } else { None };
-        let mut q: EventQueue<MpEv> = EventQueue::new();
+        let mut q: EventQueue<MpEv> = EventQueue::with_kind(self.queue_kind);
         let mut staged = Vec::with_capacity(self.specs.len());
         let mut deaths: Vec<Option<f64>> = Vec::with_capacity(self.specs.len());
         let mut boots: Vec<bool> = Vec::with_capacity(self.specs.len());
@@ -981,6 +1005,33 @@ mod tests {
         let mut sim = HpcSim::new(b2(), PilotSpec { nodes }, seed);
         sim.submit(tasks);
         sim.run()
+    }
+
+    #[test]
+    fn calendar_queue_matches_heap_queue_serial_and_multipilot() {
+        // ISSUE 8: both event-queue backends must produce bit-identical
+        // pilot schedules (same pop order => same PRNG consumption).
+        let tasks: Vec<_> = (0..800).map(HpcTaskSpec::noop).collect();
+        let serial = |k: EventQueueKind| {
+            let mut sim = HpcSim::new(b2(), PilotSpec { nodes: 1 }, 9).with_event_queue(k);
+            sim.submit(tasks.clone());
+            sim.run()
+        };
+        let (a, b) = (serial(EventQueueKind::Calendar), serial(EventQueueKind::Heap));
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.events_processed, b.events_processed);
+
+        let multi = |k: EventQueueKind| {
+            let mut sim =
+                MultiPilotSim::uniform(b2(), PilotSpec { nodes: 1 }, 4, 9).with_event_queue(k);
+            sim.submit(tasks.clone());
+            sim.run()
+        };
+        let (a, b) = (multi(EventQueueKind::Calendar), multi(EventQueueKind::Heap));
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.pilot_of, b.pilot_of);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
     }
 
     #[test]

@@ -49,7 +49,7 @@
 //! `sim::capacity`.
 
 use super::capacity::{Cap, CapacityIndex};
-use super::event::{secs, to_secs, EventQueue, SimTime};
+use super::event::{secs, to_secs, EventQueue, EventQueueKind, SimTime};
 use super::provider::PlatformProfile;
 use crate::util::prng::Prng;
 
@@ -254,6 +254,19 @@ impl KubernetesSim {
     /// Select the placement search implementation (default: `Indexed`).
     pub fn with_scheduler(mut self, kind: SchedulerKind) -> KubernetesSim {
         self.scheduler = kind;
+        self
+    }
+
+    /// Select the event-queue backing store (default: `Calendar`; the
+    /// `Heap` reference is what `bench_scale` and the queue microbench
+    /// in `bench_quick` measure the calendar against). Must be called
+    /// before the first `submit`.
+    pub fn with_event_queue(mut self, kind: EventQueueKind) -> KubernetesSim {
+        assert!(
+            self.pods.is_empty() && self.queue.is_empty(),
+            "event-queue kind must be selected before submitting"
+        );
+        self.queue = EventQueue::with_kind(kind);
         self
     }
 
@@ -718,4 +731,25 @@ mod tests {
     // scan under churn) moved with the index to `sim::capacity` (ISSUE 5
     // satellite); the scheduler-level equivalence tests above still lock
     // this module's use of it.
+
+    #[test]
+    fn calendar_queue_matches_heap_queue_end_to_end() {
+        // ISSUE 8: the queue-level equivalence suite proves identical pop
+        // order; this locks the consequence at the simulator layer —
+        // identical TaskRecords (exact f64s: same pop order means the
+        // PRNG is consumed in the same order) under both backing stores.
+        let cluster = ClusterSpec::uniform(8, 16).with_gpus(2);
+        let run_q = |qkind: EventQueueKind| {
+            let mut sim = KubernetesSim::new(profile(), cluster, 77).with_event_queue(qkind);
+            sim.submit(hetero_pods(1000), 0.0);
+            sim.run()
+        };
+        let cal = run_q(EventQueueKind::Calendar);
+        let heap = run_q(EventQueueKind::Heap);
+        assert_eq!(cal.tasks.len(), 1000);
+        assert_eq!(cal.tasks, heap.tasks, "calendar queue changed the schedule");
+        assert_eq!(cal.events_processed, heap.events_processed);
+        assert_eq!(cal.makespan_s, heap.makespan_s);
+        assert_eq!(cal.peak_running, heap.peak_running);
+    }
 }

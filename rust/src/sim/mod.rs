@@ -1,7 +1,10 @@
 //! Platform substrates: deterministic simulators standing in for the live
 //! cloud/HPC testbeds of the paper's evaluation (see DESIGN.md §1).
 //!
-//! * [`event`] — discrete-event engine (virtual clock + ordered queue).
+//! * [`event`] — discrete-event engine (virtual clock + ordered queue;
+//!   calendar/bucket store by default with the binary heap kept as the
+//!   byte-identical reference — `EventQueueKind`). Every substrate below
+//!   inherits the queue through the shared `EventQueue<E>` API.
 //! * [`provider`] — calibrated per-platform profiles (JET2, CHI, AWS,
 //!   Azure, Bridges2).
 //! * [`capacity`] — shared segment-tree free-capacity index (per-node

@@ -1,0 +1,218 @@
+//! Calendar vs heap event-queue equivalence (ISSUE 8 tentpole lock).
+//!
+//! `sim::event::EventQueue` can run on two backing stores
+//! (`EventQueueKind::Calendar`, the O(1)-amortized default, and
+//! `EventQueueKind::Heap`, the reference). Every simulator inherits the
+//! queue through the shared API, so the *entire* platform layer is only
+//! as deterministic as the queues are identical. This suite drives both
+//! backends through the same operation scripts and asserts byte-identical
+//! behavior at every step: pop order (`(time, seq)` — including
+//! same-timestamp ties and past-clamping), the virtual clock, the
+//! processed counter, and the queue length.
+//!
+//! Run by name as its own CI tier-1 step (like `pilot_equivalence`):
+//! `cargo test -q --test queue_equivalence`.
+
+use hydra::sim::event::{EventQueue, EventQueueKind, SimTime, SECONDS};
+use hydra::util::prng::Prng;
+
+/// One scripted queue operation. Times are absolute so that scripts can
+/// deliberately schedule into the past (the wrapper clamps to `now` —
+/// identically for both backends, which the trace compare proves).
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    Schedule { at: SimTime },
+    ScheduleIn { delay: SimTime },
+    Pop,
+}
+
+/// Drive both backends through `ops` in lockstep, asserting identical
+/// observable state after every operation, then drain both to empty.
+/// Returns how many events were popped (for sanity asserts by callers).
+fn assert_equivalent(ops: &[Op]) -> usize {
+    let mut heap = EventQueue::with_kind(EventQueueKind::Heap);
+    let mut cal = EventQueue::with_kind(EventQueueKind::Calendar);
+    let mut id = 0u64;
+    let mut popped = 0usize;
+    for (step, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Schedule { at } => {
+                heap.schedule_at(at, id);
+                cal.schedule_at(at, id);
+                id += 1;
+            }
+            Op::ScheduleIn { delay } => {
+                heap.schedule_in(delay, id);
+                cal.schedule_in(delay, id);
+                id += 1;
+            }
+            Op::Pop => {
+                let (h, c) = (heap.pop(), cal.pop());
+                assert_eq!(h, c, "step {step}: pop diverged");
+                if h.is_some() {
+                    popped += 1;
+                }
+            }
+        }
+        assert_eq!(heap.now(), cal.now(), "step {step}: clock diverged");
+        assert_eq!(heap.len(), cal.len(), "step {step}: length diverged");
+        assert_eq!(heap.processed(), cal.processed(), "step {step}: processed diverged");
+        // next_time is O(buckets) on the calendar side — sample it
+        // rather than paying the scan on every step of the big scripts.
+        if step % 997 == 0 || heap.len() < 4 {
+            assert_eq!(heap.next_time(), cal.next_time(), "step {step}: peek diverged");
+        }
+    }
+    loop {
+        let (h, c) = (heap.pop(), cal.pop());
+        assert_eq!(h, c, "drain: pop diverged");
+        match h {
+            Some(_) => popped += 1,
+            None => break,
+        }
+    }
+    assert!(heap.is_empty() && cal.is_empty());
+    assert_eq!(heap.now(), cal.now());
+    assert_eq!(heap.processed(), cal.processed());
+    popped
+}
+
+/// Random interleaved schedule/pop script. `horizon` spreads the times;
+/// `quantize` > 0 snaps times onto that grid to mass-produce ties.
+fn random_ops(seed: u64, n_events: usize, horizon: u64, quantize: u64, pop_bias: f64) -> Vec<Op> {
+    let mut rng = Prng::new(seed);
+    let mut ops = Vec::with_capacity(n_events * 2);
+    let mut scheduled = 0usize;
+    while scheduled < n_events {
+        if rng.uniform() < pop_bias {
+            ops.push(Op::Pop);
+        } else {
+            let mut at = rng.range_u64(0, horizon.max(1));
+            if quantize > 0 {
+                at -= at % quantize;
+            }
+            // Absolute times drawn uniformly: once pops have advanced the
+            // clock, low draws land in the past and exercise the clamp.
+            ops.push(Op::Schedule { at });
+            scheduled += 1;
+        }
+    }
+    ops
+}
+
+#[test]
+fn empty_queues_agree() {
+    assert_eq!(assert_equivalent(&[Op::Pop, Op::Pop, Op::Pop]), 0);
+}
+
+#[test]
+fn single_event() {
+    let n = assert_equivalent(&[Op::Schedule { at: 42 }, Op::Pop, Op::Pop]);
+    assert_eq!(n, 1);
+}
+
+#[test]
+fn randomized_interleaved_schedules() {
+    // Several seeds x shapes: dense micro-horizons (heavy ties +
+    // clamping), second-scale horizons (the simulators' regime), and a
+    // huge sparse horizon (forces the calendar's direct-search path).
+    for seed in [1u64, 7, 0xBEEF, 0xD00D5EED] {
+        for (horizon, quantize) in [
+            (100, 0),
+            (100, 16),
+            (10 * SECONDS, 0),
+            (3_600 * SECONDS, 1_000_000),
+            (u64::MAX / 4, 0),
+        ] {
+            let ops = random_ops(seed, 10_000, horizon, quantize, 0.45);
+            let n = assert_equivalent(&ops);
+            assert_eq!(n, 10_000, "seed {seed} horizon {horizon}: events lost");
+        }
+    }
+}
+
+#[test]
+fn hundred_k_events_schedule_then_drain() {
+    // Bulk load 100K events (multiple calendar rebuilds), then drain —
+    // plus a second pass fully interleaved.
+    let mut rng = Prng::new(99);
+    let mut ops: Vec<Op> = (0..100_000)
+        .map(|_| Op::Schedule { at: rng.range_u64(0, 3_600 * SECONDS) })
+        .collect();
+    assert_eq!(assert_equivalent(&ops), 100_000);
+
+    ops = random_ops(0xCA1E_17DA, 100_000, 3_600 * SECONDS, 0, 0.48);
+    assert_eq!(assert_equivalent(&ops), 100_000);
+}
+
+#[test]
+fn mass_ties_at_one_instant() {
+    // 20K events at the same timestamp: pure seq-order FIFO, the
+    // worst case for a bucketed store (everything lands in one day).
+    let mut ops: Vec<Op> = (0..20_000).map(|_| Op::Schedule { at: 5 * SECONDS }).collect();
+    ops.extend((0..20_000).map(|_| Op::Pop));
+    assert_eq!(assert_equivalent(&ops), 20_000);
+}
+
+#[test]
+fn past_clamping_preserves_insertion_order() {
+    // Jump the clock forward, then schedule a burst of already-elapsed
+    // times: all clamp to `now` and must pop in insertion order on both
+    // backends (their relative order is the seq tie-break).
+    let mut ops = vec![Op::Schedule { at: 1_000_000 }, Op::Pop];
+    ops.extend((0..1_000u64).map(|i| Op::Schedule { at: i % 17 }));
+    ops.extend((0..500).map(|_| Op::Pop));
+    ops.extend((0..100u64).map(|i| Op::Schedule { at: i }));
+    assert_eq!(assert_equivalent(&ops), 1_101);
+}
+
+#[test]
+fn sparse_jumps_and_descending_inserts() {
+    // Widely-spaced events inserted in descending time order: the
+    // calendar cursor can never ride a dense day; every pop crosses a
+    // huge gap (direct-search fallback) and inserts always land before
+    // the cursor's bucket position.
+    let mut ops: Vec<Op> = (0..512u64)
+        .rev()
+        .map(|i| Op::Schedule { at: i * 7_919 * SECONDS })
+        .collect();
+    ops.extend((0..512).map(|_| Op::Pop));
+    assert_eq!(assert_equivalent(&ops), 512);
+}
+
+#[test]
+fn pop_heavy_drain_phases_shrink_and_refill() {
+    // Fill, drain almost dry (forcing calendar shrink rebuilds), refill,
+    // repeat — the resize hysteresis must never change ordering.
+    let mut rng = Prng::new(0x5ca1e);
+    let mut ops = Vec::new();
+    let mut events = 0usize;
+    for phase in 0..6 {
+        let fill = 4_000 + phase * 1_000;
+        for _ in 0..fill {
+            ops.push(Op::Schedule { at: rng.range_u64(0, 600 * SECONDS) });
+            events += 1;
+        }
+        for _ in 0..(fill - 50) {
+            ops.push(Op::Pop);
+        }
+    }
+    assert_eq!(assert_equivalent(&ops), events);
+}
+
+#[test]
+fn relative_scheduling_matches() {
+    // schedule_in goes through the shared wrapper arithmetic; mix it
+    // with absolute times and pops.
+    let mut rng = Prng::new(0xde1a);
+    let mut ops = Vec::new();
+    for i in 0..5_000u64 {
+        match i % 4 {
+            0 => ops.push(Op::ScheduleIn { delay: rng.range_u64(0, 2 * SECONDS) }),
+            1 => ops.push(Op::Schedule { at: rng.range_u64(0, 60 * SECONDS) }),
+            2 => ops.push(Op::ScheduleIn { delay: 0 }),
+            _ => ops.push(Op::Pop),
+        }
+    }
+    assert_equivalent(&ops);
+}
