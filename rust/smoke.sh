@@ -18,7 +18,14 @@ Runs the tier-1 verify plus the perf smoke, in order:
   2. cargo test -q                           (includes the equivalence
      suites: sched_equivalence, pilot_equivalence, queue_equivalence —
      the calendar-vs-heap event-queue lock from ISSUE 8)
-  3. cargo run --release --bin bench_quick   (writes BENCH_quick.json,
+  3. cargo run --release --bin hydra_lint    (ISSUE 9 determinism lint:
+     wallclock / hash-order / prng-salt / unwrap / float-eq, gated
+     against the ratcheted ci/lint_baseline.json; writes the untracked
+     LINT_report.json, schema hydra-lint-report/v1. Suppress a site
+     with '// hydra-lint: allow(<rule>) — <reason>'; after paying down
+     baseline debt, re-ratchet with
+     'cargo run --release --bin hydra_lint -- --refresh')
+  4. cargo run --release --bin bench_quick   (writes BENCH_quick.json,
      schema hydra-bench-quick/v1 — the ROADMAP perf-trajectory record;
      includes the heap-vs-calendar queue rows on the 16K-pod point)
 
@@ -39,7 +46,8 @@ fi
 
 cargo build --release
 cargo test -q
+cargo run --release --bin hydra_lint
 cargo run --release --bin bench_quick
 
 echo
-echo "smoke: OK (tier-1 green, BENCH_quick.json written)"
+echo "smoke: OK (tier-1 green, lint gate clean, BENCH_quick.json written)"

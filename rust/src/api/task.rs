@@ -174,7 +174,11 @@ impl TaskDescription {
 
 /// Task lifecycle states (paper §3.2: "each task object also holds
 /// information about its current/final state and tracing events").
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+///
+/// `Ord` follows declaration (lifecycle) order; the registry's
+/// monitoring surface keys `BTreeMap`s by state so reports enumerate
+/// states deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum TaskState {
     New,
     Validated,

@@ -1,0 +1,158 @@
+//! `hydra_lint` — CLI front-end for the determinism-invariant analyzer.
+//!
+//! Scans `src/**/*.rs` under the crate root, ratchets the per-rule
+//! per-file violation counts against `ci/lint_baseline.json`, writes a
+//! `hydra-lint-report/v1` JSON, and exits non-zero on any regression.
+//! See [`hydra::lint`] for the rule set and the pragma syntax.
+//!
+//! Exit codes: 0 = clean (ratchet satisfied), 1 = lint regressions,
+//! 2 = usage or I/O error.
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use hydra::lint;
+
+const HELP: &str = "\
+hydra_lint — determinism-invariant static analyzer for the hydra crate
+
+USAGE:
+  hydra_lint [OPTIONS]
+
+OPTIONS:
+  --root <dir>       crate root to scan [default: this crate's manifest dir]
+  --baseline <file>  ratchet baseline [default: <root>/ci/lint_baseline.json]
+  --json <file>      JSON report path [default: <root>/LINT_report.json]
+  --refresh          rewrite the baseline from the current tree (ratchet down)
+  --help             show this message
+
+RULES:
+  wallclock   Instant::now / SystemTime in library code
+  hash-order  HashMap/HashSet iteration in sim/, broker/, workflow/, facts/
+  prng-salt   unsalted Prng::new outside util/prng.rs; duplicate stream salts
+  unwrap      .unwrap() / .expect( / panic! in non-test library code
+  float-eq    ==/!= against an f64 literal (compare .to_bits() instead)
+
+Suppress a finding with a scoped pragma in a plain // comment, with a
+mandatory reason, covering its own line or (when standalone) the next:
+  // hydra-lint: allow(<rule>[, <rule>]) — <reason>
+";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("hydra-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn take_value(
+    argv: &[String],
+    i: &mut usize,
+    key: &str,
+    inline: Option<&str>,
+) -> Result<String, String> {
+    if let Some(v) = inline {
+        return Ok(v.to_string());
+    }
+    *i += 1;
+    argv.get(*i).cloned().ok_or_else(|| format!("{key} needs a value (see --help)"))
+}
+
+fn run(argv: &[String]) -> Result<ExitCode, String> {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut baseline_opt: Option<PathBuf> = None;
+    let mut report_opt: Option<PathBuf> = None;
+    let mut refresh = false;
+
+    let mut i = 0;
+    while i < argv.len() {
+        let arg = argv[i].as_str();
+        let (key, inline) = match arg.split_once('=') {
+            Some((k, v)) => (k, Some(v)),
+            None => (arg, None),
+        };
+        match key {
+            "--help" | "-h" => {
+                print!("{HELP}");
+                return Ok(ExitCode::SUCCESS);
+            }
+            "--refresh" => refresh = true,
+            "--root" => root = PathBuf::from(take_value(argv, &mut i, key, inline)?),
+            "--baseline" => {
+                baseline_opt = Some(PathBuf::from(take_value(argv, &mut i, key, inline)?));
+            }
+            "--json" => {
+                report_opt = Some(PathBuf::from(take_value(argv, &mut i, key, inline)?));
+            }
+            other => return Err(format!("unknown argument '{other}' (see --help)")),
+        }
+        i += 1;
+    }
+
+    let baseline_path = baseline_opt.unwrap_or_else(|| root.join("ci/lint_baseline.json"));
+    let report_path = report_opt.unwrap_or_else(|| root.join("LINT_report.json"));
+
+    let tree = lint::scan_tree(&root)?;
+    let cur = lint::counts_of(&tree.violations);
+    let totals: Vec<String> = cur
+        .iter()
+        .map(|(rule, files)| format!("{rule}={}", files.values().sum::<usize>()))
+        .collect();
+
+    if refresh {
+        let mut text = lint::baseline_json(&cur).to_string_pretty();
+        text.push('\n');
+        fs::write(&baseline_path, text)
+            .map_err(|e| format!("write {}: {e}", baseline_path.display()))?;
+        println!(
+            "hydra-lint: baseline refreshed at {} ({} files, {})",
+            baseline_path.display(),
+            tree.files_scanned,
+            totals.join(" ")
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let text = fs::read_to_string(&baseline_path).map_err(|e| {
+        format!("read {}: {e} (run with --refresh to create it)", baseline_path.display())
+    })?;
+    let base = lint::parse_baseline(&text)?;
+    let outcome = lint::gate(&cur, &base);
+
+    let mut report = lint::report_json(&tree, &cur, &outcome).to_string_pretty();
+    report.push('\n');
+    fs::write(&report_path, report)
+        .map_err(|e| format!("write {}: {e}", report_path.display()))?;
+
+    println!("hydra-lint: scanned {} files; {}", tree.files_scanned, totals.join(" "));
+    for note in &outcome.tighten {
+        println!("hydra-lint: note: {note}");
+    }
+
+    if outcome.passed() {
+        println!("hydra-lint: clean — ratchet satisfied (report: {})", report_path.display());
+        Ok(ExitCode::SUCCESS)
+    } else {
+        eprintln!(
+            "hydra-lint: FAIL — {} (rule, file) pair(s) above ci/lint_baseline.json:",
+            outcome.regressions.len()
+        );
+        for r in &outcome.regressions {
+            eprintln!("  {r}");
+        }
+        eprintln!("offending sites (every current site of a regressed pair):");
+        for v in lint::regressed_sites(&tree, &cur, &base) {
+            eprintln!("  {}:{}: [{}] {}", v.file, v.line, v.rule, v.message);
+        }
+        eprintln!(
+            "hydra-lint: fix the new violation, suppress it with a scoped pragma and a \
+             reason, or refresh the baseline for deliberate debt"
+        );
+        Ok(ExitCode::from(1))
+    }
+}

@@ -308,7 +308,7 @@ impl ProviderFaultSpec {
 
     pub fn is_none(&self) -> bool {
         self.outage_window.is_none()
-            && self.transient_error_p == 0.0
+            && self.transient_error_p == 0.0 // hydra-lint: allow(float-eq) — 0.0 sentinel
             && self.throttle_after_bytes == 0
     }
 
@@ -746,7 +746,7 @@ impl StorageBackend for SimObjectStore {
     fn list(&self, prefix: &str) -> Result<Vec<String>, DataError> {
         let mut v: Vec<String> = self
             .objects
-            .keys()
+            .keys() // hydra-lint: allow(hash-order) — collected then sorted two lines down
             .filter(|k| k.starts_with(prefix))
             .cloned()
             .collect();
@@ -791,6 +791,7 @@ impl DataManager {
     }
 
     pub fn sites(&self) -> Vec<String> {
+        // hydra-lint: allow(hash-order) — collected then sorted before anyone observes order
         let mut v: Vec<String> = self.sites.keys().cloned().collect();
         v.sort();
         v
@@ -880,11 +881,11 @@ impl DataManager {
     pub fn stage_to_sites(
         &mut self,
         src: &str,
-        sites: &[&str],
+        targets: &[&str],
         dst_path: &str,
     ) -> Result<Vec<(String, TransferReport)>, DataError> {
         let mut out = Vec::new();
-        for site in sites {
+        for site in targets {
             let dst = format!("{site}://{dst_path}");
             let r = self.copy(src, &dst)?;
             out.push((site.to_string(), r));

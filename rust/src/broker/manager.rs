@@ -22,6 +22,11 @@
 //! for ergonomic matching on the brokered-run surface
 //! ([`BrokerRun::reports`](crate::broker::service_proxy::BrokerRun)).
 
+// This module is the extension surface third parties implement against,
+// so it holds itself to a stricter documentation bar than the rest of
+// the crate (see [lints] in Cargo.toml for the crate-wide set).
+#![warn(missing_docs)]
+
 use crate::api::resource::{ResourceRequest, ServiceKind};
 use crate::api::task::{TaskDescription, TaskId};
 use crate::api::ProviderConfig;
@@ -46,9 +51,14 @@ use std::sync::Arc;
 #[non_exhaustive]
 #[derive(Debug)]
 pub enum ManagerError {
+    /// A task description failed validation before submission.
     InvalidTask(String),
+    /// The resource request (or the credentials backing it) is invalid
+    /// or bound to a different provider than this manager's connection.
     InvalidResource(String),
+    /// The partitioner could not cut the workload into pods.
     Partition(PartitionError),
+    /// A task-state transition violated the registry's lifecycle rules.
     State(StateError),
     /// The provider control plane rejected the bulk submit after the
     /// retry policy was exhausted (ISSUE 7). `retryable` classifies the
@@ -135,19 +145,25 @@ pub(crate) fn validate_binding(
 #[non_exhaustive]
 #[derive(Debug)]
 pub enum RunDetail {
+    /// Container-as-a-Service run on a provisioned Kubernetes cluster.
     Caas {
+        /// Kubernetes scheduling simulation report (pod placements,
+        /// node utilization, makespan).
         sim: SimReport,
         /// Cluster readiness (virtual seconds before the workload could
         /// start); reported separately from TPT, as in the paper.
         provision: ProvisionReport,
     },
+    /// HPC batch run executed through a pilot fleet.
     Hpc {
         /// Pilot-fleet report: per-task records plus per-pilot lifecycle
         /// and utilization stats ([`PilotStat`](crate::sim::hpc::PilotStat)
         /// per staged pilot — one entry when `pilots == 1`).
         sim: MultiPilotReport,
     },
+    /// Function-as-a-Service run on a concurrency-limited platform.
     Faas {
+        /// FaaS invocation report (cold starts, concurrency, makespan).
         sim: FaasReport,
     },
 }
@@ -162,6 +178,7 @@ impl RunDetail {
         }
     }
 
+    /// The Kubernetes simulation report, if this is a CaaS run.
     pub fn caas_sim(&self) -> Option<&SimReport> {
         match self {
             RunDetail::Caas { sim, .. } => Some(sim),
@@ -169,6 +186,7 @@ impl RunDetail {
         }
     }
 
+    /// The cluster-provision report, if this is a CaaS run.
     pub fn provision(&self) -> Option<&ProvisionReport> {
         match self {
             RunDetail::Caas { provision, .. } => Some(provision),
@@ -176,6 +194,7 @@ impl RunDetail {
         }
     }
 
+    /// The pilot-fleet report, if this is an HPC batch run.
     pub fn hpc_sim(&self) -> Option<&MultiPilotReport> {
         match self {
             RunDetail::Hpc { sim } => Some(sim),
@@ -183,6 +202,7 @@ impl RunDetail {
         }
     }
 
+    /// The FaaS invocation report, if this is a FaaS run.
     pub fn faas_sim(&self) -> Option<&FaasReport> {
         match self {
             RunDetail::Faas { sim } => Some(sim),
@@ -231,6 +251,7 @@ pub struct FaultTally {
 /// `faults.retry_bulk_bytes`).
 #[derive(Debug)]
 pub struct ManagerRun {
+    /// Unified run metrics (task counts, OVH components, TPT/TTX).
     pub metrics: RunMetrics,
     /// Serialized item bytes (separators and brackets excluded).
     pub bytes_serialized: usize,
@@ -238,6 +259,7 @@ pub struct ManagerRun {
     pub bulk_bytes: usize,
     /// Failure / retry / abandonment accounting (ISSUE 6).
     pub faults: FaultTally,
+    /// Provider-specific simulator report behind the unified metrics.
     pub detail: RunDetail,
 }
 
@@ -246,8 +268,11 @@ pub struct ManagerRun {
 #[non_exhaustive]
 #[derive(Debug)]
 pub enum ManagerReport {
+    /// Run served by the CaaS (Kubernetes) manager.
     Caas(ManagerRun),
+    /// Run served by the HPC batch (pilot-fleet) manager.
     Hpc(ManagerRun),
+    /// Run served by the FaaS manager.
     Faas(ManagerRun),
 }
 
@@ -259,6 +284,7 @@ impl ManagerReport {
         }
     }
 
+    /// Shorthand for the wrapped run's unified metrics.
     pub fn metrics(&self) -> &RunMetrics {
         &self.run().metrics
     }
@@ -351,7 +377,9 @@ impl ServiceManager for FaasManager {
 /// [`ManagerFactory::create`].
 #[derive(Debug, Clone)]
 pub struct ManagerFactory {
+    /// Partitioning model handed to the CaaS manager's partitioner.
     pub partition_model: PartitionModel,
+    /// Pod-manifest build mode (in-memory or per-provider disk staging).
     pub build_mode: PodBuildMode,
     /// Serialize-phase fan-out handed to every manager (`1` = serial
     /// reference path; bulk payload bytes are identical for any value).
@@ -369,6 +397,8 @@ impl Default for ManagerFactory {
 }
 
 impl ManagerFactory {
+    /// A factory with explicit broker knobs (see [`ManagerFactory::default`]
+    /// for the reference configuration).
     pub fn new(
         partition_model: PartitionModel,
         build_mode: PodBuildMode,

@@ -60,6 +60,35 @@
 //!   `ManagerRun::faults` (`submit_retries` / `backoff_ms` /
 //!   `circuit_opens` / `failed_over`).
 //!
+//! # Determinism invariants
+//!
+//! Every headline claim in this repo — byte-identical reference paths
+//! (LinearScan vs indexed scheduler, heap vs calendar queue, serial vs
+//! multi-pilot HPC, `FaultSpec::none()` vs the pre-fault broker) and
+//! the exactly-once properties — rests on the simulation being a pure
+//! function of `(workload, config, seed)`. Four rules keep it that way,
+//! and `hydra-lint` (ISSUE 9, `cargo run --release --bin hydra_lint`)
+//! enforces them statically in CI:
+//!
+//! * **No wall-clock in library code.** `Instant::now`/`SystemTime`
+//!   only at the measurement boundary (`util::Stopwatch`, metrics trace
+//!   epochs) — never inside simulation or broker logic, where it would
+//!   leak host timing into results.
+//! * **No observable `HashMap`/`HashSet` iteration order** in
+//!   `src/{sim,broker,workflow,facts}/`. Iterate a `BTreeMap` (see
+//!   [`state::TaskRegistry`]'s task table), or collect-and-sort before
+//!   anything downstream can observe the order.
+//! * **Salted, documented PRNG streams.** Every derived stream salts
+//!   the user seed with a crate-unique constant (e.g.
+//!   `PROVIDER_FAULT_STREAM_SALT`), so arming one fault model never
+//!   shifts another's draws. `hydra-lint` checks salt uniqueness
+//!   crate-wide.
+//! * **No panics, no float `==`.** Library code returns `Result`
+//!   (ratcheted down via `rust/ci/lint_baseline.json`), and floats are
+//!   compared against literals only for documented exact sentinels
+//!   (suppressed case by case with `// hydra-lint: allow(float-eq)`
+//!   pragmas).
+//!
 //! [`Hydra`] is the user-facing facade combining all of the above.
 
 pub mod caas;

@@ -328,7 +328,7 @@ fn to_container(id: TaskId, t: &TaskDescription) -> ContainerSpec {
 fn write_pod_manifest(
     out: &mut String,
     pod: &PodSpec,
-    tasks: &std::collections::HashMap<u64, &TaskDescription>,
+    by_id: &std::collections::HashMap<u64, &TaskDescription>,
 ) {
     out.push_str("{\"apiVersion\":\"v1\",\"kind\":\"Pod\",\"metadata\":{\"name\":\"hydra-pod-");
     push_u64_padded(out, pod.id, 8);
@@ -340,7 +340,7 @@ fn write_pod_manifest(
             out.push(',');
         }
         out.push_str("{\"name\":");
-        match tasks.get(&c.task_id) {
+        match by_id.get(&c.task_id) {
             Some(t) => {
                 push_json_str(out, &t.name);
                 out.push_str(",\"image\":");
@@ -381,13 +381,13 @@ fn write_pod_manifest(
 #[cfg_attr(not(test), allow(dead_code))]
 fn pod_manifest(
     pod: &PodSpec,
-    tasks: &std::collections::HashMap<u64, &TaskDescription>,
+    by_id: &std::collections::HashMap<u64, &TaskDescription>,
 ) -> Json {
     let containers: Vec<Json> = pod
         .containers
         .iter()
         .map(|c| {
-            let (name, image) = match tasks.get(&c.task_id) {
+            let (name, image) = match by_id.get(&c.task_id) {
                 Some(t) => {
                     let img = match &t.kind {
                         TaskKind::Container { image } => image.clone(),

@@ -7,7 +7,7 @@
 
 use crate::api::task::{TaskDescription, TaskId, TaskState};
 use crate::metrics::TraceLog;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 #[derive(Debug)]
@@ -28,7 +28,11 @@ pub struct TaskRegistry {
 
 #[derive(Default)]
 struct Inner {
-    tasks: HashMap<u64, TaskEntry>,
+    /// Keyed by task id. A `BTreeMap` on purpose: `counts()` and
+    /// `all_final()` iterate this map, and the iteration order must be
+    /// deterministic (sorted by id) or monitoring output would vary
+    /// run-to-run under an unordered map (hydra-lint `hash-order`).
+    tasks: BTreeMap<u64, TaskEntry>,
     trace: Option<TraceLog>,
     next_id: u64,
 }
@@ -213,10 +217,12 @@ impl TaskRegistry {
         self.len() == 0
     }
 
-    /// Count of tasks per state (monitoring surface).
-    pub fn counts(&self) -> HashMap<TaskState, usize> {
+    /// Count of tasks per state (monitoring surface). Both the task map
+    /// iterated here and the returned map are ordered, so the counts and
+    /// any report derived from them are stable across runs.
+    pub fn counts(&self) -> BTreeMap<TaskState, usize> {
         let g = self.inner.lock().unwrap();
-        let mut m = HashMap::new();
+        let mut m = BTreeMap::new();
         for e in g.tasks.values() {
             *m.entry(e.state).or_insert(0) += 1;
         }
@@ -343,6 +349,46 @@ mod tests {
         let c = reg.counts();
         assert_eq!(c.get(&TaskState::New), Some(&2));
         assert_eq!(c.get(&TaskState::Validated), Some(&1));
+    }
+
+    /// Regression test for the ISSUE 9 hash-order hazard: `counts()`
+    /// used to fold a `HashMap` iteration into a `HashMap`, so the order
+    /// monitoring consumers observed could vary run-to-run. Both maps
+    /// are ordered now — the per-state enumeration must come out in
+    /// lifecycle (declaration) order, identically on every build.
+    #[test]
+    fn counts_enumerate_states_in_stable_order() {
+        let build = || {
+            let reg = TaskRegistry::new();
+            let ids = reg.register_all((0..6).map(|_| desc()).collect());
+            reg.transition(ids[0], TaskState::Validated).unwrap();
+            reg.transition(ids[1], TaskState::Validated).unwrap();
+            reg.transition(ids[1], TaskState::Partitioned).unwrap();
+            for s in [
+                TaskState::Validated,
+                TaskState::Partitioned,
+                TaskState::Submitted,
+                TaskState::Running,
+                TaskState::Done,
+            ] {
+                reg.transition(ids[2], s).unwrap();
+            }
+            reg.counts().into_iter().collect::<Vec<_>>()
+        };
+        let first = build();
+        assert_eq!(
+            first,
+            vec![
+                (TaskState::New, 3),
+                (TaskState::Validated, 1),
+                (TaskState::Partitioned, 1),
+                (TaskState::Done, 1),
+            ],
+            "states must enumerate in lifecycle order with exact counts"
+        );
+        for _ in 0..10 {
+            assert_eq!(build(), first, "enumeration order must not vary across runs");
+        }
     }
 
     #[test]

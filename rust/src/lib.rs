@@ -23,6 +23,7 @@
 pub mod api;
 pub mod broker;
 pub mod facts;
+pub mod lint;
 pub mod metrics;
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,509 @@
+//! `hydra-lint` — a determinism-invariant static analyzer for this crate.
+//!
+//! Every result in the reproduction hangs on deterministic replay: the
+//! heap-vs-calendar queue identity suites, the `FaultSpec::none()` /
+//! `ProviderFaultSpec::none()` byte-identity guarantees, and the
+//! exactly-once ledgers. Those are enforced by *tests*, but tests cannot
+//! see the hazards that have not happened yet — a `HashMap` iteration
+//! whose order leaks into a trace, a wall-clock read in a sim path, an
+//! unsalted PRNG stream that entangles two supposedly independent fault
+//! injectors. `hydra-lint` encodes those invariants as five source-level
+//! rules and gates CI on them, dylint-style but with zero new
+//! dependencies (the scanner is ~600 lines over `std`).
+//!
+//! # Rules
+//!
+//! | id          | what it flags                                                      |
+//! |-------------|--------------------------------------------------------------------|
+//! | `wallclock` | `Instant::now` / `SystemTime` in library code                      |
+//! | `hash-order`| `HashMap`/`HashSet` iteration in `sim/`, `broker/`, `workflow/`, `facts/` |
+//! | `prng-salt` | unsalted `Prng::new` outside `util/prng.rs`; duplicate stream salts |
+//! | `unwrap`    | `.unwrap()` / `.expect(` / `panic!` in non-test library code       |
+//! | `float-eq`  | `==`/`!=` against an `f64` literal (compare `.to_bits()` instead)  |
+//!
+//! A sixth internal rule, `pragma`, fires on malformed suppression
+//! pragmas and can itself never be suppressed.
+//!
+//! # Suppression
+//!
+//! A violation is suppressed by a scoped pragma in a plain `//` comment
+//! (doc comments are never pragmas, which is how this paragraph can
+//! quote the syntax):
+//!
+//! ```text
+//! // hydra-lint: allow(wallclock) — Stopwatch is the wall-clock boundary
+//! ```
+//!
+//! A trailing pragma covers its own line; a pragma on a line of its own
+//! covers exactly the next line. The reason text is mandatory, and an
+//! unknown rule id or missing reason is a `pragma` violation — a typo
+//! cannot silently widen the allowance.
+//!
+//! # The ratchet
+//!
+//! Pre-existing debt (319 `unwrap` sites at introduction time) is carried
+//! in `ci/lint_baseline.json` as per-rule per-file counts under the
+//! `hydra-lint-baseline/v1` schema. The gate compares current counts
+//! against the baseline: a count above baseline fails with file:line
+//! diagnostics, a count below baseline passes with a warning to run
+//! `cargo run --release --bin hydra_lint -- --refresh`, which rewrites
+//! the baseline from the current tree so the ceiling only ever moves
+//! down. The binary also writes a machine-readable
+//! `hydra-lint-report/v1` JSON next to the other CI artifacts.
+
+pub mod scan;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use self::scan::{Rule, SaltDef, Violation};
+use crate::util::json::{self, Json};
+
+/// Schema tag of `ci/lint_baseline.json`.
+pub const BASELINE_SCHEMA: &str = "hydra-lint-baseline/v1";
+/// Schema tag of the JSON report the binary writes.
+pub const REPORT_SCHEMA: &str = "hydra-lint-report/v1";
+
+/// Violation counts keyed by rule id, then crate-relative file path.
+pub type Counts = BTreeMap<String, BTreeMap<String, usize>>;
+
+/// The aggregate of scanning every `src/**/*.rs` file under a crate root.
+#[derive(Debug)]
+pub struct TreeScan {
+    pub files_scanned: usize,
+    /// All violations, sorted by (file, line, rule) — includes the
+    /// crate-wide duplicate-salt findings.
+    pub violations: Vec<Violation>,
+}
+
+/// Scan the crate rooted at `root` (the directory holding `src/`).
+pub fn scan_tree(root: &Path) -> Result<TreeScan, String> {
+    let mut files = Vec::new();
+    walk_sorted(&root.join("src"), &mut files)?;
+    let mut violations = Vec::new();
+    let mut salts: Vec<SaltDef> = Vec::new();
+    for path in &files {
+        let rel = rel_path(root, path)?;
+        let text =
+            fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let one = scan::scan_source(&rel, &text);
+        violations.extend(one.violations);
+        salts.extend(one.salts);
+    }
+    violations.extend(salt_violations(&salts));
+    violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(TreeScan { files_scanned: files.len(), violations })
+}
+
+/// Depth-first walk in sorted order, collecting `.rs` files — sorted so
+/// diagnostics, counts and the baseline serialize identically on every
+/// platform.
+fn walk_sorted(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for ent in rd {
+        let ent = ent.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        entries.push(ent.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_sorted(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Crate-root-relative path with `/` separators regardless of platform.
+fn rel_path(root: &Path, path: &Path) -> Result<String, String> {
+    let rel = path
+        .strip_prefix(root)
+        .map_err(|_| format!("{} is outside the crate root", path.display()))?;
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    Ok(parts.join("/"))
+}
+
+/// Cross-file salt-uniqueness check: every PRNG stream salt value must
+/// be unique crate-wide, or two "independent" streams collapse into one.
+/// A def whose site carries a `prng-salt` pragma is exempt.
+pub fn salt_violations(salts: &[SaltDef]) -> Vec<Violation> {
+    let mut by_value: BTreeMap<u64, Vec<&SaltDef>> = BTreeMap::new();
+    for s in salts {
+        by_value.entry(s.value).or_default().push(s);
+    }
+    let mut out = Vec::new();
+    for (value, defs) in &by_value {
+        if defs.len() < 2 {
+            continue;
+        }
+        for d in defs {
+            if d.allowed {
+                continue;
+            }
+            let others: Vec<String> = defs
+                .iter()
+                .filter(|o| !(o.file == d.file && o.line == d.line))
+                .map(|o| format!("{} ({}:{})", o.name, o.file, o.line))
+                .collect();
+            out.push(Violation {
+                rule: Rule::PrngSalt,
+                file: d.file.clone(),
+                line: d.line,
+                message: format!(
+                    "PRNG stream salt {value:#x} ({}) is also used by {}; salts must be \
+                     unique crate-wide",
+                    d.name,
+                    others.join(", ")
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Fold violations into per-rule per-file counts. Every rule id appears
+/// in the output (possibly with no files) so the baseline documents the
+/// full rule set.
+pub fn counts_of(violations: &[Violation]) -> Counts {
+    let mut counts: Counts = BTreeMap::new();
+    for r in Rule::ALL {
+        counts.entry(r.id().to_string()).or_default();
+    }
+    for v in violations {
+        *counts
+            .entry(v.rule.id().to_string())
+            .or_default()
+            .entry(v.file.clone())
+            .or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Serialize counts as a `hydra-lint-baseline/v1` document.
+pub fn baseline_json(counts: &Counts) -> Json {
+    let mut rules = Json::obj();
+    for (rule, files) in counts {
+        let mut by_file = Json::obj();
+        for (file, n) in files {
+            by_file = by_file.set(file, *n);
+        }
+        rules = rules.set(rule, by_file);
+    }
+    Json::obj().set("schema", BASELINE_SCHEMA).set("counts", rules)
+}
+
+/// Parse a `hydra-lint-baseline/v1` document.
+pub fn parse_baseline(text: &str) -> Result<Counts, String> {
+    let doc = json::parse(text).map_err(|e| format!("baseline: {e}"))?;
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == BASELINE_SCHEMA => {}
+        other => return Err(format!("baseline: expected schema {BASELINE_SCHEMA}, got {other:?}")),
+    }
+    let Some(Json::Obj(rules)) = doc.get("counts") else {
+        return Err("baseline: missing `counts` object".to_string());
+    };
+    let mut out: Counts = BTreeMap::new();
+    for (rule, files) in rules {
+        let Json::Obj(files) = files else {
+            return Err(format!("baseline: counts.{rule} is not an object"));
+        };
+        let entry = out.entry(rule.clone()).or_default();
+        for (file, n) in files {
+            let Some(n) = n.as_usize() else {
+                return Err(format!("baseline: counts.{rule}.\"{file}\" is not a count"));
+            };
+            entry.insert(file.clone(), n);
+        }
+    }
+    Ok(out)
+}
+
+/// Outcome of ratcheting current counts against the baseline.
+#[derive(Debug, Default)]
+pub struct Gate {
+    /// (rule, file) pairs above their baseline ceiling — failures.
+    pub regressions: Vec<String>,
+    /// Pairs below baseline — passes, with a nudge to `--refresh` so the
+    /// ceiling ratchets down.
+    pub tighten: Vec<String>,
+}
+
+impl Gate {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// The ratchet: counts may only go down. Missing entries count as zero
+/// on both sides, so a violation in a brand-new file regresses.
+pub fn gate(cur: &Counts, base: &Counts) -> Gate {
+    let mut keys: BTreeSet<(&str, &str)> = BTreeSet::new();
+    for (rule, files) in cur.iter().chain(base.iter()) {
+        for file in files.keys() {
+            keys.insert((rule, file));
+        }
+    }
+    let mut out = Gate::default();
+    for (rule, file) in keys {
+        let c = cur.get(rule).and_then(|m| m.get(file)).copied().unwrap_or(0);
+        let b = base.get(rule).and_then(|m| m.get(file)).copied().unwrap_or(0);
+        if c > b {
+            out.regressions
+                .push(format!("{rule}: {file}: {c} violation(s), baseline allows {b}"));
+        } else if c < b {
+            out.tighten.push(format!(
+                "{rule}: {file}: {c} violation(s) < baseline {b} — run \
+                 `hydra_lint --refresh` to ratchet the ceiling down"
+            ));
+        }
+    }
+    out
+}
+
+/// The violations behind each regressed (rule, file) pair, for file:line
+/// diagnostics. The baseline stores counts, not sites, so when a pair
+/// regresses every current site of that rule in that file is listed.
+pub fn regressed_sites<'a>(
+    tree: &'a TreeScan,
+    cur: &Counts,
+    base: &Counts,
+) -> Vec<&'a Violation> {
+    let mut pairs: BTreeSet<(&str, &str)> = BTreeSet::new();
+    for (rule, files) in cur {
+        for (file, c) in files {
+            let b = base.get(rule).and_then(|m| m.get(file)).copied().unwrap_or(0);
+            if *c > b {
+                pairs.insert((rule, file));
+            }
+        }
+    }
+    tree.violations.iter().filter(|v| pairs.contains(&(v.rule.id(), v.file.as_str()))).collect()
+}
+
+/// Build the machine-readable `hydra-lint-report/v1` document.
+pub fn report_json(tree: &TreeScan, cur: &Counts, outcome: &Gate) -> Json {
+    let mut totals = Json::obj();
+    for (rule, files) in cur {
+        totals = totals.set(rule, files.values().sum::<usize>());
+    }
+    let violations: Vec<Json> = tree
+        .violations
+        .iter()
+        .map(|v| {
+            Json::obj()
+                .set("rule", v.rule.id())
+                .set("file", v.file.as_str())
+                .set("line", v.line)
+                .set("message", v.message.as_str())
+        })
+        .collect();
+    let strs = |v: &[String]| Json::Arr(v.iter().map(|s| Json::from(s.as_str())).collect());
+    Json::obj()
+        .set("schema", REPORT_SCHEMA)
+        .set("status", if outcome.passed() { "pass" } else { "fail" })
+        .set("files_scanned", tree.files_scanned)
+        .set("totals", totals)
+        .set("regressions", strs(&outcome.regressions))
+        .set("tighten", strs(&outcome.tighten))
+        .set("violations", violations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(entries: &[(&str, &str, usize)]) -> Counts {
+        let mut c: Counts = BTreeMap::new();
+        for (rule, file, n) in entries {
+            c.entry(rule.to_string()).or_default().insert(file.to_string(), *n);
+        }
+        c
+    }
+
+    #[test]
+    fn ratchet_equal_counts_pass() {
+        let cur = counts(&[("unwrap", "src/a.rs", 3), ("float-eq", "src/b.rs", 1)]);
+        let g = gate(&cur, &cur.clone());
+        assert!(g.passed());
+        assert!(g.tighten.is_empty());
+    }
+
+    #[test]
+    fn ratchet_plus_one_fails_naming_the_pair() {
+        let base = counts(&[("unwrap", "src/a.rs", 3)]);
+        let cur = counts(&[("unwrap", "src/a.rs", 4)]);
+        let g = gate(&cur, &base);
+        assert!(!g.passed());
+        assert_eq!(g.regressions.len(), 1);
+        assert!(g.regressions[0].contains("unwrap"));
+        assert!(g.regressions[0].contains("src/a.rs"));
+        assert!(g.regressions[0].contains("baseline allows 3"));
+    }
+
+    #[test]
+    fn ratchet_new_file_fails_even_with_slack_elsewhere() {
+        let base = counts(&[("unwrap", "src/a.rs", 10)]);
+        let cur = counts(&[("unwrap", "src/a.rs", 1), ("unwrap", "src/new.rs", 1)]);
+        let g = gate(&cur, &base);
+        assert!(!g.passed(), "per-file ceilings must not be fungible");
+        assert!(g.regressions[0].contains("src/new.rs"));
+    }
+
+    #[test]
+    fn ratchet_minus_one_passes_and_warns_to_refresh() {
+        let base = counts(&[("unwrap", "src/a.rs", 3)]);
+        let cur = counts(&[("unwrap", "src/a.rs", 2)]);
+        let g = gate(&cur, &base);
+        assert!(g.passed());
+        assert_eq!(g.tighten.len(), 1);
+        assert!(g.tighten[0].contains("--refresh"));
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let cur = counts(&[
+            ("unwrap", "src/a.rs", 3),
+            ("unwrap", "src/b.rs", 1),
+            ("wallclock", "src/util/mod.rs", 1),
+        ]);
+        let text = baseline_json(&cur).to_string_pretty();
+        let parsed = parse_baseline(&text).unwrap();
+        assert_eq!(parsed, cur);
+    }
+
+    #[test]
+    fn baseline_rejects_wrong_schema_and_shape() {
+        assert!(parse_baseline(r#"{"schema":"other/v1","counts":{}}"#).is_err());
+        assert!(parse_baseline(r#"{"schema":"hydra-lint-baseline/v1"}"#).is_err());
+        assert!(
+            parse_baseline(r#"{"schema":"hydra-lint-baseline/v1","counts":{"unwrap":3}}"#)
+                .is_err()
+        );
+        assert!(parse_baseline("not json").is_err());
+    }
+
+    fn salt(name: &str, value: u64, file: &str, line: usize, allowed: bool) -> SaltDef {
+        SaltDef { name: name.to_string(), value, file: file.to_string(), line, allowed }
+    }
+
+    #[test]
+    fn duplicate_salts_flag_every_unallowed_site() {
+        let salts = vec![
+            salt("A_SALT", 0xAA, "src/sim/a.rs", 10, false),
+            salt("B_SALT", 0xAA, "src/sim/b.rs", 20, false),
+            salt("C_SALT", 0xCC, "src/sim/c.rs", 30, false),
+        ];
+        let vs = salt_violations(&salts);
+        assert_eq!(vs.len(), 2);
+        assert!(vs.iter().all(|v| v.rule == Rule::PrngSalt));
+        assert!(vs[0].message.contains("B_SALT"), "{}", vs[0].message);
+        assert!(vs[1].message.contains("A_SALT"), "{}", vs[1].message);
+    }
+
+    #[test]
+    fn pragmaed_salt_duplicate_is_exempt_but_peer_is_not() {
+        let salts = vec![
+            salt("A_SALT", 0xAA, "src/sim/a.rs", 10, true),
+            salt("B_SALT", 0xAA, "src/sim/b.rs", 20, false),
+        ];
+        let vs = salt_violations(&salts);
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].file, "src/sim/b.rs");
+    }
+
+    #[test]
+    fn counts_fold_per_rule_per_file_and_list_every_rule() {
+        let vs = vec![
+            Violation {
+                rule: Rule::Unwrap,
+                file: "src/a.rs".to_string(),
+                line: 1,
+                message: String::new(),
+            },
+            Violation {
+                rule: Rule::Unwrap,
+                file: "src/a.rs".to_string(),
+                line: 9,
+                message: String::new(),
+            },
+            Violation {
+                rule: Rule::FloatEq,
+                file: "src/b.rs".to_string(),
+                line: 2,
+                message: String::new(),
+            },
+        ];
+        let c = counts_of(&vs);
+        assert_eq!(c["unwrap"]["src/a.rs"], 2);
+        assert_eq!(c["float-eq"]["src/b.rs"], 1);
+        for r in Rule::ALL {
+            assert!(c.contains_key(r.id()), "rule {r} missing from counts");
+        }
+    }
+
+    #[test]
+    fn regressed_sites_lists_only_offending_pairs() {
+        let tree = TreeScan {
+            files_scanned: 2,
+            violations: vec![
+                Violation {
+                    rule: Rule::Unwrap,
+                    file: "src/a.rs".to_string(),
+                    line: 4,
+                    message: String::new(),
+                },
+                Violation {
+                    rule: Rule::Unwrap,
+                    file: "src/b.rs".to_string(),
+                    line: 7,
+                    message: String::new(),
+                },
+            ],
+        };
+        let cur = counts(&[("unwrap", "src/a.rs", 1), ("unwrap", "src/b.rs", 1)]);
+        let base = counts(&[("unwrap", "src/a.rs", 1)]);
+        let sites = regressed_sites(&tree, &cur, &base);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].file, "src/b.rs");
+        assert_eq!(sites[0].line, 7);
+    }
+
+    #[test]
+    fn report_carries_schema_status_and_totals() {
+        let tree = TreeScan { files_scanned: 3, violations: Vec::new() };
+        let cur = counts(&[("unwrap", "src/a.rs", 2)]);
+        let ok = Gate::default();
+        let doc = report_json(&tree, &cur, &ok);
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(REPORT_SCHEMA));
+        assert_eq!(doc.get("status").and_then(Json::as_str), Some("pass"));
+        assert_eq!(doc.at(&["totals", "unwrap"]).and_then(Json::as_usize), Some(2));
+        let bad =
+            Gate { regressions: vec!["unwrap: src/a.rs: ...".to_string()], tighten: Vec::new() };
+        let doc = report_json(&tree, &cur, &bad);
+        assert_eq!(doc.get("status").and_then(Json::as_str), Some("fail"));
+    }
+
+    /// The tree self-check: the committed baseline must admit the tree as
+    /// it stands. This is what makes `cargo test` catch a lint regression
+    /// even before the dedicated CI step runs.
+    #[test]
+    fn lint_tree_is_clean_under_committed_baseline() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let tree = scan_tree(root).unwrap();
+        assert!(tree.files_scanned > 20, "walk found only {} files", tree.files_scanned);
+        let text = fs::read_to_string(root.join("ci/lint_baseline.json")).unwrap();
+        let base = parse_baseline(&text).unwrap();
+        let g = gate(&counts_of(&tree.violations), &base);
+        assert!(
+            g.passed(),
+            "lint regressions vs ci/lint_baseline.json:\n{}",
+            g.regressions.join("\n")
+        );
+    }
+}

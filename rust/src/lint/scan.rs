@@ -1,0 +1,1251 @@
+//! The `hydra-lint` source scanner: a comment- and string-literal-aware
+//! line/token pass over one Rust source file.
+//!
+//! This is deliberately *not* a Rust parser. The five determinism rules
+//! (see [`crate::lint`] module docs) are all expressible as token
+//! patterns once three classes of noise are removed:
+//!
+//! 1. **Comments and string/char literals** are blanked out (replaced by
+//!    spaces, structure preserved) by a small state machine that
+//!    understands line comments, nested block comments, string escapes,
+//!    raw strings (`r"…"`, `r#"…"#`), byte strings, char literals
+//!    (including `'\u{8}'` and `b','`) and lifetimes (`'a`), so a
+//!    `".unwrap()"` inside a test fixture string never counts.
+//! 2. **`#[cfg(test)]` regions** are excluded entirely: the attribute
+//!    arms a flag and the next `{` opens a region tracked by brace depth
+//!    on the blanked text. Library rules do not apply to test code.
+//! 3. **Suppression pragmas** are read from plain `//` comments (doc
+//!    comments are never pragmas, so documentation can quote the
+//!    syntax). A trailing pragma suppresses its own line; a pragma on a
+//!    line of its own suppresses the next line. Every pragma must name
+//!    a rule and carry a reason; a malformed one is itself a violation
+//!    ([`Rule::Pragma`]) so a typo cannot silently disable a rule.
+//!
+//! The scanner is intentionally simple enough to re-derive: the ratchet
+//! baseline committed in `ci/lint_baseline.json` must stay reproducible
+//! from `cargo run --release --bin hydra_lint -- --refresh` alone.
+
+use std::fmt;
+
+/// Path prefixes (relative to the crate root) where determinism is a
+/// hard invariant: these modules feed the byte-identity equivalence
+/// suites, so the hash-order rule applies to them.
+pub const DETERMINISTIC_DIRS: [&str; 4] =
+    ["src/sim/", "src/broker/", "src/workflow/", "src/facts/"];
+
+/// The PRNG module itself is the one legitimate home of unsalted
+/// `Prng::new` (seeding, forking).
+const PRNG_MODULE: &str = "src/util/prng.rs";
+
+/// A lint rule enforced by `hydra-lint`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    /// `Instant::now` / `SystemTime` in library code.
+    Wallclock,
+    /// Iteration over `HashMap`/`HashSet` in deterministic paths.
+    HashOrder,
+    /// Unsalted `Prng::new` streams / duplicate stream salts.
+    PrngSalt,
+    /// `.unwrap()` / `.expect(` / `panic!` in library code.
+    Unwrap,
+    /// `f64` comparison against a float literal with `==` / `!=`.
+    FloatEq,
+    /// A malformed `hydra-lint:` pragma (never suppressible).
+    Pragma,
+}
+
+impl Rule {
+    /// Every rule, in baseline/report order.
+    pub const ALL: [Rule; 6] = [
+        Rule::Wallclock,
+        Rule::HashOrder,
+        Rule::PrngSalt,
+        Rule::Unwrap,
+        Rule::FloatEq,
+        Rule::Pragma,
+    ];
+
+    /// Stable identifier used in pragmas, the baseline, and reports.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::Wallclock => "wallclock",
+            Rule::HashOrder => "hash-order",
+            Rule::PrngSalt => "prng-salt",
+            Rule::Unwrap => "unwrap",
+            Rule::FloatEq => "float-eq",
+            Rule::Pragma => "pragma",
+        }
+    }
+
+    /// Parse a pragma rule id. Only the five suppressible rules resolve:
+    /// a malformed-pragma violation cannot be pragma'd away.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        match id {
+            "wallclock" => Some(Rule::Wallclock),
+            "hash-order" => Some(Rule::HashOrder),
+            "prng-salt" => Some(Rule::PrngSalt),
+            "unwrap" => Some(Rule::Unwrap),
+            "float-eq" => Some(Rule::FloatEq),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One finding: rule, crate-relative file, 1-based line, and a message
+/// that says what to do about it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// A PRNG stream-salt definition (named constant or inline literal),
+/// collected per file and checked for crate-wide uniqueness by the
+/// driver in [`crate::lint`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SaltDef {
+    /// Constant name, or `<inline>` for a literal inside `Prng::new`.
+    pub name: String,
+    pub value: u64,
+    pub file: String,
+    pub line: usize,
+    /// True when a `prng-salt` pragma covers the definition line.
+    pub allowed: bool,
+}
+
+/// Result of scanning one file.
+#[derive(Debug, Default)]
+pub struct FileScan {
+    pub violations: Vec<Violation>,
+    pub salts: Vec<SaltDef>,
+}
+
+// ---------------------------------------------------------------------------
+// Stripping: comments, strings, chars, test regions, pragmas
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+struct PragmaInfo {
+    rules: Vec<Rule>,
+    malformed: Option<String>,
+}
+
+#[derive(Debug)]
+struct Stripped {
+    /// Source lines with comments and string/char-literal contents
+    /// replaced by spaces (newlines preserved).
+    lines: Vec<String>,
+    /// Per line: inside a `#[cfg(test)]` region.
+    test: Vec<bool>,
+    /// Per line: the `hydra-lint:` pragma found in a plain `//` comment.
+    pragmas: Vec<Option<PragmaInfo>>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Parse the text after `hydra-lint:` into suppressed rules, or a
+/// malformed-pragma description.
+fn parse_pragma(text: &str) -> PragmaInfo {
+    let body = text.trim();
+    let Some(rest) = body.strip_prefix("allow(") else {
+        return PragmaInfo {
+            rules: Vec::new(),
+            malformed: Some("expected `allow(<rule>) — <reason>`".to_string()),
+        };
+    };
+    let Some(close) = rest.find(')') else {
+        return PragmaInfo { rules: Vec::new(), malformed: Some("unclosed allow(".to_string()) };
+    };
+    let mut rules = Vec::new();
+    for raw in rest[..close].split(',') {
+        let id = raw.trim();
+        match Rule::from_id(id) {
+            Some(r) => rules.push(r),
+            None => {
+                return PragmaInfo {
+                    rules: Vec::new(),
+                    malformed: Some(format!("unknown rule `{id}`")),
+                };
+            }
+        }
+    }
+    if rules.is_empty() {
+        return PragmaInfo { rules, malformed: Some("empty rule list".to_string()) };
+    }
+    let reason = rest[close + 1..]
+        .trim_start()
+        .trim_start_matches(['—', '–', '-', ':'])
+        .trim();
+    if reason.is_empty() {
+        return PragmaInfo { rules: Vec::new(), malformed: Some("missing reason".to_string()) };
+    }
+    PragmaInfo { rules, malformed: None }
+}
+
+/// Blank comments and literals, collect pragmas, then mark test regions.
+fn strip(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<String> = Vec::new();
+    let mut pragmas: Vec<Option<PragmaInfo>> = Vec::new();
+    let mut cur = String::new();
+    let mut cur_pragma: Option<PragmaInfo> = None;
+
+    // Modes: 0 = code, 1 = line comment, 2 = block comment, 3 = string,
+    // 4 = raw string.
+    let mut mode = 0u8;
+    let mut block_depth = 0u32;
+    let mut raw_hashes = 0usize;
+    let mut comment_buf = String::new();
+    let mut comment_is_doc = false;
+
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if mode == 1 {
+                finalize_comment(&comment_buf, comment_is_doc, &mut cur_pragma);
+                comment_buf.clear();
+                mode = 0;
+            }
+            lines.push(std::mem::take(&mut cur));
+            pragmas.push(cur_pragma.take());
+            i += 1;
+            continue;
+        }
+        match mode {
+            1 => {
+                comment_buf.push(c);
+                cur.push(' ');
+                i += 1;
+            }
+            2 => {
+                if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    block_depth -= 1;
+                    cur.push_str("  ");
+                    i += 2;
+                    if block_depth == 0 {
+                        mode = 0;
+                    }
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    block_depth += 1;
+                    cur.push_str("  ");
+                    i += 2;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            3 => {
+                if c == '\\' && i + 1 < n {
+                    cur.push(' ');
+                    if chars[i + 1] != '\n' {
+                        cur.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    cur.push(' ');
+                    mode = 0;
+                    i += 1;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            4 => {
+                if c == '"' && raw_close_len(&chars, i, raw_hashes) {
+                    for _ in 0..=raw_hashes {
+                        cur.push(' ');
+                    }
+                    i += 1 + raw_hashes;
+                    mode = 0;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            _ => {
+                // code
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    mode = 1;
+                    comment_is_doc = i + 2 < n && (chars[i + 2] == '/' || chars[i + 2] == '!');
+                    comment_buf.clear();
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    mode = 2;
+                    block_depth = 1;
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    mode = 3;
+                    cur.push(' ');
+                    i += 1;
+                } else if let Some(h) = raw_string_open(&chars, i) {
+                    // r"…", r#"…"#, br"…", b"…" — blank the prefix +
+                    // opening quote, enter the right string mode.
+                    let (prefix_len, hashes, is_raw) = h;
+                    for _ in 0..prefix_len {
+                        cur.push(' ');
+                    }
+                    i += prefix_len;
+                    if is_raw {
+                        mode = 4;
+                        raw_hashes = hashes;
+                    } else {
+                        mode = 3;
+                    }
+                } else if c == '\'' {
+                    match char_literal_len(&chars, i) {
+                        Some(len) => {
+                            for _ in 0..len {
+                                cur.push(' ');
+                            }
+                            i += len;
+                        }
+                        None => {
+                            // a lifetime: keep the tick as code
+                            cur.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    cur.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if mode == 1 {
+        finalize_comment(&comment_buf, comment_is_doc, &mut cur_pragma);
+    }
+    lines.push(cur);
+    pragmas.push(cur_pragma.take());
+
+    let test = mark_test_regions(&lines);
+    Stripped { lines, test, pragmas }
+}
+
+fn finalize_comment(buf: &str, is_doc: bool, slot: &mut Option<PragmaInfo>) {
+    if is_doc {
+        return;
+    }
+    if let Some(rest) = buf.trim_start().strip_prefix("hydra-lint:") {
+        *slot = Some(parse_pragma(rest));
+    }
+}
+
+/// At `chars[i] == '"'` inside a raw string with `hashes` hashes: does a
+/// closing delimiter start here?
+fn raw_close_len(chars: &[char], i: usize, hashes: usize) -> bool {
+    if i + hashes >= chars.len() {
+        return false;
+    }
+    (1..=hashes).all(|k| chars[i + k] == '#')
+}
+
+/// Detect a raw/byte string opener at `chars[i]`. Returns
+/// `(prefix_len_including_quote, hashes, is_raw)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize, bool)> {
+    if i > 0 && is_ident(chars[i - 1]) {
+        return None;
+    }
+    let n = chars.len();
+    let c = chars[i];
+    // b"…"
+    if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+        return Some((2, 0, false));
+    }
+    // r…  or  br…
+    let r_at = if c == 'r' {
+        Some(i)
+    } else if c == 'b' && i + 1 < n && chars[i + 1] == 'r' {
+        Some(i + 1)
+    } else {
+        None
+    };
+    let r = r_at?;
+    let mut j = r + 1;
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && chars[j] == '"' {
+        return Some((j + 1 - i, hashes, true));
+    }
+    None
+}
+
+/// At `chars[i] == '\''`: length of a char literal starting here, or
+/// `None` when the tick opens a lifetime.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    let n = chars.len();
+    let mut k = i + 1;
+    if k >= n {
+        return None;
+    }
+    if chars[k] == '\\' {
+        k += 1;
+        if k >= n {
+            return None;
+        }
+        if chars[k] == 'u' {
+            k += 1;
+            if k < n && chars[k] == '{' {
+                while k < n && chars[k] != '}' {
+                    k += 1;
+                }
+                k += 1;
+            }
+        } else {
+            k += 1;
+        }
+    } else if chars[k] == '\'' {
+        return None;
+    } else {
+        k += 1;
+    }
+    if k < n && chars[k] == '\'' {
+        Some(k + 1 - i)
+    } else {
+        None
+    }
+}
+
+/// Mark lines inside `#[cfg(test)] mod … { … }` regions. The attribute
+/// arms a flag; the next `{` (on the blanked text) opens the region,
+/// and the matching `}` closes it.
+fn mark_test_regions(lines: &[String]) -> Vec<bool> {
+    let mut test = vec![false; lines.len()];
+    let mut depth = 0i64;
+    let mut pending = false;
+    let mut in_test = false;
+    let mut open_depth = 0i64;
+    for (li, line) in lines.iter().enumerate() {
+        if !in_test && line.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let mut line_test = in_test;
+        for c in line.chars() {
+            if c == '{' {
+                depth += 1;
+                if pending && !in_test {
+                    in_test = true;
+                    pending = false;
+                    open_depth = depth;
+                    line_test = true;
+                }
+            } else if c == '}' {
+                if in_test && depth == open_depth {
+                    in_test = false;
+                }
+                depth -= 1;
+            }
+        }
+        test[li] = line_test;
+    }
+    test
+}
+
+// ---------------------------------------------------------------------------
+// Shared token helpers
+// ---------------------------------------------------------------------------
+
+fn occurrences(line: &str, needle: &str) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut from = 0usize;
+    while from < line.len() {
+        match line[from..].find(needle) {
+            Some(p) => {
+                v.push(from + p);
+                from += p + needle.len();
+            }
+            None => break,
+        }
+    }
+    v
+}
+
+/// Token boundary checks on the blanked (ASCII) line.
+fn bounded(line: &str, pos: usize, len: usize, check_start: bool, check_end: bool) -> bool {
+    let b = line.as_bytes();
+    if check_start && pos > 0 && is_ident(b[pos - 1] as char) {
+        return false;
+    }
+    if check_end && pos + len < b.len() && is_ident(b[pos + len] as char) {
+        return false;
+    }
+    true
+}
+
+fn suppressed(s: &Stripped, li: usize, rule: Rule) -> bool {
+    if let Some(Some(p)) = s.pragmas.get(li) {
+        if p.malformed.is_none() && p.rules.contains(&rule) {
+            return true;
+        }
+    }
+    if li > 0 {
+        if let Some(Some(p)) = s.pragmas.get(li - 1) {
+            let standalone = s.lines[li - 1].trim().is_empty();
+            if standalone && p.malformed.is_none() && p.rules.contains(&rule) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Read the identifier ending just before byte `end` (exclusive),
+/// skipping whitespace backwards first — across line boundaries, so
+/// multiline method chains resolve their receiver.
+fn ident_ending_before(lines: &[String], mut li: usize, mut end: usize) -> Option<String> {
+    loop {
+        let b = lines[li].as_bytes();
+        while end > 0 && (b[end - 1] as char).is_ascii_whitespace() {
+            end -= 1;
+        }
+        if end > 0 {
+            let mut start = end;
+            while start > 0 && is_ident(b[start - 1] as char) {
+                start -= 1;
+            }
+            if start == end {
+                return None;
+            }
+            return Some(lines[li][start..end].to_string());
+        }
+        if li == 0 {
+            return None;
+        }
+        li -= 1;
+        end = lines[li].len();
+    }
+}
+
+/// Parse an integer literal (`0x…` hex or decimal, `_` separators).
+fn parse_int_literal(text: &str) -> Option<u64> {
+    let t = text.trim();
+    if let Some(hex) = t.strip_prefix("0x") {
+        let digits: String = hex
+            .chars()
+            .take_while(|c| c.is_ascii_hexdigit() || *c == '_')
+            .filter(|c| *c != '_')
+            .collect();
+        if digits.is_empty() {
+            return None;
+        }
+        return u64::from_str_radix(&digits, 16).ok();
+    }
+    let digits: String = t
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || *c == '_')
+        .filter(|c| *c != '_')
+        .collect();
+    if digits.is_empty() {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+// ---------------------------------------------------------------------------
+// The rules
+// ---------------------------------------------------------------------------
+
+fn in_deterministic_dir(rel: &str) -> bool {
+    DETERMINISTIC_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+/// Scan one file. `rel_path` is crate-root-relative with `/` separators
+/// (e.g. `src/broker/state.rs`) — it selects per-directory rule scope.
+pub fn scan_source(rel_path: &str, src: &str) -> FileScan {
+    let s = strip(src);
+    let mut out = FileScan::default();
+
+    for (li, p) in s.pragmas.iter().enumerate() {
+        if s.test[li] {
+            continue;
+        }
+        if let Some(info) = p {
+            if let Some(why) = &info.malformed {
+                out.violations.push(Violation {
+                    rule: Rule::Pragma,
+                    file: rel_path.to_string(),
+                    line: li + 1,
+                    message: format!("malformed hydra-lint pragma: {why}"),
+                });
+            }
+        }
+    }
+
+    rule_wallclock(rel_path, &s, &mut out.violations);
+    rule_unwrap(rel_path, &s, &mut out.violations);
+    rule_float_eq(rel_path, &s, &mut out.violations);
+    if in_deterministic_dir(rel_path) {
+        rule_hash_order(rel_path, &s, &mut out.violations);
+    }
+    if rel_path != PRNG_MODULE {
+        rule_prng_salt(rel_path, &s, &mut out);
+    }
+
+    out.violations.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn rule_wallclock(rel: &str, s: &Stripped, out: &mut Vec<Violation>) {
+    for (li, line) in s.lines.iter().enumerate() {
+        if s.test[li] {
+            continue;
+        }
+        for (needle, end_bound) in [("Instant::now", false), ("SystemTime", true)] {
+            for pos in occurrences(line, needle) {
+                if !bounded(line, pos, needle.len(), true, end_bound) {
+                    continue;
+                }
+                if suppressed(s, li, Rule::Wallclock) {
+                    continue;
+                }
+                let hint = if in_deterministic_dir(rel) {
+                    "deterministic paths must derive time from the simulated clock"
+                } else {
+                    "wall-clock reads belong behind the Stopwatch boundary"
+                };
+                out.push(Violation {
+                    rule: Rule::Wallclock,
+                    file: rel.to_string(),
+                    line: li + 1,
+                    message: format!("`{needle}` in library code; {hint}"),
+                });
+            }
+        }
+    }
+}
+
+fn rule_unwrap(rel: &str, s: &Stripped, out: &mut Vec<Violation>) {
+    for (li, line) in s.lines.iter().enumerate() {
+        if s.test[li] {
+            continue;
+        }
+        for (needle, start_bound) in [(".unwrap()", false), (".expect(", false), ("panic!", true)]
+        {
+            for pos in occurrences(line, needle) {
+                if !bounded(line, pos, needle.len(), start_bound, false) {
+                    continue;
+                }
+                if suppressed(s, li, Rule::Unwrap) {
+                    continue;
+                }
+                out.push(Violation {
+                    rule: Rule::Unwrap,
+                    file: rel.to_string(),
+                    line: li + 1,
+                    message: format!(
+                        "`{}` in library code; return an error instead of panicking",
+                        needle.trim_end_matches('(')
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn float_literal(tok: &str) -> bool {
+    let t = tok.trim_end_matches("f64").trim_end_matches("f32");
+    if t.is_empty() || !t.as_bytes()[0].is_ascii_digit() {
+        return false;
+    }
+    if t.starts_with("0x") || t.starts_with("0b") || t.starts_with("0o") {
+        return false;
+    }
+    t.contains('.') || t.contains('e') || t.contains('E')
+}
+
+fn token_after(line: &str, mut pos: usize) -> String {
+    let b = line.as_bytes();
+    while pos < b.len() && (b[pos] as char).is_ascii_whitespace() {
+        pos += 1;
+    }
+    if pos < b.len() && b[pos] == b'-' {
+        pos += 1;
+    }
+    let start = pos;
+    while pos < b.len() && (is_ident(b[pos] as char) || b[pos] == b'.') {
+        pos += 1;
+    }
+    line[start..pos].to_string()
+}
+
+fn token_before(line: &str, mut pos: usize) -> String {
+    let b = line.as_bytes();
+    while pos > 0 && (b[pos - 1] as char).is_ascii_whitespace() {
+        pos -= 1;
+    }
+    let end = pos;
+    while pos > 0 && (is_ident(b[pos - 1] as char) || b[pos - 1] == b'.') {
+        pos -= 1;
+    }
+    line[pos..end].to_string()
+}
+
+fn rule_float_eq(rel: &str, s: &Stripped, out: &mut Vec<Violation>) {
+    for (li, line) in s.lines.iter().enumerate() {
+        if s.test[li] {
+            continue;
+        }
+        let b = line.as_bytes();
+        for op in ["==", "!="] {
+            for pos in occurrences(line, op) {
+                if op == "==" {
+                    if pos > 0 && matches!(b[pos - 1], b'=' | b'!' | b'<' | b'>') {
+                        continue;
+                    }
+                    if pos + 2 < b.len() && b[pos + 2] == b'=' {
+                        continue;
+                    }
+                } else if pos + 2 < b.len() && b[pos + 2] == b'=' {
+                    continue;
+                }
+                let hit = float_literal(&token_after(line, pos + 2))
+                    || float_literal(&token_before(line, pos));
+                if !hit || suppressed(s, li, Rule::FloatEq) {
+                    continue;
+                }
+                out.push(Violation {
+                    rule: Rule::FloatEq,
+                    file: rel.to_string(),
+                    line: li + 1,
+                    message: "f64 `==`/`!=` against a float literal; byte-identity checks \
+                              compare `.to_bits()`"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+const ITER_NEEDLES: [&str; 9] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+];
+
+/// Collect names bound to `HashMap`/`HashSet` in this file: struct
+/// fields and typed bindings (`name: HashMap<…>`, `&[mut] HashMap`) and
+/// `name = HashMap::new()`-style initializers. File-scoped by design —
+/// a collision with an unrelated local is resolved by renaming or a
+/// pragma, both of which improve the code.
+fn hash_bound_names(s: &Stripped) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for (li, line) in s.lines.iter().enumerate() {
+        if s.test[li] {
+            continue;
+        }
+        for needle in ["HashMap", "HashSet"] {
+            for pos in occurrences(line, needle) {
+                if !bounded(line, pos, needle.len(), true, true) {
+                    continue;
+                }
+                if let Some(name) = binding_name_before(line, pos) {
+                    if !names.contains(&name) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Walk left from a `HashMap`/`HashSet` token over `path::` segments and
+/// `&`/`mut`, then read the bound name behind `:` or `=`.
+fn binding_name_before(line: &str, type_pos: usize) -> Option<String> {
+    let b = line.as_bytes();
+    let mut i = type_pos;
+    // path segments: `std::collections::HashMap`
+    while i >= 2 && b[i - 1] == b':' && b[i - 2] == b':' {
+        i -= 2;
+        while i > 0 && is_ident(b[i - 1] as char) {
+            i -= 1;
+        }
+    }
+    while i > 0 && (b[i - 1] as char).is_ascii_whitespace() {
+        i -= 1;
+    }
+    // reference carriers: `&HashMap`, `&mut HashMap`
+    loop {
+        if i > 0 && b[i - 1] == b'&' {
+            i -= 1;
+            continue;
+        }
+        if i >= 3 && &line[i - 3..i] == "mut" && (i == 3 || !is_ident(b[i - 4] as char)) {
+            i -= 3;
+            while i > 0 && (b[i - 1] as char).is_ascii_whitespace() {
+                i -= 1;
+            }
+            continue;
+        }
+        break;
+    }
+    while i > 0 && (b[i - 1] as char).is_ascii_whitespace() {
+        i -= 1;
+    }
+    if i == 0 {
+        return None;
+    }
+    if b[i - 1] == b':' && (i < 2 || b[i - 2] != b':') {
+        // `name: HashMap<…>`
+        i -= 1;
+        while i > 0 && (b[i - 1] as char).is_ascii_whitespace() {
+            i -= 1;
+        }
+        return read_ident_back(line, i);
+    }
+    if b[i - 1] == b'=' && (i < 2 || !matches!(b[i - 2], b'=' | b'!' | b'<' | b'>')) {
+        // `let [mut] name = HashMap::new()`
+        i -= 1;
+        while i > 0 && (b[i - 1] as char).is_ascii_whitespace() {
+            i -= 1;
+        }
+        return read_ident_back(line, i);
+    }
+    None
+}
+
+fn read_ident_back(line: &str, end: usize) -> Option<String> {
+    let b = line.as_bytes();
+    let mut start = end;
+    while start > 0 && is_ident(b[start - 1] as char) {
+        start -= 1;
+    }
+    if start == end {
+        return None;
+    }
+    Some(line[start..end].to_string())
+}
+
+fn rule_hash_order(rel: &str, s: &Stripped, out: &mut Vec<Violation>) {
+    let names = hash_bound_names(s);
+    if names.is_empty() {
+        return;
+    }
+    for (li, line) in s.lines.iter().enumerate() {
+        if s.test[li] {
+            continue;
+        }
+        for needle in ITER_NEEDLES {
+            for pos in occurrences(line, needle) {
+                let recv = match ident_ending_before(&s.lines, li, pos) {
+                    Some(r) => r,
+                    None => continue,
+                };
+                if !names.contains(&recv) || suppressed(s, li, Rule::HashOrder) {
+                    continue;
+                }
+                out.push(Violation {
+                    rule: Rule::HashOrder,
+                    file: rel.to_string(),
+                    line: li + 1,
+                    message: format!(
+                        "iteration over Hash{{Map,Set}} `{recv}` is nondeterministically \
+                         ordered; sort the keys or switch to BTreeMap/BTreeSet"
+                    ),
+                });
+            }
+        }
+        // `for x in [&]name` headers
+        if let Some(fp) = line.find("for ") {
+            if bounded(line, fp, 3, true, false) {
+                if let Some(ip) = line[fp..].find(" in ") {
+                    let tok = for_in_target(line, fp + ip + 4);
+                    if let Some(last) = tok.rsplit('.').next() {
+                        if names.iter().any(|n| n == last)
+                            && !suppressed(s, li, Rule::HashOrder)
+                        {
+                            out.push(Violation {
+                                rule: Rule::HashOrder,
+                                file: rel.to_string(),
+                                line: li + 1,
+                                message: format!(
+                                    "iteration over Hash{{Map,Set}} `{last}` is \
+                                     nondeterministically ordered; sort the keys or switch \
+                                     to BTreeMap/BTreeSet"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn for_in_target(line: &str, mut pos: usize) -> String {
+    let b = line.as_bytes();
+    while pos < b.len() && (b[pos] as char).is_ascii_whitespace() {
+        pos += 1;
+    }
+    while pos < b.len() && b[pos] == b'&' {
+        pos += 1;
+    }
+    if line[pos..].starts_with("mut ") {
+        pos += 4;
+    }
+    let start = pos;
+    while pos < b.len() && (is_ident(b[pos] as char) || b[pos] == b'.') {
+        pos += 1;
+    }
+    line[start..pos].to_string()
+}
+
+fn rule_prng_salt(rel: &str, s: &Stripped, out: &mut FileScan) {
+    for (li, line) in s.lines.iter().enumerate() {
+        if s.test[li] {
+            continue;
+        }
+        // Named salt constants: `const NAME_SALT: u64 = 0x…;`
+        for pos in occurrences(line, "const ") {
+            if !bounded(line, pos, 5, true, false) {
+                continue;
+            }
+            let b = line.as_bytes();
+            let mut j = pos + 6;
+            while j < b.len() && (b[j] as char).is_ascii_whitespace() {
+                j += 1;
+            }
+            let start = j;
+            while j < b.len() && is_ident(b[j] as char) {
+                j += 1;
+            }
+            let name = &line[start..j];
+            if !name.contains("SALT") {
+                continue;
+            }
+            let allowed = suppressed(s, li, Rule::PrngSalt);
+            match line[j..].find('=').and_then(|e| parse_int_literal(&line[j + e + 1..])) {
+                Some(value) => out.salts.push(SaltDef {
+                    name: name.to_string(),
+                    value,
+                    file: rel.to_string(),
+                    line: li + 1,
+                    allowed,
+                }),
+                None => {
+                    if !allowed {
+                        out.violations.push(Violation {
+                            rule: Rule::PrngSalt,
+                            file: rel.to_string(),
+                            line: li + 1,
+                            message: format!(
+                                "salt constant `{name}` must be an integer literal so \
+                                 crate-wide uniqueness is checkable"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        // Prng::new(…) call sites
+        for pos in occurrences(line, "Prng::new(") {
+            if !bounded(line, pos, 4, true, false) {
+                continue;
+            }
+            let arg = match call_args(&s.lines, li, pos + "Prng::new(".len()) {
+                Some(a) => a,
+                None => continue,
+            };
+            match arg.find('^') {
+                Some(x) => {
+                    if let Some(value) = parse_int_literal(&arg[x + 1..]) {
+                        out.salts.push(SaltDef {
+                            name: "<inline>".to_string(),
+                            value,
+                            file: rel.to_string(),
+                            line: li + 1,
+                            allowed: suppressed(s, li, Rule::PrngSalt),
+                        });
+                    }
+                }
+                None => {
+                    if !suppressed(s, li, Rule::PrngSalt) {
+                        out.violations.push(Violation {
+                            rule: Rule::PrngSalt,
+                            file: rel.to_string(),
+                            line: li + 1,
+                            message: "unsalted `Prng::new` stream; derive substreams as \
+                                      `Prng::new(seed ^ STREAM_SALT)` with a unique salt"
+                                .to_string(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Collect the argument text of a call whose `(` sits at (`li`, just
+/// before `pos`), following up to 10 lines for the matching `)`.
+fn call_args(lines: &[String], li: usize, pos: usize) -> Option<String> {
+    let mut depth = 1i32;
+    let mut args = String::new();
+    let mut line_idx = li;
+    let mut col = pos;
+    let mut budget = 10usize;
+    loop {
+        let b = lines[line_idx].as_bytes();
+        while col < b.len() {
+            let c = b[col] as char;
+            if c == '(' {
+                depth += 1;
+            } else if c == ')' {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(args);
+                }
+            }
+            args.push(c);
+            col += 1;
+        }
+        args.push(' ');
+        line_idx += 1;
+        budget -= 1;
+        if line_idx >= lines.len() || budget == 0 {
+            return None;
+        }
+        col = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(rel: &str, src: &str) -> Vec<Violation> {
+        scan_source(rel, src).violations
+    }
+
+    fn rules_at(vs: &[Violation]) -> Vec<(usize, Rule)> {
+        vs.iter().map(|v| (v.line, v.rule)).collect()
+    }
+
+    #[test]
+    fn wallclock_flags_instant_and_systemtime() {
+        let src = "fn f() {\n    let t = std::time::Instant::now();\n    \
+                   let s = std::time::SystemTime::now();\n}\n";
+        let vs = lint("src/sim/foo.rs", src);
+        assert_eq!(rules_at(&vs), vec![(2, Rule::Wallclock), (3, Rule::Wallclock)]);
+        assert!(vs[0].message.contains("simulated clock"));
+    }
+
+    #[test]
+    fn strings_and_comments_are_invisible() {
+        let src = r##"
+// Instant::now in a comment is fine, as is .unwrap() and panic!
+/* block with SystemTime and == 0.0 */
+fn f() {
+    let s = "Instant::now() .unwrap() panic! == 0.0";
+    let r = r#a"SystemTime .expect( inside raw"#a;
+    let c = '"'; // a quote char literal must not open a string
+    let u = s.len();
+}
+"##;
+        let src = src.replace("#a", "#");
+        assert_eq!(lint("src/sim/foo.rs", &src), vec![]);
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_do_not_derail() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str {\n    let b = b'\"';\n    \
+                   let e = '\\u{8}';\n    let q = '\\'';\n    \
+                   let t = \"text\".unwrap();\n    x\n}\n";
+        let vs = lint("src/util/x.rs", src);
+        // Only the real .unwrap() on line 5 — the quote char literal did
+        // not swallow the rest of the file into a string.
+        assert_eq!(rules_at(&vs), vec![(5, Rule::Unwrap)]);
+    }
+
+    #[test]
+    fn unwrap_rule_skips_test_modules_and_variants() {
+        let src = "fn f(o: Option<u32>) -> u32 {\n    o.unwrap_or(3).max(o.unwrap_or_else(|| 4))\n\
+                   }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                   Some(1).unwrap();\n        panic!(\"boom\");\n    }\n}\n";
+        assert_eq!(lint("src/broker/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn unwrap_rule_flags_library_sites() {
+        let src = "fn f(o: Option<u32>) -> u32 {\n    let a = o.unwrap();\n    \
+                   let b = o.expect(\"present\");\n    \
+                   if a + b == 0 { panic!(\"no\") }\n    a\n}\n";
+        let vs = lint("src/broker/x.rs", src);
+        assert_eq!(
+            rules_at(&vs),
+            vec![(2, Rule::Unwrap), (3, Rule::Unwrap), (4, Rule::Unwrap)]
+        );
+    }
+
+    #[test]
+    fn float_eq_flags_literal_comparisons_only() {
+        let src = "fn f(x: f64, y: f64, n: u32) -> bool {\n    let a = x == 0.0;\n    \
+                   let b = 1.5 != y;\n    let c = x >= 0.0;\n    let d = n == 3;\n    \
+                   let e = x == y;\n    let g = x == 2e9;\n    a && b && c && d && e && g\n}\n";
+        let vs = lint("src/util/x.rs", src);
+        assert_eq!(
+            rules_at(&vs),
+            vec![(2, Rule::FloatEq), (3, Rule::FloatEq), (7, Rule::FloatEq)]
+        );
+    }
+
+    #[test]
+    fn float_eq_ignores_tuple_field_access() {
+        let src = "fn f(t: (u32, u32)) -> bool {\n    t.0 == t.1\n}\n";
+        assert_eq!(lint("src/util/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn hash_order_flags_iteration_in_deterministic_dirs_only() {
+        let src = "use std::collections::HashMap;\nstruct S {\n    tasks: HashMap<u64, u32>,\n\
+                   }\nimpl S {\n    fn g(&self) -> usize {\n        \
+                   self.tasks.values().count()\n    }\n}\n";
+        let vs = lint("src/broker/x.rs", src);
+        assert_eq!(rules_at(&vs), vec![(7, Rule::HashOrder)]);
+        assert!(vs[0].message.contains("tasks"));
+        // The same file outside the deterministic dirs is exempt.
+        assert_eq!(lint("src/util/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn hash_order_resolves_multiline_chains_and_for_loops() {
+        let src = "use std::collections::HashMap;\nfn f(objects: &HashMap<String, u32>) {\n    \
+                   let _: Vec<_> = objects\n        .keys()\n        .collect();\n    \
+                   for v in objects.values() {\n        let _ = v;\n    }\n    \
+                   for (k, _) in objects {\n        let _ = k;\n    }\n}\n";
+        let vs = lint("src/broker/x.rs", src);
+        assert_eq!(
+            rules_at(&vs),
+            vec![(4, Rule::HashOrder), (6, Rule::HashOrder), (9, Rule::HashOrder)]
+        );
+    }
+
+    #[test]
+    fn hash_order_leaves_btreemap_and_vecs_alone() {
+        let src = "use std::collections::BTreeMap;\nfn f(m: &BTreeMap<u64, u32>, v: &[u32]) \
+                   -> usize {\n    m.values().count() + v.iter().count()\n}\n";
+        assert_eq!(lint("src/broker/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn prng_salt_flags_unsalted_streams() {
+        let src = "use crate::util::prng::Prng;\nfn f(seed: u64) -> Prng {\n    \
+                   Prng::new(seed)\n}\nfn g(seed: u64) -> Prng {\n    \
+                   Prng::new(seed ^ 0xABCD)\n}\n";
+        let scan = scan_source("src/sim/x.rs", src);
+        assert_eq!(rules_at(&scan.violations), vec![(3, Rule::PrngSalt)]);
+        assert_eq!(scan.salts.len(), 1);
+        assert_eq!(scan.salts[0].value, 0xABCD);
+        // util/prng.rs itself is exempt (seeding + forking live there).
+        assert_eq!(scan_source("src/util/prng.rs", src).violations, vec![]);
+    }
+
+    #[test]
+    fn prng_salt_collects_named_constants() {
+        let src = "const FAULT_STREAM_SALT: u64 = 0xFA17_5EED;\nconst OTHER: u64 = 3;\n\
+                   const NOT_A_LITERAL_SALT: u64 = compute();\n";
+        let scan = scan_source("src/sim/x.rs", src);
+        assert_eq!(scan.salts.len(), 1);
+        assert_eq!(scan.salts[0].name, "FAULT_STREAM_SALT");
+        assert_eq!(scan.salts[0].value, 0xFA17_5EED);
+        assert_eq!(rules_at(&scan.violations), vec![(3, Rule::PrngSalt)]);
+    }
+
+    #[test]
+    fn pragma_suppresses_same_line_and_next_line() {
+        let src = "fn f(o: Option<u32>) -> u32 {\n    \
+                   o.unwrap() // hydra-lint: allow(unwrap) — boot path, config is pre-validated\n\
+                   }\nfn g(o: Option<u32>) -> u32 {\n    \
+                   // hydra-lint: allow(unwrap) — boot path, config is pre-validated\n    \
+                   o.unwrap()\n}\n";
+        assert_eq!(lint("src/broker/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn pragma_scope_is_one_line_only() {
+        let src = "fn g(o: Option<u32>) -> u32 {\n    \
+                   // hydra-lint: allow(unwrap) — only the next line\n    \
+                   let a = o.unwrap();\n    let b = o.unwrap();\n    a + b\n}\n";
+        let vs = lint("src/broker/x.rs", src);
+        assert_eq!(rules_at(&vs), vec![(4, Rule::Unwrap)]);
+    }
+
+    #[test]
+    fn malformed_pragmas_are_violations() {
+        let missing_reason = "// hydra-lint: allow(unwrap)\nfn f() {}\n";
+        let unknown_rule = "// hydra-lint: allow(uwnrap) — typo'd rule id\nfn f() {}\n";
+        let no_allow = "// hydra-lint: suppress everything please\nfn f() {}\n";
+        for src in [missing_reason, unknown_rule, no_allow] {
+            let vs = lint("src/broker/x.rs", src);
+            assert_eq!(rules_at(&vs), vec![(1, Rule::Pragma)], "{src}");
+        }
+        // …and a malformed pragma suppresses nothing.
+        let src = "fn f(o: Option<u32>) -> u32 {\n    \
+                   // hydra-lint: allow(unwrap)\n    o.unwrap()\n}\n";
+        let vs = lint("src/broker/x.rs", src);
+        assert_eq!(rules_at(&vs), vec![(2, Rule::Pragma), (3, Rule::Unwrap)]);
+    }
+
+    #[test]
+    fn doc_comments_never_parse_as_pragmas() {
+        let src = "/// Quoting the syntax: // hydra-lint: allow(unwrap)\n\
+                   //! hydra-lint: allow(unwrap)\nfn f() {}\n";
+        assert_eq!(lint("src/broker/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn pragma_with_multiple_rules() {
+        let src = "fn f(x: f64) -> bool {\n    \
+                   // hydra-lint: allow(float-eq, unwrap) — exact sentinel + boot path\n    \
+                   x == 0.0 && Some(1).unwrap() == 1\n}\n";
+        assert_eq!(lint("src/broker/x.rs", src), vec![]);
+    }
+
+    #[test]
+    fn cfg_test_region_tracks_nested_braces() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {\n        \
+                   if true {\n            Some(1).unwrap();\n        }\n    }\n}\n\
+                   fn after(o: Option<u32>) -> u32 {\n    o.unwrap()\n}\n";
+        let vs = lint("src/broker/x.rs", src);
+        assert_eq!(rules_at(&vs), vec![(11, Rule::Unwrap)]);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nfn f(o: Option<u32>) -> u32 {\n    o.unwrap()\n}\n";
+        let vs = lint("src/broker/x.rs", src);
+        assert_eq!(rules_at(&vs), vec![(3, Rule::Unwrap)]);
+    }
+
+    #[test]
+    fn parse_int_literal_forms() {
+        assert_eq!(parse_int_literal("0xFA17_5EED_0D1E;"), Some(0xFA17_5EED_0D1E));
+        assert_eq!(parse_int_literal(" 42;"), Some(42));
+        assert_eq!(parse_int_literal("compute()"), None);
+        assert_eq!(parse_int_literal("0x"), None);
+    }
+}

@@ -165,6 +165,7 @@ pub struct TraceLog {
 
 impl TraceLog {
     pub fn new() -> TraceLog {
+        // hydra-lint: allow(wallclock) — trace epochs are wall-relative by design (OVH)
         TraceLog { start: Some(std::time::Instant::now()), events: Vec::new() }
     }
 

@@ -85,6 +85,7 @@ impl FaasSim {
             profile,
             spec,
             invocations: Vec::new(),
+            // hydra-lint: allow(prng-salt) — the sim's primary stream; substreams fork from it
             rng: Prng::new(seed),
             queue_kind: EventQueueKind::default(),
         }

@@ -206,6 +206,7 @@ impl HpcSim {
             profile,
             pilot,
             tasks: Vec::new(),
+            // hydra-lint: allow(prng-salt) — the sim's primary stream; substreams fork from it
             rng: Prng::new(seed),
             failure_rate: 0.0,
             queue_kind: EventQueueKind::default(),
@@ -336,9 +337,9 @@ impl FaultSpec {
     /// True when every fault *source* is disabled (the retry budget is
     /// irrelevant without one).
     pub fn is_none(&self) -> bool {
-        self.walltime_s == 0.0
-            && self.mtbf_s == 0.0
-            && self.materialization_failure_p == 0.0
+        self.walltime_s == 0.0 // hydra-lint: allow(float-eq) — exact 0.0 is the disabled sentinel
+            && self.mtbf_s == 0.0 // hydra-lint: allow(float-eq) — exact 0.0 sentinel
+            && self.materialization_failure_p == 0.0 // hydra-lint: allow(float-eq) — sentinel
             && self.injected_kill.is_none()
     }
 
@@ -556,6 +557,7 @@ impl MultiPilotSim {
             profile,
             specs: pilots,
             tasks: Vec::new(),
+            // hydra-lint: allow(prng-salt) — the sim's primary stream; substreams fork from it
             rng: Prng::new(seed),
             seed,
             failure_rate: 0.0,

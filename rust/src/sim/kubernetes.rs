@@ -241,6 +241,7 @@ impl KubernetesSim {
             queue: EventQueue::new(),
             pending: std::collections::VecDeque::new(),
             sched_busy: false,
+            // hydra-lint: allow(prng-salt) — the sim's primary stream; substreams fork from it
             rng: Prng::new(seed),
             records: Vec::new(),
             completed: 0,

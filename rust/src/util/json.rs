@@ -77,6 +77,7 @@ impl Json {
 
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|n| {
+            // hydra-lint: allow(float-eq) — exact integrality test, not a tolerance compare
             if n >= 0.0 && n.fract() == 0.0 && n <= u64::MAX as f64 {
                 Some(n as u64)
             } else {
@@ -197,6 +198,7 @@ fn indent(out: &mut String, depth: usize) {
 }
 
 fn write_num(n: f64, out: &mut String) {
+    // hydra-lint: allow(float-eq) — exact integrality test, not a tolerance compare
     if n.fract() == 0.0 && n.abs() < 9.0e15 {
         // Integral values print without the trailing ".0" — Kubernetes
         // manifests expect integer resource counts. Digits go straight

@@ -39,6 +39,7 @@ pub struct Stopwatch {
 
 impl Stopwatch {
     pub fn start() -> Stopwatch {
+        // hydra-lint: allow(wallclock) — Stopwatch IS the wall-clock boundary (OVH timing)
         Stopwatch { start: std::time::Instant::now() }
     }
 

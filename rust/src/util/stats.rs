@@ -92,11 +92,12 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
     let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
     let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
     let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
-    if sxx == 0.0 {
+    if sxx == 0.0 { // hydra-lint: allow(float-eq) — degenerate-variance sentinel
         return (my, 0.0, 0.0);
     }
     let b = sxy / sxx;
     let a = my - b * mx;
+    // hydra-lint: allow(float-eq) — degenerate-variance sentinel
     let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
     (a, b, r2)
 }
