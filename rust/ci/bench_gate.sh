@@ -25,7 +25,10 @@
 # to grow a row per PR, and adding a point must not trip the diff. Only
 # shared-row regressions fail. A freshly added row therefore stays
 # WARN-only until a measured run is promoted to the committed baseline
-# with --refresh; from then on it gates like any other row.
+# with --refresh; from then on it gates like any other row. The ISSUE 10
+# ingest_microbench rows (lazy/tree bytes-per-s in the quick tier, the
+# per-point ingest bytes-per-s in the scale tier) follow exactly that
+# policy: WARN-only until a measured baseline is promoted.
 #
 # Schema policy: a bad/unknown schema in the *fresh* file fails the gate
 # (broken bench output must not silently disable gating); a baseline
@@ -76,6 +79,11 @@ def quick_rows(doc):
     micro = doc.get("serialize_microbench") or {}
     if isinstance(micro.get("serialize_ms_parallel"), (int, float)):
         out["serialize_micro.parallel_ms"] = (micro["serialize_ms_parallel"], False)
+    ingest = doc.get("ingest_microbench") or {}
+    for side in ("lazy", "tree"):
+        bps = ingest.get(f"{side}_bytes_per_s")
+        if isinstance(bps, (int, float)):
+            out[f"ingest.{side}.bytes_per_s"] = (bps, True)
     sched = doc.get("sched_microbench") or {}
     for kind in ("linear", "indexed", "queue_heap", "queue_calendar"):
         eps = (sched.get(kind) or {}).get("events_per_s")
@@ -93,6 +101,9 @@ def scale_rows(doc):
             eps = (p.get(kind) or {}).get("events_per_s")
             if isinstance(eps, (int, float)):
                 out[f"{name}.{kind}.events_per_s"] = (eps, True)
+        bps = (p.get("ingest") or {}).get("bytes_per_s")
+        if isinstance(bps, (int, float)):
+            out[f"{name}.ingest.bytes_per_s"] = (bps, True)
     return out
 
 

@@ -17,7 +17,8 @@ Runs the tier-1 verify plus the perf smoke, in order:
   1. cargo build --release
   2. cargo test -q                           (includes the equivalence
      suites: sched_equivalence, pilot_equivalence, queue_equivalence —
-     the calendar-vs-heap event-queue lock from ISSUE 8)
+     the calendar-vs-heap event-queue lock from ISSUE 8 — and
+     json_equivalence, the ISSUE 10 tree-parser-vs-lazy-scanner lock)
   3. cargo run --release --bin hydra_lint    (ISSUE 9 determinism lint:
      wallclock / hash-order / prng-salt / unwrap / float-eq, gated
      against the ratcheted ci/lint_baseline.json; writes the untracked
@@ -27,7 +28,9 @@ Runs the tier-1 verify plus the perf smoke, in order:
      'cargo run --release --bin hydra_lint -- --refresh')
   4. cargo run --release --bin bench_quick   (writes BENCH_quick.json,
      schema hydra-bench-quick/v1 — the ROADMAP perf-trajectory record;
-     includes the heap-vs-calendar queue rows on the 16K-pod point)
+     includes the heap-vs-calendar queue rows on the 16K-pod point and
+     the ISSUE 10 ingest microbench: lazy zero-alloc scan vs tree parse
+     over the 4K-task framed payload, lazy >= tree bytes/s asserted)
 
 Deliberately NOT run here: the bench_scale tier (100K/1M-pod points,
 schema hydra-bench-scale/v1) — it takes minutes, so tier-1 stays fast.

@@ -48,7 +48,8 @@ use hydra::broker::{
 use hydra::sim::event::EventQueueKind;
 use hydra::sim::kubernetes::{ClusterSpec, ContainerSpec, KubernetesSim, PodSpec, SchedulerKind};
 use hydra::sim::provider::ProviderId;
-use hydra::util::json::Json;
+use hydra::util::json::{parse, Json};
+use hydra::util::json_scan::JsonScanner;
 use hydra::util::stats::Summary;
 use hydra::util::Stopwatch;
 
@@ -375,6 +376,9 @@ struct SerializeMicro {
     parallel_ms: f64,
     speedup: f64,
     bulk_bytes: usize,
+    /// The framed payload itself — reused by the ingest microbench so
+    /// both rows measure the exact same bytes.
+    bulk: Vec<u8>,
 }
 
 fn run_serialize_micro() -> SerializeMicro {
@@ -414,6 +418,81 @@ fn run_serialize_micro() -> SerializeMicro {
         parallel_ms,
         speedup: serial_ms / parallel_ms.max(1e-9),
         bulk_bytes: serial_bulk.len(),
+        bulk: serial_bulk,
+    }
+}
+
+/// ISSUE 10 row: lazy scan (`util::json_scan`, zero-alloc) vs tree parse
+/// (`util::json`) over the 4K-task SCPP framed payload — the ingest cost
+/// a broker pays to spot-check a provider response. Both sides do the
+/// same job: count the framed pod manifests and fold their
+/// `hydra/pod-id` labels; the harness asserts the answers agree and that
+/// the lazy path is at least as fast per byte. Best-of-5.
+struct IngestMicro {
+    bytes: usize,
+    items: usize,
+    lazy_ms: f64,
+    tree_ms: f64,
+    lazy_bps: f64,
+    tree_bps: f64,
+    speedup: f64,
+}
+
+fn run_ingest_micro(bulk: &[u8]) -> IngestMicro {
+    const ID_PATH: [&str; 3] = ["metadata", "labels", "hydra/pod-id"];
+    let lazy_pass = || -> (usize, u64) {
+        let mut n = 0usize;
+        let mut sum = 0u64;
+        for span in JsonScanner::new(bulk).items() {
+            // hydra-lint: allow(unwrap) — bench aborts on a malformed payload
+            let (s, e) = span.expect("framed payload must scan");
+            n += 1;
+            if let Some(id) = JsonScanner::new(&bulk[s..e]).path_u64(&ID_PATH) {
+                sum = sum.wrapping_add(id);
+            }
+        }
+        (n, sum)
+    };
+    let tree_pass = || -> (usize, u64) {
+        // hydra-lint: allow(unwrap) — bench aborts on a malformed payload
+        let text = std::str::from_utf8(bulk).expect("framed payload is UTF-8");
+        // hydra-lint: allow(unwrap) — bench aborts on a malformed payload
+        let doc = parse(text).expect("framed payload must tree-parse");
+        let mut sum = 0u64;
+        let items = match doc.as_arr() {
+            Some(items) => items,
+            None => &[],
+        };
+        for item in items {
+            if let Some(id) = item.at(&ID_PATH).and_then(Json::as_u64) {
+                sum = sum.wrapping_add(id);
+            }
+        }
+        (items.len(), sum)
+    };
+    let best_of_5 = |pass: &dyn Fn() -> (usize, u64)| -> (f64, usize, u64) {
+        let mut best = f64::INFINITY;
+        let mut out = (0usize, 0u64);
+        for _ in 0..5 {
+            let sw = Stopwatch::start();
+            out = pass();
+            best = best.min(sw.elapsed_secs());
+        }
+        (best * 1e3, out.0, out.1)
+    };
+    let (lazy_ms, lazy_n, lazy_sum) = best_of_5(&lazy_pass);
+    let (tree_ms, tree_n, tree_sum) = best_of_5(&tree_pass);
+    assert_eq!(lazy_n, tree_n, "lazy scan and tree parse disagree on item count");
+    assert_eq!(lazy_sum, tree_sum, "lazy scan and tree parse disagree on pod ids");
+    let bps = |ms: f64| bulk.len() as f64 / (ms / 1e3).max(1e-12);
+    IngestMicro {
+        bytes: bulk.len(),
+        items: lazy_n,
+        lazy_ms,
+        tree_ms,
+        lazy_bps: bps(lazy_ms),
+        tree_bps: bps(tree_ms),
+        speedup: tree_ms / lazy_ms.max(1e-9),
     }
 }
 
@@ -582,6 +661,25 @@ fn main() {
         ser.serial_ms, ser.threads, ser.parallel_ms, ser.speedup, ser.bulk_bytes
     );
 
+    // ISSUE 10: the ingest side of the same payload — lazy zero-alloc
+    // scan vs full tree parse, identical answers, lazy at least as fast.
+    println!("\n--- ingest microbench ({} B framed SCPP payload, best of 5) ---", ser.bulk_bytes);
+    let ingest = run_ingest_micro(&ser.bulk);
+    println!(
+        "lazy scan: {:.2}ms ({:.1} MB/s) | tree parse: {:.2}ms ({:.1} MB/s) | \
+         lazy {:.2}x | {} items id-checked (identical)",
+        ingest.lazy_ms,
+        ingest.lazy_bps / 1e6,
+        ingest.tree_ms,
+        ingest.tree_bps / 1e6,
+        ingest.speedup,
+        ingest.items
+    );
+    assert!(
+        ingest.lazy_bps >= ingest.tree_bps,
+        "lazy scan must ingest at least as many bytes/s as the tree parse"
+    );
+
     println!(
         "\n--- scheduling microbench ({MICRO_PODS} pods, {MICRO_NODES} nodes x \
          {MICRO_VCPUS} vCPUs, seed {MICRO_SEED}) ---"
@@ -651,6 +749,18 @@ fn main() {
                 .set("speedup", ser.speedup)
                 .set("bulk_bytes", ser.bulk_bytes)
                 .set("bulk_identical", true),
+        )
+        .set(
+            "ingest_microbench",
+            Json::obj()
+                .set("bytes", ingest.bytes)
+                .set("items", ingest.items)
+                .set("lazy_scan_ms", ingest.lazy_ms)
+                .set("tree_parse_ms", ingest.tree_ms)
+                .set("lazy_bytes_per_s", ingest.lazy_bps)
+                .set("tree_bytes_per_s", ingest.tree_bps)
+                .set("speedup", ingest.speedup)
+                .set("ids_identical", true),
         )
         .set(
             "hpc_multipilot_check",

@@ -27,8 +27,9 @@ use crate::broker::partitioner::{PartitionError, Partitioner, PodBuildMode, Prep
 use crate::broker::provider_proxy::CircuitBreaker;
 use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
-use crate::sim::kubernetes::KubernetesSim;
+use crate::sim::kubernetes::{KubernetesSim, PodSpec};
 use crate::sim::vm::{provision_cluster, ProvisionReport};
+use crate::util::json_scan::JsonScanner;
 use crate::util::prng::Prng;
 use crate::util::Stopwatch;
 use std::borrow::Borrow;
@@ -157,11 +158,16 @@ impl CaasManager {
             self.breaker.clone(),
             self.seed,
         );
-        let bulk_len = endpoint.submit(&bulk)?;
+        let receipt = endpoint.submit_acked(&bulk)?;
+        let bulk_len = receipt.bytes;
         // Both modes ship every manifest byte plus the `[`/`,`/`]`
         // envelope; a mismatch means the framing dropped payload.
         let expected_bulk = if n_pods == 0 { 2 } else { bytes_serialized + n_pods + 1 };
         assert_eq!(bulk_len, expected_bulk, "bulk framing lost bytes");
+        // -- ingest: verify the provider's ack round-trip (ISSUE 10) ------
+        // Still inside the submit stopwatch window, so the lazy ack scan
+        // is charged into OVH with the rest of the phase.
+        verify_ack(&receipt.ack, &prepared.pods)?;
         // Simulated backoff is charged into OVH: resilience has a cost.
         let submit_s = sw.elapsed_secs() + endpoint.backoff_s();
         registry.transition_all(&ids, TaskState::Submitted)?;
@@ -241,6 +247,37 @@ impl CaasManager {
             detail: RunDetail::Caas { sim: report, provision: self.provision() },
         })
     }
+}
+
+/// ISSUE 10 round-trip check: the provider's echoed ack must agree with
+/// what this manager framed — item count equals the pod count, and the
+/// first/last id echoes (the `hydra/pod-id` manifest label) match the
+/// framed pods. Scanned lazily with [`JsonScanner`]; a disagreement
+/// means the accepted payload differs from the framed one, which is
+/// terminal (never retryable — the provider *took* the bytes).
+fn verify_ack(ack: &str, pods: &[PodSpec]) -> Result<(), ManagerError> {
+    let scan = JsonScanner::new(ack.as_bytes());
+    let count = scan.path_u64(&["count"]);
+    if count != Some(pods.len() as u64) {
+        return Err(ManagerError::AckMismatch {
+            message: format!("framed {} pod manifests, provider acked {count:?}", pods.len()),
+        });
+    }
+    let (Some(first), Some(last)) = (pods.first(), pods.last()) else {
+        return Ok(());
+    };
+    let checks = [
+        ("first", first.id, scan.path_u64(&["first_id"])),
+        ("last", last.id, scan.path_u64(&["last_id"])),
+    ];
+    for (which, want, got) in checks {
+        if got != Some(want) {
+            return Err(ManagerError::AckMismatch {
+                message: format!("{which} pod id {want} not echoed, got {got:?}"),
+            });
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -416,6 +453,27 @@ mod tests {
         for (id, _) in &tasks {
             assert_eq!(reg.state_of(*id), Some(TaskState::Partitioned));
         }
+    }
+
+    #[test]
+    fn ack_verification_flags_mismatches() {
+        let pod = |id: u64| PodSpec { id, containers: Vec::new() };
+        let pods = [pod(0), pod(1), pod(2)];
+        // A faithful ack passes.
+        let good = r#"{"ack":"hydra/v1","count":3,"bytes":10,"first_id":0,"last_id":2}"#;
+        assert!(verify_ack(good, &pods).is_ok());
+        // Count, first-id and last-id disagreements are each terminal.
+        for bad in [
+            r#"{"ack":"hydra/v1","count":2,"bytes":10,"first_id":0,"last_id":2}"#,
+            r#"{"ack":"hydra/v1","count":3,"bytes":10,"first_id":7,"last_id":2}"#,
+            r#"{"ack":"hydra/v1","count":3,"bytes":10,"first_id":0,"last_id":null}"#,
+        ] {
+            let e = verify_ack(bad, &pods).unwrap_err();
+            assert!(matches!(e, ManagerError::AckMismatch { .. }), "{bad}");
+            assert!(!e.retryable(), "ack mismatch must never be re-brokered");
+        }
+        // Empty workload: count 0, no id spot-checks.
+        assert!(verify_ack(r#"{"ack":"hydra/v1","count":0,"bytes":2,"first_id":null,"last_id":null}"#, &[]).is_ok());
     }
 
     #[test]

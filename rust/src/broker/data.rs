@@ -22,7 +22,8 @@
 //! frame the bulk submission payload copy-free from the shard buffers.
 
 use crate::broker::provider_proxy::CircuitBreaker;
-use crate::util::json::write_str_into;
+use crate::util::json::{push_u64, write_str_into};
+use crate::util::json_scan::JsonScanner;
 use crate::util::prng::Prng;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -262,6 +263,85 @@ pub fn frame_bulk(shards: &[ManifestShard], opts: SerializeOptions) -> Vec<u8> {
 /// length (ISSUE 3 satellite: `bulk_len` asserted, not just hinted).
 pub fn submit_bulk(payload: &[u8]) -> usize {
     std::hint::black_box(payload).len()
+}
+
+/// Deterministic ack document the provider echoes for an accepted bulk
+/// payload (ISSUE 10 ingest layer). A pure function of the payload
+/// bytes — no PRNG, no clock — so arming it costs the healthy path
+/// nothing (`ProviderFaultSpec::none()` byte/draw identity is
+/// unaffected). The provider side lazily scans the payload it just
+/// accepted with [`JsonScanner`] (item count via the top-level-array
+/// span iterator, id spot-checks via dotted-path extraction — never a
+/// tree) and echoes
+///
+/// ```json
+/// {"ack":"hydra/v1","count":N,"bytes":B,"first_id":…,"last_id":…}
+/// ```
+///
+/// where `first_id`/`last_id` are the raw id scalar of the first/last
+/// item — `uid` for HPC task dicts, `metadata.labels."hydra/pod-id"`
+/// for pod manifests, `payload.hydra_task_id` for FaaS invocations —
+/// or `null` when the payload is empty or carries no known id field.
+/// Malformed payloads ack the well-formed item prefix only, which the
+/// manager-side count check then flags as a mismatch.
+pub fn provider_ack(payload: &[u8]) -> String {
+    let scanner = JsonScanner::new(payload);
+    let mut count: u64 = 0;
+    let mut first: Option<(usize, usize)> = None;
+    let mut last: Option<(usize, usize)> = None;
+    for item in scanner.items() {
+        match item {
+            Ok(span) => {
+                if first.is_none() {
+                    first = Some(span);
+                }
+                last = Some(span);
+                count += 1;
+            }
+            Err(_) => break,
+        }
+    }
+    let mut ack = String::with_capacity(96);
+    ack.push_str("{\"ack\":\"hydra/v1\",\"count\":");
+    push_u64(&mut ack, count);
+    ack.push_str(",\"bytes\":");
+    push_u64(&mut ack, payload.len() as u64);
+    ack.push_str(",\"first_id\":");
+    push_item_id(&mut ack, payload, first);
+    ack.push_str(",\"last_id\":");
+    push_item_id(&mut ack, payload, last);
+    ack.push('}');
+    ack
+}
+
+/// Echo the raw id scalar of the item at `span` (or `null`). The raw
+/// bytes are copied verbatim — a string id stays quoted, a numeric id
+/// stays bare — so the manager-side spot-check compares exactly what
+/// was framed.
+fn push_item_id(ack: &mut String, payload: &[u8], span: Option<(usize, usize)>) {
+    let raw = span.and_then(|(s, e)| {
+        let item = JsonScanner::new(&payload[s..e]);
+        item.path_raw(&["uid"])
+            .or_else(|| item.path_raw(&["metadata", "labels", "hydra/pod-id"]))
+            .or_else(|| item.path_raw(&["payload", "hydra_task_id"]))
+    });
+    match raw.and_then(|r| std::str::from_utf8(r).ok()) {
+        Some(r) => ack.push_str(r),
+        None => ack.push_str("null"),
+    }
+}
+
+/// Outcome of [`ProviderEndpoint::submit_acked`]: the accepted byte
+/// count plus the provider's echoed ack document, which the managers
+/// scan (count + id spot-checks) before trusting the submit.
+#[derive(Debug, Clone)]
+pub struct SubmitReceipt {
+    /// Byte count the provider accepted — identical to what
+    /// [`ProviderEndpoint::submit`] returns, so the framed-length
+    /// accounting asserts are unchanged.
+    pub bytes: usize,
+    /// Raw ack JSON ([`provider_ack`] of the accepted payload).
+    pub ack: String,
 }
 
 // ---------------------------------------------------------------------------
@@ -521,6 +601,17 @@ impl ProviderEndpoint {
                 }
             }
         }
+    }
+
+    /// [`Self::submit`] plus the provider's echoed ack (ISSUE 10):
+    /// the accepted payload is lazily re-scanned into a deterministic
+    /// [`provider_ack`] document for the manager to verify. Ack
+    /// construction consumes no PRNG draws and happens only after a
+    /// successful submit, so retry/backoff behavior and the healthy
+    /// path's byte/draw identity are untouched.
+    pub fn submit_acked(&mut self, payload: &[u8]) -> Result<SubmitReceipt, SubmitError> {
+        let bytes = self.submit(payload)?;
+        Ok(SubmitReceipt { bytes, ack: provider_ack(payload) })
     }
 
     /// Fault checks for one attempt, in fixed order: outage, throttle,
@@ -1119,6 +1210,68 @@ mod tests {
     fn submit_bulk_reports_accepted_bytes() {
         assert_eq!(submit_bulk(b"[]"), 2);
         assert_eq!(submit_bulk(&[]), 0);
+    }
+
+    #[test]
+    fn provider_ack_echoes_count_bytes_and_ids() {
+        let payload = br#"[{"uid":"task.000001","cpu":1},{"uid":"task.000007","cpu":2}]"#;
+        let ack = provider_ack(payload);
+        let s = JsonScanner::new(ack.as_bytes());
+        assert!(s.validate().is_ok(), "ack must itself be valid JSON: {ack}");
+        assert_eq!(s.path_str(&["ack"]), Some("hydra/v1"));
+        assert_eq!(s.path_u64(&["count"]), Some(2));
+        assert_eq!(s.path_u64(&["bytes"]), Some(payload.len() as u64));
+        assert_eq!(s.path_str(&["first_id"]), Some("task.000001"));
+        assert_eq!(s.path_str(&["last_id"]), Some("task.000007"));
+    }
+
+    #[test]
+    fn provider_ack_handles_numeric_and_nested_ids() {
+        // FaaS invocation items carry payload.hydra_task_id; pod
+        // manifests carry metadata.labels."hydra/pod-id".
+        let faas = br#"[{"function":"f","payload":{"hydra_task_id":9}}]"#;
+        let s_ack = provider_ack(faas);
+        let s = JsonScanner::new(s_ack.as_bytes());
+        assert_eq!(s.path_u64(&["first_id"]), Some(9));
+        assert_eq!(s.path_u64(&["last_id"]), Some(9));
+        let pod = br#"[{"metadata":{"name":"hydra-pod-00000003","labels":{"app":"hydra","hydra/pod-id":3}}}]"#;
+        let p_ack = provider_ack(pod);
+        let p = JsonScanner::new(p_ack.as_bytes());
+        assert_eq!(p.path_u64(&["first_id"]), Some(3));
+    }
+
+    #[test]
+    fn provider_ack_empty_and_unknown_payloads() {
+        let ack = provider_ack(b"[]");
+        let s = JsonScanner::new(ack.as_bytes());
+        assert_eq!(s.path_u64(&["count"]), Some(0));
+        assert_eq!(s.path_u64(&["bytes"]), Some(2));
+        assert_eq!(s.path_raw(&["first_id"]), Some(&b"null"[..]));
+        // Items without a known id field ack with null ids but still count.
+        let ack = provider_ack(b"[1,2,3]");
+        let s = JsonScanner::new(ack.as_bytes());
+        assert_eq!(s.path_u64(&["count"]), Some(3));
+        assert_eq!(s.path_raw(&["last_id"]), Some(&b"null"[..]));
+    }
+
+    #[test]
+    fn provider_ack_is_deterministic_and_draw_free() {
+        // Same bytes in, same ack out — and an endpoint with faults off
+        // produces it without constructing a PRNG (submit_acked goes
+        // through the same healthy path as submit).
+        let payload = br#"[{"uid":"task.000002"}]"#;
+        assert_eq!(provider_ack(payload), provider_ack(payload));
+        let mut ep = ProviderEndpoint::new(
+            ProviderFaultSpec::none(),
+            RetryPolicy::default(),
+            CircuitBreaker::default(),
+            1234,
+        );
+        let receipt = ep.submit_acked(payload).unwrap();
+        assert_eq!(receipt.bytes, payload.len());
+        assert_eq!(receipt.ack, provider_ack(payload));
+        assert_eq!(ep.submit_retries(), 0);
+        assert_eq!(ep.backoff_s(), 0.0); // hydra-lint: allow(float-eq) — exact zero sentinel
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
 use crate::sim::faas::{FaasSim, FaasSpec, Invocation};
 use crate::util::json::Json;
+use crate::util::json_scan::JsonScanner;
 use crate::util::Stopwatch;
 use std::borrow::Borrow;
 
@@ -152,8 +153,12 @@ impl FaasManager {
             self.breaker.clone(),
             self.seed,
         );
-        let bulk_bytes = endpoint.submit(&bulk)?;
+        let receipt = endpoint.submit_acked(&bulk)?;
+        let bulk_bytes = receipt.bytes;
         assert_eq!(bulk_bytes, expected_bulk, "bulk framing lost bytes");
+        // -- ingest: verify the provider's ack round-trip (ISSUE 10) ------
+        // Inside the submit stopwatch window, charged into OVH.
+        verify_ack(&receipt.ack, &ids)?;
         let mut sim = FaasSim::new(self.config.profile(), self.spec, self.seed);
         sim.submit(invocations);
         // Simulated backoff is charged into OVH: resilience has a cost.
@@ -197,6 +202,35 @@ impl FaasManager {
             detail: RunDetail::Faas { sim: report },
         })
     }
+}
+
+/// ISSUE 10 round-trip check: the echoed item count must equal the
+/// invocation count and the first/last id echoes (each item's
+/// `payload.hydra_task_id`) must match the framed task ids. Lazily
+/// scanned; a disagreement is terminal (see `ManagerError::AckMismatch`).
+fn verify_ack(ack: &str, ids: &[TaskId]) -> Result<(), ManagerError> {
+    let scan = JsonScanner::new(ack.as_bytes());
+    let count = scan.path_u64(&["count"]);
+    if count != Some(ids.len() as u64) {
+        return Err(ManagerError::AckMismatch {
+            message: format!("framed {} invocations, provider acked {count:?}", ids.len()),
+        });
+    }
+    let (Some(first), Some(last)) = (ids.first(), ids.last()) else {
+        return Ok(());
+    };
+    let checks = [
+        ("first", first.0, scan.path_u64(&["first_id"])),
+        ("last", last.0, scan.path_u64(&["last_id"])),
+    ];
+    for (which, want, got) in checks {
+        if got != Some(want) {
+            return Err(ManagerError::AckMismatch {
+                message: format!("{which} task id {want} not echoed, got {got:?}"),
+            });
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -312,6 +346,22 @@ mod tests {
         for (id, _) in &tasks {
             assert_eq!(reg.state_of(*id), Some(TaskState::Partitioned));
         }
+    }
+
+    #[test]
+    fn faas_ack_verification_flags_mismatches() {
+        let ids = [TaskId(5), TaskId(6), TaskId(9)];
+        assert!(verify_ack(r#"{"count":3,"bytes":1,"first_id":5,"last_id":9}"#, &ids).is_ok());
+        for bad in [
+            r#"{"count":2,"bytes":1,"first_id":5,"last_id":9}"#,
+            r#"{"count":3,"bytes":1,"first_id":4,"last_id":9}"#,
+            r#"{"count":3,"bytes":1,"first_id":5,"last_id":null}"#,
+        ] {
+            let e = verify_ack(bad, &ids).unwrap_err();
+            assert!(matches!(e, ManagerError::AckMismatch { .. }), "{bad}");
+            assert!(!e.retryable());
+        }
+        assert!(verify_ack(r#"{"count":0,"bytes":2}"#, &[]).is_ok());
     }
 
     #[test]

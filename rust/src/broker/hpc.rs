@@ -46,6 +46,7 @@ use crate::broker::state::TaskRegistry;
 use crate::metrics::{Overhead, RunMetrics};
 use crate::sim::hpc::{HpcTaskSpec, MultiPilotSim};
 use crate::util::json::Json;
+use crate::util::json_scan::JsonScanner;
 use crate::util::Stopwatch;
 use std::borrow::Borrow;
 
@@ -204,9 +205,18 @@ impl HpcManager {
         );
         let mut expected_bulk = 0usize;
         let mut bulk_bytes = 0usize;
-        for shards in &per_pilot {
+        for (shards, &(lo, hi)) in per_pilot.iter().zip(&chunks) {
             expected_bulk += expected_framed_len(shards);
-            bulk_bytes += endpoint.submit(&frame_bulk(shards, self.serialize))?;
+            let receipt = endpoint.submit_acked(&frame_bulk(shards, self.serialize))?;
+            bulk_bytes += receipt.bytes;
+            // -- ingest: verify the provider's ack per chunk (ISSUE 10) --
+            // Inside the submit stopwatch window, charged into OVH.
+            verify_ack(
+                &receipt.ack,
+                hi - lo,
+                tasks.get(lo).map(|(id, _)| *id),
+                hi.checked_sub(1).and_then(|j| tasks.get(j)).map(|(id, _)| *id),
+            )?;
         }
         assert_eq!(bulk_bytes, expected_bulk, "bulk framing lost bytes");
         let mut sim =
@@ -228,16 +238,25 @@ impl HpcManager {
         let mut retry_bulk_bytes = 0usize;
         let mut retried = 0usize;
         for wave in &report.retry_waves {
-            let mut doc = Vec::with_capacity(2 + wave.tasks.len() * 64);
-            doc.push(b'[');
+            let mut doc = String::with_capacity(2 + wave.tasks.len() * 64);
+            doc.push('[');
             for (k, &idx) in wave.tasks.iter().enumerate() {
                 if k > 0 {
-                    doc.push(b',');
+                    doc.push(',');
                 }
                 task_dict(tasks[idx].0, tasks[idx].1.borrow(), &specs[idx]).write_into(&mut doc);
             }
-            doc.push(b']');
-            retry_bulk_bytes += endpoint.submit(&doc)?;
+            doc.push(']');
+            // Retry waves ride the same acked transport as the initial
+            // submission: count + uid spot-checks per wave payload.
+            let receipt = endpoint.submit_acked(doc.as_bytes())?;
+            retry_bulk_bytes += receipt.bytes;
+            verify_ack(
+                &receipt.ack,
+                wave.tasks.len(),
+                wave.tasks.first().map(|&idx| tasks[idx].0),
+                wave.tasks.last().map(|&idx| tasks[idx].0),
+            )?;
             retried += wave.tasks.len();
         }
 
@@ -325,6 +344,43 @@ impl HpcManager {
     }
 }
 
+/// Verify a provider ack against what this manager framed (ISSUE 10).
+///
+/// The endpoint echoes `{"ack":"hydra/v1","count":..,"first_id":..,
+/// "last_id":..}` per accepted payload; the HPC task dicts carry their id
+/// as the `uid` *string* (`task.%06d`), so the spot-check compares the
+/// echoed strings against the expected [`TaskId`] renderings. A mismatch
+/// is payload corruption on an already-accepted submission — terminal,
+/// never retryable (resubmitting would duplicate work).
+fn verify_ack(
+    ack: &str,
+    expect: usize,
+    first: Option<TaskId>,
+    last: Option<TaskId>,
+) -> Result<(), ManagerError> {
+    let scan = JsonScanner::new(ack.as_bytes());
+    let count = scan.path_u64(&["count"]);
+    if count != Some(expect as u64) {
+        return Err(ManagerError::AckMismatch {
+            message: format!("framed {expect} task dicts, provider acked {count:?}"),
+        });
+    }
+    let checks = [
+        ("first", first, scan.path_str(&["first_id"])),
+        ("last", last, scan.path_str(&["last_id"])),
+    ];
+    for (which, want, got) in checks {
+        let Some(want) = want else { continue };
+        let want = format!("{want}");
+        if got != Some(want.as_str()) {
+            return Err(ManagerError::AckMismatch {
+                message: format!("{which} task uid {want:?} not echoed, got {got:?}"),
+            });
+        }
+    }
+    Ok(())
+}
+
 /// RADICAL-Pilot-style task description document.
 fn task_dict(id: TaskId, t: &TaskDescription, spec: &HpcTaskSpec) -> Json {
     let exe = match &t.kind {
@@ -383,6 +439,30 @@ mod tests {
         assert!(r.bytes_serialized > 200 * 50);
         assert!(r.bulk_bytes > r.bytes_serialized, "framed envelope bytes missing");
         assert!(reg.all_final());
+    }
+
+    #[test]
+    fn hpc_ack_verification_flags_mismatches() {
+        let first = Some(TaskId(0));
+        let last = Some(TaskId(2));
+        // A faithful ack passes: HPC ids are echoed as `uid` strings.
+        let good =
+            r#"{"ack":"hydra/v1","count":3,"bytes":10,"first_id":"task.000000","last_id":"task.000002"}"#;
+        assert!(verify_ack(good, 3, first, last).is_ok());
+        // Count, first-uid and last-uid disagreements are each terminal.
+        for bad in [
+            r#"{"ack":"hydra/v1","count":2,"bytes":10,"first_id":"task.000000","last_id":"task.000002"}"#,
+            r#"{"ack":"hydra/v1","count":3,"bytes":10,"first_id":"task.000007","last_id":"task.000002"}"#,
+            r#"{"ack":"hydra/v1","count":3,"bytes":10,"first_id":"task.000000","last_id":null}"#,
+        ] {
+            let e = verify_ack(bad, 3, first, last).unwrap_err();
+            assert!(matches!(e, ManagerError::AckMismatch { .. }), "{bad}");
+            assert!(!e.retryable(), "ack mismatch must never be re-brokered");
+        }
+        // Empty chunk (`pilot_chunks(0, _)` yields one `[]` payload):
+        // count 0, no uid spot-checks.
+        let empty = r#"{"ack":"hydra/v1","count":0,"bytes":2,"first_id":null,"last_id":null}"#;
+        assert!(verify_ack(empty, 0, None, None).is_ok());
     }
 
     #[test]

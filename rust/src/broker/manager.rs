@@ -65,6 +65,17 @@ pub enum ManagerError {
     /// failure for the broker: provider-local faults can be re-brokered
     /// to a surviving provider, the rest are terminal.
     Submit { message: String, retryable: bool, attempts: u32, backoff_ms: u64 },
+    /// The provider's ack for an accepted bulk payload failed the
+    /// manager's round-trip verification (ISSUE 10): the echoed item
+    /// count or a first/last id spot-check disagrees with what was
+    /// framed. **Never retryable** — the provider *accepted* the bytes,
+    /// so resubmitting the same payload (here or on another provider)
+    /// would only duplicate work; the mismatch signals payload
+    /// corruption, which must surface, not be papered over.
+    AckMismatch {
+        /// What disagreed (expected vs echoed).
+        message: String,
+    },
 }
 
 impl std::fmt::Display for ManagerError {
@@ -77,6 +88,9 @@ impl std::fmt::Display for ManagerError {
             ManagerError::Submit { message, retryable, .. } => {
                 let class = if *retryable { "retryable" } else { "terminal" };
                 write!(f, "submit failed ({class}): {message}")
+            }
+            ManagerError::AckMismatch { message } => {
+                write!(f, "provider ack mismatch (terminal): {message}")
             }
         }
     }

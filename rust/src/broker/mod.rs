@@ -60,6 +60,31 @@
 //!   `ManagerRun::faults` (`submit_retries` / `backoff_ms` /
 //!   `circuit_opens` / `failed_over`).
 //!
+//! # Ingest layer: provider acks (ISSUE 10)
+//!
+//! The transport is no longer write-only. Every accepted bulk payload is
+//! answered by a deterministic **ack** —
+//! `{"ack":"hydra/v1","count":N,"bytes":B,"first_id":…,"last_id":…}` — a
+//! pure function of the accepted payload bytes
+//! ([`data::provider_ack`], no PRNG, no clock, so the healthy path stays
+//! byte- and draw-identical to the pre-ack broker), returned alongside
+//! the byte count by [`ProviderEndpoint::submit_acked`]. Each manager
+//! scans the ack with the zero-alloc lazy scanner
+//! (`util::json_scan::JsonScanner` — single pass, no recursion, no tree
+//! materialized) and verifies it against what it framed: item count plus
+//! first/last id spot-checks (`hydra/pod-id` labels for CaaS,
+//! `payload.hydra_task_id` for FaaS, `uid` strings for HPC, including
+//! retry waves). The scan runs inside the submit stopwatch window, so
+//! verification cost is charged into OVH like every other broker-side
+//! cost. A disagreement means an already-accepted payload was corrupted
+//! in flight: [`ManagerError::AckMismatch`], **never retryable** —
+//! resubmitting accepted work would duplicate it; failover/re-brokering
+//! policy is the caller's call. The tree parser (`util::json::parse`)
+//! and the scanner are locked together by `tests/json_equivalence.rs`
+//! (differential accept/reject + extraction properties), so the ingest
+//! path can never drift from the document model the rest of the crate
+//! writes and parses.
+//!
 //! # Determinism invariants
 //!
 //! Every headline claim in this repo — byte-identical reference paths
@@ -106,7 +131,9 @@ use crate::api::resource::ResourceRequest;
 use crate::api::task::TaskDescription;
 use crate::api::ProviderConfig;
 use crate::sim::provider::ProviderId;
-pub use data::{ProviderEndpoint, ProviderFaultSpec, RetryPolicy, SerializeOptions};
+pub use data::{
+    ProviderEndpoint, ProviderFaultSpec, RetryPolicy, SerializeOptions, SubmitReceipt,
+};
 pub use manager::{
     ManagerError, ManagerFactory, ManagerReport, ManagerRun, RunDetail, ServiceManager,
 };

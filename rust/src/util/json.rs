@@ -16,6 +16,16 @@
 
 use std::fmt;
 
+/// Hard cap on container nesting, shared by this recursive-descent tree
+/// parser and the non-recursive [`crate::util::json_scan::JsonScanner`].
+/// The tree parser recurses once per container level, so the cap is what
+/// turns a hostile deep-nest document into a [`ParseError`] instead of a
+/// stack overflow; the scanner sizes its explicit state stack from the
+/// same constant so the two paths accept exactly the same documents
+/// (locked by `tests/json_equivalence.rs`). 128 comfortably covers every
+/// manifest this repo produces (pod manifests nest 6 deep).
+pub const MAX_DEPTH: usize = 128;
+
 /// A JSON document.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -198,6 +208,16 @@ fn indent(out: &mut String, depth: usize) {
 }
 
 fn write_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Infinity literals (RFC 8259 §6): letting the
+        // fmt machinery emit `NaN`/`inf` here would produce a document
+        // no parser (including ours) accepts. Non-finite values
+        // serialize as `null` — lossy but valid, and the writer's
+        // output is guaranteed to re-parse (see
+        // `writer_output_always_reparses`).
+        out.push_str("null");
+        return;
+    }
     // hydra-lint: allow(float-eq) — exact integrality test, not a tolerance compare
     if n.fract() == 0.0 && n.abs() < 9.0e15 {
         // Integral values print without the trailing ".0" — Kubernetes
@@ -363,7 +383,7 @@ impl std::error::Error for ParseError {}
 
 /// Parse a JSON document. Rejects trailing garbage.
 pub fn parse(input: &str) -> Result<Json, ParseError> {
-    let mut p = Parser { b: input.as_bytes(), i: 0 };
+    let mut p = Parser { b: input.as_bytes(), i: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -376,6 +396,9 @@ pub fn parse(input: &str) -> Result<Json, ParseError> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current container nesting level; `value()` recurses once per
+    /// level, so [`MAX_DEPTH`] bounds the call stack.
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -425,12 +448,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Enter one container level; errors past [`MAX_DEPTH`] so hostile
+    /// deep-nest input is a [`ParseError`], never a stack overflow.
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("maximum nesting depth exceeded"));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, ParseError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -446,6 +481,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -455,10 +491,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, ParseError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -469,6 +507,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(a));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -498,17 +537,45 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 5 > self.b.len() {
-                                return Err(self.err("bad \\u escape"));
+                            let code = self.hex4(self.i + 1)?;
+                            if (0xD800..=0xDBFF).contains(&code) {
+                                // High surrogate: pair it with an
+                                // immediately following \uDC00..\uDFFF
+                                // escape (RFC 8259 §7 — "characters ...
+                                // represented as a twelve-character
+                                // sequence, encoding the UTF-16
+                                // surrogate pair"). A *lone* surrogate
+                                // (no or wrong partner) is still
+                                // accepted but decodes to U+FFFD
+                                // REPLACEMENT CHARACTER; the scanner's
+                                // validate path accepts the same inputs
+                                // (tests/json_equivalence.rs).
+                                let lo = if self.b.get(self.i + 5) == Some(&b'\\')
+                                    && self.b.get(self.i + 6) == Some(&b'u')
+                                {
+                                    self.hex4(self.i + 7).ok()
+                                } else {
+                                    None
+                                };
+                                match lo {
+                                    Some(lo) if (0xDC00..=0xDFFF).contains(&lo) => {
+                                        let c = 0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
+                                        s.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                                        self.i += 10;
+                                    }
+                                    _ => {
+                                        s.push('\u{FFFD}');
+                                        self.i += 4;
+                                    }
+                                }
+                            } else if (0xDC00..=0xDFFF).contains(&code) {
+                                // Lone low surrogate.
+                                s.push('\u{FFFD}');
+                                self.i += 4;
+                            } else {
+                                s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                                self.i += 4;
                             }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            let code = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs are not needed for our manifests;
-                            // map lone surrogates to the replacement char.
-                            s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
-                            self.i += 4;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -526,16 +593,53 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Four hex digits starting at byte `at` (strict: `[0-9a-fA-F]`
+    /// only — `u32::from_str_radix`'s leading-`+` laxity is rejected).
+    fn hex4(&self, at: usize) -> Result<u32, ParseError> {
+        if at + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let mut code = 0u32;
+        for &c in &self.b[at..at + 4] {
+            let d = match c {
+                b'0'..=b'9' => (c - b'0') as u32,
+                b'a'..=b'f' => (c - b'a' + 10) as u32,
+                b'A'..=b'F' => (c - b'A' + 10) as u32,
+                _ => return Err(self.err("bad \\u escape")),
+            };
+            code = code * 16 + d;
+        }
+        Ok(code)
+    }
+
+    /// RFC 8259 §6-strict number grammar: `-?(0|[1-9][0-9]*)(\.[0-9]+)?`
+    /// `([eE][+-]?[0-9]+)?`. Rust's `f64::from_str` is laxer (`1.`,
+    /// `01`, `-` prefixes of garbage), so the grammar is enforced here
+    /// before the final parse; the scanner's validate path implements
+    /// the same rules (shared vectors in `util::json_scan`).
     fn number(&mut self) -> Result<Json, ParseError> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.i += 1;
+        match self.peek() {
+            // A leading zero is only itself: `01` stops here and the
+            // stray digit fails as trailing/separator garbage.
+            Some(b'0') => self.i += 1,
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.i += 1;
+                }
+            }
+            // Bare `-` (or `-x`).
+            _ => return Err(self.err("invalid number")),
         }
         if self.peek() == Some(b'.') {
             self.i += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                // `1.` — the fraction requires at least one digit.
+                return Err(self.err("invalid number"));
+            }
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.i += 1;
             }
@@ -544,6 +648,10 @@ impl<'a> Parser<'a> {
             self.i += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.i += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                // `1e`, `1e+` — the exponent requires at least one digit.
+                return Err(self.err("invalid number"));
             }
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.i += 1;
@@ -706,5 +814,81 @@ mod tests {
         }
         let s = v.to_string_compact();
         assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    /// ISSUE 10 regression: pre-PR the parser recursed without a depth
+    /// limit, so a hostile deep-nest document overflowed the stack (and
+    /// this test's `is_err()` assertion fails against that code, which
+    /// happily parses any depth it survives). The cap boundary is exact:
+    /// MAX_DEPTH parses, MAX_DEPTH + 1 is a ParseError.
+    #[test]
+    fn deep_nesting_beyond_cap_is_parse_error_not_overflow() {
+        let nest = |depth: usize| {
+            let mut s = String::new();
+            for _ in 0..depth {
+                s.push('[');
+            }
+            s.push('1');
+            for _ in 0..depth {
+                s.push(']');
+            }
+            s
+        };
+        assert!(parse(&nest(MAX_DEPTH)).is_ok(), "cap boundary must parse");
+        let e = parse(&nest(MAX_DEPTH + 1)).unwrap_err();
+        assert!(e.message.contains("depth"), "got: {e}");
+        // Objects count against the same cap.
+        let mut s = String::new();
+        for _ in 0..=MAX_DEPTH {
+            s.push_str("{\"k\":");
+        }
+        assert!(parse(&s).is_err());
+    }
+
+    /// ISSUE 10 regression: pre-PR `😀` decoded as two U+FFFD
+    /// replacement chars instead of 😀.
+    #[test]
+    fn surrogate_pair_escape_decodes_astral_char() {
+        assert_eq!(parse(r#""😀""#).unwrap(), Json::Str("😀".to_string()));
+        assert_eq!(parse(r#""😀!""#).unwrap(), Json::Str("😀!".to_string()));
+        // Lone surrogates (high without low, low without high, high
+        // followed by a non-surrogate escape) stay U+FFFD — accepted,
+        // not an error.
+        assert_eq!(parse(r#""\ud83d""#).unwrap(), Json::Str("\u{FFFD}".to_string()));
+        assert_eq!(parse(r#""\ude00x""#).unwrap(), Json::Str("\u{FFFD}x".to_string()));
+        assert_eq!(parse(r#""\ud83dA""#).unwrap(), Json::Str("\u{FFFD}A".to_string()));
+        // A decoded pair round-trips through the writer (raw UTF-8, no
+        // escape needed on the way back out).
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(parse(&v.to_string_compact()).unwrap(), v);
+    }
+
+    /// ISSUE 10 regression: pre-PR the number grammar deferred to
+    /// `f64::from_str`, which accepts non-RFC-8259 forms like `1.` and
+    /// leading zeros. Vectors shared with the scanner's validate suite.
+    #[test]
+    fn strict_numbers_reject_nonconforming() {
+        use crate::util::json_scan::{NUMBER_ACCEPT, NUMBER_REJECT};
+        for txt in NUMBER_ACCEPT {
+            assert!(parse(txt).is_ok(), "tree parser must accept {txt:?}");
+        }
+        for txt in NUMBER_REJECT {
+            assert!(parse(txt).is_err(), "tree parser must reject {txt:?}");
+        }
+    }
+
+    /// ISSUE 10 regression: pre-PR `write_num` pushed NaN/inf through
+    /// the fmt machinery, emitting invalid JSON that no parser accepts.
+    #[test]
+    fn nonfinite_floats_serialize_as_null() {
+        for n in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(n).to_string_compact(), "null");
+        }
+        let doc = Json::obj().set("rate", f64::NAN).set("cap", f64::INFINITY).set("ok", 1.5);
+        let s = doc.to_string_compact();
+        let back = parse(&s).expect("writer output must re-parse");
+        assert!(back.get("rate").unwrap().is_null());
+        assert!(back.get("cap").unwrap().is_null());
+        assert_eq!(back.get("ok").unwrap().as_f64(), Some(1.5));
     }
 }

@@ -1,0 +1,629 @@
+//! Zero-alloc streaming JSON scanner — the broker's ingest path
+//! (ISSUE 10, ROADMAP item 5).
+//!
+//! [`JsonScanner`] is the read-side complement to the tree model in
+//! [`util::json`](crate::util::json): a **single-pass, non-recursive,
+//! allocation-free** scanner over raw payload bytes. The design follows
+//! the two references in SNIPPETS.md:
+//!
+//! * *miniserde's lazy path scan* — extract one dotted path from a
+//!   document without building a tree (measured ~33× over tree-parse
+//!   for partial extraction); here [`JsonScanner::path_str`] /
+//!   [`JsonScanner::path_u64`] / [`JsonScanner::path_f64`] return
+//!   borrowed slices straight out of the input buffer.
+//! * *core-json's fixed-depth state stack* — [`Cursor::skip_value`]
+//!   replaces recursion with an explicit one-byte-per-level container
+//!   stack sized by [`MAX_DEPTH`], so scanning cost is bounded and a
+//!   hostile deep-nest payload is a [`ScanError`], never a stack
+//!   overflow.
+//!
+//! The scanner and the tree parser accept exactly the same documents
+//! (same [`MAX_DEPTH`], same RFC 8259-strict number grammar — shared
+//! vectors [`NUMBER_ACCEPT`] / [`NUMBER_REJECT`] — same escape rules);
+//! the agreement is locked by the differential suite in
+//! `tests/json_equivalence.rs`, which also greps this file to enforce
+//! the no-allocation rule in the non-test code below.
+//!
+//! Caveats, by design:
+//!
+//! * Input is assumed UTF-8 (payloads are produced by our own writers);
+//!   raw non-escape string bytes are passed through unvalidated.
+//! * Path segments match the *raw* key bytes between the quotes, so a
+//!   key containing escapes only matches a segment spelled the same
+//!   way. Manifest keys never contain escapes.
+//! * [`JsonScanner::path_str`] only borrows when the string value has
+//!   no escapes; an escaped value returns `None` (decode it through the
+//!   tree parser if you actually need it — no manifest field does).
+
+use super::json::MAX_DEPTH;
+use std::fmt;
+
+/// What went wrong during a scan. Fieldless so errors cost nothing to
+/// construct — the scanner never allocates, success or failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanErrorKind {
+    /// Input ended inside a value.
+    UnexpectedEof,
+    /// A byte that cannot start or continue a value at this position.
+    UnexpectedChar,
+    /// Container nesting exceeded [`MAX_DEPTH`].
+    DepthExceeded,
+    /// Malformed `\` escape or `\u` hex sequence.
+    BadEscape,
+    /// Number violating the RFC 8259 §6 grammar.
+    BadNumber,
+    /// Valid document followed by non-whitespace bytes.
+    TrailingChars,
+    /// Object member missing its `:`.
+    ExpectedColon,
+    /// Missing `,` / closing bracket after a value.
+    ExpectedCommaOrClose,
+    /// Object member key is not a string.
+    ExpectedKey,
+}
+
+impl ScanErrorKind {
+    fn msg(self) -> &'static str {
+        match self {
+            ScanErrorKind::UnexpectedEof => "unexpected end of input",
+            ScanErrorKind::UnexpectedChar => "unexpected character",
+            ScanErrorKind::DepthExceeded => "maximum nesting depth exceeded",
+            ScanErrorKind::BadEscape => "bad escape",
+            ScanErrorKind::BadNumber => "invalid number",
+            ScanErrorKind::TrailingChars => "trailing characters",
+            ScanErrorKind::ExpectedColon => "expected ':'",
+            ScanErrorKind::ExpectedCommaOrClose => "expected ',' or closing bracket",
+            ScanErrorKind::ExpectedKey => "expected string key",
+        }
+    }
+}
+
+/// Scan error with the byte offset it was detected at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScanError {
+    /// Byte offset into the scanned buffer.
+    pub offset: usize,
+    /// Failure classification.
+    pub kind: ScanErrorKind,
+}
+
+impl fmt::Display for ScanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json scan error at byte {}: {}", self.offset, self.kind.msg())
+    }
+}
+
+impl std::error::Error for ScanError {}
+
+/// RFC 8259 §6-conforming number literals, shared with the tree-parser
+/// suite (`util::json`): both implementations must accept every entry.
+pub const NUMBER_ACCEPT: &[&str] = &[
+    "0", "-0", "7", "120", "-42", "1.5", "0.25", "-0.5", "1e9", "1E9", "1e+9", "2.5e-3",
+    "-1.25E+2", "9007199254740991",
+];
+
+/// Number literals Rust's lax `f64::from_str` tolerates (or scalar
+/// near-misses) that RFC 8259 rejects — both implementations must
+/// reject every entry (pre-ISSUE-10 the tree parser accepted the first
+/// three).
+pub const NUMBER_REJECT: &[&str] = &[
+    "1.", "01", "-", "+1", ".5", "-.5", "1e", "1e+", "1.e3", "00", "0x1", "1.2.3", "--1", "1..2",
+];
+
+/// Single-pass, non-recursive, zero-alloc scanner over a JSON payload.
+///
+/// Construction is free (it only borrows the buffer); every method
+/// starts its own pass, so the scanner itself is immutable and cheap to
+/// share. See the module docs for the design and its caveats.
+#[derive(Debug, Clone, Copy)]
+pub struct JsonScanner<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> JsonScanner<'a> {
+    /// Borrow `payload` for scanning.
+    pub fn new(payload: &'a [u8]) -> JsonScanner<'a> {
+        JsonScanner { b: payload }
+    }
+
+    /// Full-document syntax check: exactly one value, strict numbers and
+    /// escapes, hard [`MAX_DEPTH`] cap, no trailing bytes. Accepts the
+    /// same documents as `util::json::parse` (differentially tested).
+    pub fn validate(&self) -> Result<(), ScanError> {
+        let mut c = Cursor { b: self.b, i: 0 };
+        c.skip_ws();
+        c.skip_value()?;
+        c.skip_ws();
+        if c.i != c.b.len() {
+            return Err(c.fail(ScanErrorKind::TrailingChars));
+        }
+        Ok(())
+    }
+
+    /// Raw serialized bytes of the value at `path` (objects navigated by
+    /// key, no array indexing), without building a tree. `None` when the
+    /// path is absent or the document is malformed along the walk.
+    pub fn path_raw(&self, path: &[&str]) -> Option<&'a [u8]> {
+        let (s, e) = self.path_span(path)?;
+        Some(&self.b[s..e])
+    }
+
+    /// Borrowed `&str` of the string value at `path`. `None` unless the
+    /// value is a string with no escapes (see module docs).
+    pub fn path_str(&self, path: &[&str]) -> Option<&'a str> {
+        let (s, e) = self.path_span(path)?;
+        if e < s + 2 || self.b[s] != b'"' {
+            return None;
+        }
+        let inner = &self.b[s + 1..e - 1];
+        if inner.contains(&b'\\') {
+            return None;
+        }
+        std::str::from_utf8(inner).ok()
+    }
+
+    /// The unsigned integer at `path`. `None` for anything but a plain
+    /// integer token in range (no sign, fraction, or exponent).
+    pub fn path_u64(&self, path: &[&str]) -> Option<u64> {
+        let (s, e) = self.path_span(path)?;
+        let txt = std::str::from_utf8(&self.b[s..e]).ok()?;
+        txt.parse::<u64>().ok()
+    }
+
+    /// The number at `path` as f64. `None` for non-number values.
+    pub fn path_f64(&self, path: &[&str]) -> Option<f64> {
+        let (s, e) = self.path_span(path)?;
+        if !matches!(self.b[s], b'-' | b'0'..=b'9') {
+            return None;
+        }
+        let txt = std::str::from_utf8(&self.b[s..e]).ok()?;
+        txt.parse::<f64>().ok()
+    }
+
+    /// Iterate the items of a top-level array — the framed bulk payload
+    /// shape `[m0,m1,...]` — yielding each item's byte span without
+    /// materializing anything. The iterator is fused: the first error
+    /// (malformed item, missing separator, trailing bytes) ends it.
+    pub fn items(&self) -> Items<'a> {
+        Items { c: Cursor { b: self.b, i: 0 }, state: ItemsState::Start }
+    }
+
+    fn path_span(&self, path: &[&str]) -> Option<(usize, usize)> {
+        let mut c = Cursor { b: self.b, i: 0 };
+        c.skip_ws();
+        for seg in path {
+            // The current value must be an object containing `seg`.
+            if c.peek() != Some(b'{') {
+                return None;
+            }
+            c.i += 1;
+            loop {
+                c.skip_ws();
+                if c.peek() != Some(b'"') {
+                    return None;
+                }
+                let ks = c.i + 1;
+                c.skip_string().ok()?;
+                let ke = c.i - 1;
+                c.skip_ws();
+                if c.peek() != Some(b':') {
+                    return None;
+                }
+                c.i += 1;
+                c.skip_ws();
+                if &c.b[ks..ke] == seg.as_bytes() {
+                    break; // cursor now at the member's value
+                }
+                c.skip_value().ok()?;
+                c.skip_ws();
+                match c.peek() {
+                    Some(b',') => c.i += 1,
+                    // '}' (key absent) or garbage: either way, no match.
+                    _ => return None,
+                }
+            }
+        }
+        let start = c.i;
+        c.skip_value().ok()?;
+        Some((start, c.i))
+    }
+}
+
+/// Iterator over top-level array item spans; see [`JsonScanner::items`].
+#[derive(Debug)]
+pub struct Items<'a> {
+    c: Cursor<'a>,
+    state: ItemsState,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ItemsState {
+    Start,
+    Mid,
+    Done,
+}
+
+impl<'a> Items<'a> {
+    fn yield_item(&mut self) -> Option<Result<(usize, usize), ScanError>> {
+        self.c.skip_ws();
+        let start = self.c.i;
+        match self.c.skip_value() {
+            Ok(()) => Some(Ok((start, self.c.i))),
+            Err(e) => {
+                self.state = ItemsState::Done;
+                Some(Err(e))
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Option<Result<(usize, usize), ScanError>> {
+        self.state = ItemsState::Done;
+        self.c.skip_ws();
+        if self.c.i != self.c.b.len() {
+            return Some(Err(self.c.fail(ScanErrorKind::TrailingChars)));
+        }
+        None
+    }
+}
+
+impl<'a> Iterator for Items<'a> {
+    type Item = Result<(usize, usize), ScanError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.state {
+            ItemsState::Done => None,
+            ItemsState::Start => {
+                self.c.skip_ws();
+                if self.c.peek() != Some(b'[') {
+                    self.state = ItemsState::Done;
+                    return Some(Err(self.c.fail(ScanErrorKind::UnexpectedChar)));
+                }
+                self.c.i += 1;
+                self.c.skip_ws();
+                if self.c.peek() == Some(b']') {
+                    self.c.i += 1;
+                    return self.finish();
+                }
+                self.state = ItemsState::Mid;
+                self.yield_item()
+            }
+            ItemsState::Mid => {
+                self.c.skip_ws();
+                match self.c.peek() {
+                    Some(b',') => {
+                        self.c.i += 1;
+                        self.yield_item()
+                    }
+                    Some(b']') => {
+                        self.c.i += 1;
+                        self.finish()
+                    }
+                    _ => {
+                        self.state = ItemsState::Done;
+                        Some(Err(self.c.fail(ScanErrorKind::ExpectedCommaOrClose)))
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Byte cursor with the non-recursive skip machinery. All hot-loop code:
+/// nothing here may allocate (grep-enforced from the equivalence suite).
+#[derive(Debug)]
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn fail(&self, kind: ScanErrorKind) -> ScanError {
+        ScanError { offset: self.i, kind }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    /// Skip one complete value (any kind) starting at the cursor.
+    /// Containers are tracked on an explicit fixed-size stack — one byte
+    /// per nesting level, no recursion (core-json design).
+    fn skip_value(&mut self) -> Result<(), ScanError> {
+        let mut stack = [0u8; MAX_DEPTH];
+        let mut depth: usize = 0;
+        'value: loop {
+            self.skip_ws();
+            match self.peek() {
+                None => return Err(self.fail(ScanErrorKind::UnexpectedEof)),
+                Some(open @ (b'{' | b'[')) => {
+                    if depth == MAX_DEPTH {
+                        return Err(self.fail(ScanErrorKind::DepthExceeded));
+                    }
+                    stack[depth] = open;
+                    depth += 1;
+                    self.i += 1;
+                    self.skip_ws();
+                    let close = if open == b'{' { b'}' } else { b']' };
+                    if self.peek() == Some(close) {
+                        self.i += 1;
+                        depth -= 1;
+                        // An empty container is a complete value: fall
+                        // through to the separator/close loop below.
+                    } else {
+                        if open == b'{' {
+                            self.object_key()?;
+                        }
+                        continue 'value;
+                    }
+                }
+                Some(b'"') => self.skip_string()?,
+                Some(b't') => self.skip_lit(b"true")?,
+                Some(b'f') => self.skip_lit(b"false")?,
+                Some(b'n') => self.skip_lit(b"null")?,
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.skip_number()?,
+                Some(_) => return Err(self.fail(ScanErrorKind::UnexpectedChar)),
+            }
+            // One complete value just ended. Pop closed containers and
+            // advance over separators until the next value starts (or
+            // the whole skip is done).
+            loop {
+                if depth == 0 {
+                    return Ok(());
+                }
+                self.skip_ws();
+                let in_obj = stack[depth - 1] == b'{';
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                        if in_obj {
+                            self.skip_ws();
+                            self.object_key()?;
+                        }
+                        continue 'value;
+                    }
+                    Some(b'}') if in_obj => {
+                        self.i += 1;
+                        depth -= 1;
+                    }
+                    Some(b']') if !in_obj => {
+                        self.i += 1;
+                        depth -= 1;
+                    }
+                    _ => return Err(self.fail(ScanErrorKind::ExpectedCommaOrClose)),
+                }
+            }
+        }
+    }
+
+    /// `"key":` — leaves the cursor at the first byte after the colon.
+    fn object_key(&mut self) -> Result<(), ScanError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.fail(ScanErrorKind::ExpectedKey));
+        }
+        self.skip_string()?;
+        self.skip_ws();
+        if self.peek() != Some(b':') {
+            return Err(self.fail(ScanErrorKind::ExpectedColon));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    /// Skip a string literal (cursor on the opening quote). Escapes are
+    /// validated (`\u` requires exactly four hex digits — lone
+    /// surrogates are *accepted*, matching the tree parser, which
+    /// decodes them to U+FFFD); raw bytes pass through unvalidated.
+    fn skip_string(&mut self) -> Result<(), ScanError> {
+        self.i += 1;
+        loop {
+            match self.peek() {
+                None => return Err(self.fail(ScanErrorKind::UnexpectedEof)),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f') => {
+                            self.i += 1;
+                        }
+                        Some(b'u') => {
+                            self.i += 1;
+                            for _ in 0..4 {
+                                match self.peek() {
+                                    Some(c) if c.is_ascii_hexdigit() => self.i += 1,
+                                    _ => return Err(self.fail(ScanErrorKind::BadEscape)),
+                                }
+                            }
+                        }
+                        _ => return Err(self.fail(ScanErrorKind::BadEscape)),
+                    }
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    fn skip_lit(&mut self, word: &'static [u8]) -> Result<(), ScanError> {
+        if self.b[self.i..].starts_with(word) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(self.fail(ScanErrorKind::UnexpectedChar))
+        }
+    }
+
+    /// RFC 8259 §6 number grammar — identical to the tree parser's
+    /// `Parser::number` (shared vectors lock the agreement).
+    fn skip_number(&mut self) -> Result<(), ScanError> {
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        match self.peek() {
+            Some(b'0') => self.i += 1,
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.i += 1;
+                }
+            }
+            _ => return Err(self.fail(ScanErrorKind::BadNumber)),
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.fail(ScanErrorKind::BadNumber));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.fail(ScanErrorKind::BadNumber));
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_wellformed_documents() {
+        for doc in [
+            "null",
+            "true",
+            " 42 ",
+            "\"hi\\n\\u2602\"",
+            "[]",
+            "{}",
+            "[1,2,3]",
+            r#"{"a":[1,{"b":null}],"c":"x"}"#,
+            r#"[{"uid":"task.000001"},{"uid":"task.000002"}]"#,
+        ] {
+            assert!(JsonScanner::new(doc.as_bytes()).validate().is_ok(), "{doc}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for doc in [
+            "",
+            "[",
+            "[1,]",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "{1:2}",
+            "tru",
+            "nul",
+            "{} x",
+            "\"unterminated",
+            "\"bad\\q\"",
+            "\"\\u12g4\"",
+            "[1 2]",
+        ] {
+            assert!(JsonScanner::new(doc.as_bytes()).validate().is_err(), "{doc}");
+        }
+    }
+
+    #[test]
+    fn number_vectors_shared_with_tree_parser() {
+        for txt in NUMBER_ACCEPT {
+            assert!(JsonScanner::new(txt.as_bytes()).validate().is_ok(), "accept {txt:?}");
+        }
+        for txt in NUMBER_REJECT {
+            assert!(JsonScanner::new(txt.as_bytes()).validate().is_err(), "reject {txt:?}");
+        }
+    }
+
+    #[test]
+    fn depth_cap_boundary_matches_tree_parser() {
+        let nest = |depth: usize| {
+            let mut s = String::new();
+            for _ in 0..depth {
+                s.push('[');
+            }
+            s.push('1');
+            for _ in 0..depth {
+                s.push(']');
+            }
+            s
+        };
+        assert!(JsonScanner::new(nest(MAX_DEPTH).as_bytes()).validate().is_ok());
+        let e = JsonScanner::new(nest(MAX_DEPTH + 1).as_bytes()).validate().unwrap_err();
+        assert_eq!(e.kind, ScanErrorKind::DepthExceeded);
+    }
+
+    #[test]
+    fn path_extraction_without_tree() {
+        let doc = br#"{"metadata":{"name":"hydra-pod-00000042","labels":{"app":"hydra","hydra/pod-id":42}},"spec":{"weight":2.5}}"#;
+        let s = JsonScanner::new(doc);
+        assert_eq!(s.path_str(&["metadata", "name"]), Some("hydra-pod-00000042"));
+        assert_eq!(s.path_u64(&["metadata", "labels", "hydra/pod-id"]), Some(42));
+        assert_eq!(s.path_f64(&["spec", "weight"]), Some(2.5));
+        assert_eq!(s.path_raw(&["metadata", "labels"]), Some(&br#"{"app":"hydra","hydra/pod-id":42}"#[..]));
+        // Misses and type mismatches are None, not errors.
+        assert_eq!(s.path_str(&["metadata", "missing"]), None);
+        assert_eq!(s.path_u64(&["metadata", "name"]), None);
+        assert_eq!(s.path_str(&["spec", "weight"]), None);
+        assert_eq!(s.path_f64(&["metadata"]), None);
+    }
+
+    #[test]
+    fn path_str_refuses_escaped_values() {
+        let s = JsonScanner::new(br#"{"a":"x\ny","b":"plain"}"#);
+        assert_eq!(s.path_str(&["a"]), None, "escaped value cannot be borrowed");
+        assert_eq!(s.path_str(&["b"]), Some("plain"));
+    }
+
+    #[test]
+    fn items_yield_framed_payload_spans() {
+        let payload = br#"[{"uid":"a"},{"uid":"b"},7]"#;
+        let s = JsonScanner::new(payload);
+        let spans: Vec<(usize, usize)> = s.items().map(|r| r.unwrap()).collect();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(&payload[spans[0].0..spans[0].1], br#"{"uid":"a"}"#);
+        assert_eq!(&payload[spans[1].0..spans[1].1], br#"{"uid":"b"}"#);
+        assert_eq!(&payload[spans[2].0..spans[2].1], b"7");
+    }
+
+    #[test]
+    fn items_empty_and_error_cases() {
+        assert_eq!(JsonScanner::new(b"[]").items().count(), 0);
+        assert_eq!(JsonScanner::new(b" [ ] ").items().count(), 0);
+        // Not an array at the top level.
+        assert!(JsonScanner::new(b"{}").items().next().unwrap().is_err());
+        // Malformed item ends the iterator with the error.
+        let mut it = JsonScanner::new(b"[1,,2]").items();
+        assert!(it.next().unwrap().is_ok());
+        assert!(it.next().unwrap().is_err());
+        assert!(it.next().is_none(), "iterator is fused after an error");
+        // Trailing garbage after the close is reported.
+        let mut it = JsonScanner::new(b"[1] x").items();
+        assert!(it.next().unwrap().is_ok());
+        assert!(it.next().unwrap().is_err());
+    }
+
+    #[test]
+    fn surrogate_escapes_accepted_like_tree_parser() {
+        for doc in [r#""😀""#, r#""\ud83d""#, r#""\ude00x""#] {
+            assert!(JsonScanner::new(doc.as_bytes()).validate().is_ok(), "{doc}");
+        }
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod json_scan;
 pub mod logging;
 pub mod prng;
 pub mod prop;
